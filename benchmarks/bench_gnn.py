@@ -1,0 +1,137 @@
+"""GNN-side benchmarks — one per survey table/figure analog.
+
+Each function returns (rows, derived_summary): rows are printable dicts; the
+summary is one line for the CSV contract in run.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import full_graph_train, powerlaw_graph, sbm_graph
+from repro.core.partition import PARTITIONERS
+from repro.core.protocols import PROTOCOL_COSTS
+from repro.core.sampling import (
+    FIFOCache,
+    analysis_cache,
+    csp_sample,
+    importance_cache,
+    node_wise_sample,
+    presampling_cache,
+    pull_based_sample,
+    simulate_hit_ratio,
+    skewed_weighted_sample,
+    static_degree_cache,
+)
+
+
+def bench_partition() -> Tuple[List[Dict], str]:
+    """Survey §4.2 table: partition quality (cut, balance, train balance,
+    comm volume) per partitioner, on a community graph and a power-law graph."""
+    rows = []
+    for gname, g in (("sbm", sbm_graph(400, num_blocks=8, p_in=0.06, p_out=0.003, seed=0)),
+                     ("powerlaw", powerlaw_graph(400, avg_degree=10, seed=0))):
+        for name in ("hash", "range", "ldg", "pagraph", "block", "bytegnn", "metis_like"):
+            t0 = time.perf_counter()
+            part = PARTITIONERS[name](g, 8)
+            dt = time.perf_counter() - t0
+            rows.append(dict(graph=gname, partitioner=name,
+                             cut=round(part.edge_cut_fraction(g), 4),
+                             balance=round(part.vertex_balance(), 3),
+                             train_balance=round(part.train_balance(g), 3),
+                             comm_rows=part.communication_volume(g),
+                             seconds=round(dt, 3)))
+    balanced = [r for r in rows if r["graph"] == "sbm" and r["balance"] < 1.5]
+    best = min(balanced, key=lambda r: r["cut"])
+    return rows, f"best_balanced_sbm_cut={best['partitioner']}:{best['cut']}"
+
+
+def bench_cache() -> Tuple[List[Dict], str]:
+    """Survey §5.1: hit ratio per cache policy (PaGraph/AliGraph/GNNLab/
+    SALIENT++/BGL claims) at several capacities on a power-law graph."""
+    g = powerlaw_graph(600, avg_degree=12, seed=1)
+    rng = np.random.default_rng(0)
+    train = np.where(g.train_mask)[0]
+
+    def stream(seed=0):
+        r = np.random.default_rng(seed)
+        for _ in range(30):
+            batch = r.choice(train, 16, replace=False)
+            yield node_wise_sample(g, batch, (4, 4), r).layer_vertices[0]
+
+    rows = []
+    for cap_frac in (0.05, 0.15, 0.3):
+        cap = int(cap_frac * g.num_vertices)
+        random_ids = rng.choice(g.num_vertices, cap, replace=False)
+        policies = {
+            "random": lambda: random_ids,
+            "degree(PaGraph)": lambda: static_degree_cache(g, cap),
+            "importance(AliGraph)": lambda: importance_cache(g, cap),
+            "presampling(GNNLab)": lambda: presampling_cache(g, cap),
+            "analysis(SALIENT++)": lambda: analysis_cache(g, cap),
+        }
+        for name, fn in policies.items():
+            hr = simulate_hit_ratio(fn(), stream())
+            rows.append(dict(capacity=cap, policy=name, hit_ratio=round(hr, 4)))
+        fifo = FIFOCache(cap)
+        rows.append(dict(capacity=cap, policy="fifo(BGL)",
+                         hit_ratio=round(fifo.run(stream()), 4)))
+    top = max(rows, key=lambda r: r["hit_ratio"])
+    return rows, f"best={top['policy']}@{top['capacity']}:{top['hit_ratio']}"
+
+
+def bench_distributed_sampling() -> Tuple[List[Dict], str]:
+    """Survey §5.1: DSP's CSP vs pull-based bytes; skewed-sampling locality."""
+    g = powerlaw_graph(600, avg_degree=12, seed=2)
+    part = PARTITIONERS["hash"](g, 8)
+    rng = np.random.default_rng(0)
+    targets = np.arange(256)
+    rows = []
+    _, pull = pull_based_sample(g, part, 0, targets, fanout=5, rng=rng)
+    _, push = csp_sample(g, part, 0, targets, fanout=5, rng=rng)
+    rows.append(dict(method="pull(DistDGL)", bytes=pull.total()))
+    rows.append(dict(method="csp(DSP)", bytes=push.total(),
+                     reduction=round(1 - push.total() / max(pull.total(), 1), 3)))
+    for s in (1.0, 2.0, 4.0, 8.0):
+        _, st, loc = skewed_weighted_sample(g, part, 0, targets, 5, s,
+                                            np.random.default_rng(1))
+        rows.append(dict(method=f"skewed(s={s})", bytes=st.total(),
+                         locality=round(loc, 3)))
+    return rows, f"csp_reduction={rows[1]['reduction']}"
+
+
+def bench_protocol_costs() -> Tuple[List[Dict], str]:
+    """Survey §7.1: per-protocol communication volume per layer."""
+    g = powerlaw_graph(500, avg_degree=10, seed=3)
+    part = PARTITIONERS["metis_like"](g, 8)
+    rows = []
+    for name, fn in PROTOCOL_COSTS.items():
+        c = fn(g, part, 64)
+        rows.append(dict(protocol=name, bytes_per_layer=c.bytes_per_layer,
+                         messages=c.messages_per_layer))
+    b = next(r for r in rows if r["protocol"] == "broadcast")["bytes_per_layer"]
+    p = next(r for r in rows if r["protocol"] == "p2p")["bytes_per_layer"]
+    return rows, f"p2p_vs_broadcast={p / max(b, 1):.3f}"
+
+
+def bench_staleness() -> Tuple[List[Dict], str]:
+    """Survey §7.2 / Table 3: accuracy + bytes pushed per staleness model
+    (PipeGCN/SANCUS claim: bounded staleness ~ sync accuracy, less comm)."""
+    g = sbm_graph(250, num_blocks=4, p_in=0.08, p_out=0.004, seed=4)
+    rows = []
+    sync = full_graph_train(g, epochs=50)
+    rows.append(dict(protocol="sync", test_acc=round(sync.test_acc, 4),
+                     final_loss=round(sync.losses[-1], 4), mbytes_pushed="n/a"))
+    for proto, kw in (("epoch_fixed", dict(staleness=2)),
+                      ("epoch_fixed", dict(staleness=4)),
+                      ("epoch_adaptive", dict(staleness=4)),
+                      ("variation", dict(eps_v=0.05)),
+                      ("pipegcn", dict(lr=0.3))):
+        r = full_graph_train(g, protocol=proto, epochs=50, **kw)
+        rows.append(dict(protocol=f"{proto}:{kw}", test_acc=round(r.test_acc, 4),
+                         final_loss=round(r.losses[-1], 4),
+                         mbytes_pushed=round(r.bytes_pushed / 1e6, 3)))
+    gap = max(abs(r["test_acc"] - rows[0]["test_acc"]) for r in rows[1:])
+    return rows, f"max_acc_gap_vs_sync={gap:.4f}"

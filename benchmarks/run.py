@@ -1,0 +1,68 @@
+"""Benchmark harness: one function per paper table/figure analog.
+Prints ``name,us_per_call,derived`` CSV (plus detailed rows to stderr).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run --only cache,staleness
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _detail(rows):
+    for r in rows:
+        print("   ", r, file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--skip", default="")
+    args = ap.parse_args()
+
+    from benchmarks.bench_gnn import (
+        bench_cache,
+        bench_distributed_sampling,
+        bench_partition,
+        bench_protocol_costs,
+        bench_staleness,
+    )
+    from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_spmm_comm import bench_spmm_comm
+    from benchmarks.roofline import roofline_table
+
+    benches = {
+        "partition": bench_partition,  # survey §4.2 table
+        "cache": bench_cache,  # §5.1 cache policies
+        "sampling": bench_distributed_sampling,  # §5.1 CSP / skewed
+        "protocols": bench_protocol_costs,  # §7.1 comm volume
+        "staleness": bench_staleness,  # §7.2 / Table 3
+        "spmm_comm": bench_spmm_comm,  # §6.2.2 / Table 2 (CAGNET)
+        "kernels": bench_kernels,  # Pallas kernel structural timing
+        "roofline": lambda: roofline_table("experiments/dryrun"),  # deliverable g
+    }
+    only = set(filter(None, args.only.split(",")))
+    skip = set(filter(None, args.skip.split(",")))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if (only and name not in only) or name in skip:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows, derived = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{us:.0f},{derived}")
+            print(f"== {name} ==", file=sys.stderr)
+            _detail(rows)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},FAILED,{type(e).__name__}: {str(e)[:120]}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Batched serving example: prefill a batch of prompts through serve_step and
+greedy-decode continuations with the KV cache (deliverable b, serving kind).
+
+  PYTHONPATH=src python examples/serve_llm.py --arch llama3.2-1b --batch 4
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import greedy_decode
+from repro.models import transformer as T
+from repro.utils import get_logger
+
+log = get_logger("examples.serve")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+    cfg = get_smoke_config(args.arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len)),
+                          jnp.int32)
+    t0 = time.time()
+    out = greedy_decode(cfg, params, prompts, args.max_new)
+    dt = time.time() - t0
+    n_tok = args.batch * (args.prompt_len + args.max_new)
+    log.info("decoded %s in %.2fs (%.1f tok/s, batch=%d)", out.shape, dt,
+             n_tok / dt, args.batch)
+    log.info("sample continuation ids: %s", np.asarray(out)[0, :12])
+    # determinism check: same prompts -> same tokens
+    out2 = greedy_decode(cfg, params, prompts, args.max_new)
+    assert (np.asarray(out) == np.asarray(out2)).all(), "non-deterministic decode"
+    log.info("determinism check passed")
+    # continuous batching: staggered arrivals share decode waves
+    from repro.launch.batching import ContinuousBatchingEngine, Request
+
+    eng = ContinuousBatchingEngine(cfg, params, slots=args.batch, max_len=64)
+    rng2 = np.random.default_rng(1)
+    for uid in range(args.batch * 2):
+        eng.submit(Request(uid=uid,
+                           prompt=rng2.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                           max_new=8))
+    stats = eng.run_until_drained()
+    log.info("continuous batching: %d reqs, %d tokens, %d ticks, occupancy %.2f",
+             stats.requests_completed, stats.tokens_generated, stats.ticks,
+             stats.mean_occupancy)
+
+
+if __name__ == "__main__":
+    main()

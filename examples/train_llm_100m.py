@@ -1,0 +1,67 @@
+"""End-to-end driver (deliverable b): train a llama-style model for a few
+hundred steps on the synthetic induction-head stream and watch the loss fall.
+
+  PYTHONPATH=src python examples/train_llm_100m.py --steps 300               # 40M, CPU-budget default
+  PYTHONPATH=src python examples/train_llm_100m.py --preset 100m --steps 300 # full ~108M preset
+
+The checked-in run (experiments/train_llm_100m.log) uses the 40M preset —
+the honest trade for a single-CPU container; on real hardware use --preset
+100m (same code path, larger dims).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import synthetic_token_stream
+from repro.launch.train import default_optimizer, init_train_state, make_train_step
+from repro.utils import get_logger, human_count, tree_num_params
+
+log = get_logger("examples.llm100m")
+
+PRESETS = {
+    "40m": ModelConfig(
+        name="llama-40m", family="dense", source="scaled-down llama3 family",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=8192, rope_theta=5e5, remat_policy="none"),
+    "100m": ModelConfig(
+        name="llama-100m", family="dense", source="scaled-down llama3 family",
+        num_layers=10, d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+        d_ff=2560, vocab_size=16384, rope_theta=5e5, remat_policy="none"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--preset", default="40m", choices=list(PRESETS))
+    args = ap.parse_args()
+    cfg = PRESETS[args.preset]
+    opt = default_optimizer(cfg, base_lr=args.lr, warmup=20, total=args.steps)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    n = tree_num_params(state["params"])
+    log.info("params: %s", human_count(n))
+    step = jax.jit(make_train_step(cfg, opt))
+    stream = synthetic_token_stream(cfg.vocab_size, args.batch, args.seq, seed=0)
+    t0 = time.time()
+    first = None
+    for i in range(args.steps):
+        state, m = step(state, next(stream))
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        if i % 20 == 0 or i == args.steps - 1:
+            tok_s = (i + 1) * args.batch * args.seq / (time.time() - t0)
+            log.info("step %4d loss %.4f (%.0f tok/s)", i, loss, tok_s)
+    log.info("loss %.4f -> %.4f (%.1f%% drop)", first, loss,
+             100 * (1 - loss / first))
+    assert loss < first * 0.95, "training did not learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import load_checkpoint, restore_latest, save_checkpoint
+
+__all__ = ["load_checkpoint", "restore_latest", "save_checkpoint"]

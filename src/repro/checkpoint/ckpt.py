@@ -1,0 +1,92 @@
+"""Sharding-aware checkpointing.
+
+Pytrees are flattened to key-path -> array and stored as .npz plus a JSON
+manifest carrying step, tree structure, and each leaf's logical axes (so a
+restore onto a different mesh re-shards correctly: arrays are loaded on host
+and device_put with the target sharding).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.utils import get_logger
+
+log = get_logger("repro.ckpt")
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten_with_paths(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    np.savez(path, **{k.replace("/", "__"): v for k, v in arrays.items()})
+    treedef = jax.tree_util.tree_structure(state)
+    manifest = {"step": step, "keys": sorted(arrays), "treedef": str(treedef)}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+    _gc(ckpt_dir, keep)
+    log.info("saved checkpoint %s (%d leaves)", path, len(arrays))
+    return path
+
+
+def _gc(ckpt_dir: str, keep: int):
+    ckpts = sorted(
+        f for f in os.listdir(ckpt_dir) if re.fullmatch(r"ckpt_\d+\.npz", f)
+    )
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(ckpt_dir, old))
+        meta = os.path.join(ckpt_dir, old + ".json")
+        if os.path.exists(meta):
+            os.remove(meta)
+
+
+def load_checkpoint(path: str, target: Any, shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of `target`; optionally device_put each leaf
+    with the matching sharding pytree."""
+    data = np.load(path)
+    flat_target = _flatten_with_paths(target)
+    flat_shard = _flatten_with_paths(shardings) if shardings is not None else None
+    restored = {}
+    for key, ref in flat_target.items():
+        arr = data[key.replace("/", "__")]
+        assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
+        if flat_shard is not None:
+            restored[key] = jax.device_put(arr.astype(ref.dtype), flat_shard[key])
+        else:
+            restored[key] = jax.numpy.asarray(arr.astype(ref.dtype))
+    leaves_paths = jax.tree_util.tree_flatten_with_path(target)
+    keys_in_order = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in leaves_paths[0]
+    ]
+    return jax.tree_util.tree_unflatten(leaves_paths[1], [restored[k] for k in keys_in_order])
+
+
+def restore_latest(ckpt_dir: str, target: Any, shardings: Optional[Any] = None):
+    """Returns (state, step) or (None, -1)."""
+    if not os.path.isdir(ckpt_dir):
+        return None, -1
+    ckpts = sorted(
+        f for f in os.listdir(ckpt_dir) if re.fullmatch(r"ckpt_\d+\.npz", f)
+    )
+    if not ckpts:
+        return None, -1
+    path = os.path.join(ckpt_dir, ckpts[-1])
+    step = int(re.findall(r"\d+", ckpts[-1])[0])
+    return load_checkpoint(path, target, shardings), step

@@ -1,0 +1,25 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    get_shape,
+    get_smoke_config,
+    supports_shape,
+)
+
+#: the 10 assigned architectures (excludes the paper's own GCN workload id)
+ASSIGNED_ARCHS = tuple(a for a in ARCH_IDS if a != "gcn-paper")
+
+__all__ = [
+    "ARCH_IDS",
+    "ASSIGNED_ARCHS",
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "get_shape",
+    "get_smoke_config",
+    "supports_shape",
+]

@@ -1,0 +1,230 @@
+"""Config system: architecture configs, input-shape configs, and the registry.
+
+Every assigned architecture has one module ``src/repro/configs/<id>.py``
+exporting ``CONFIG`` (the full production config, exact numbers from the
+assignment table) and ``smoke_config()`` (a reduced same-family variant used
+by CPU smoke tests: <=2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    source: str  # citation from the assignment table
+
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    # --- attention flavour ---
+    rope_theta: float = 1e4
+    rope_style: str = "full"  # full | half (chatglm 2d-rope) | mrope (qwen2-vl)
+    qkv_bias: bool = False
+    attn_logit_softcap: float = 0.0
+    sliding_window: int = 0  # >0 enables sliding-window attention variant
+
+    # --- MLA (deepseek-v2) ---
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 64  # decoupled rope dims for MLA
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch_chunk: int = 4096  # tokens per dispatch chunk (memory lever)
+    moe_group_limit: int = 0  # >0: route each token to experts on <= this many
+    #   model shards (DeepSeek-style group-limited routing) and DEDUPLICATE the
+    #   dispatch (one copy per destination shard, not per expert) — §Perf lever
+    router_aux_coef: float = 0.01
+
+    # --- SSM (rwkv6 / mamba2) ---
+    ssm_kind: str = ""  # "" | rwkv6 | mamba2
+    ssm_state: int = 0  # state dim N (mamba2) / head key dim (rwkv6)
+    ssm_heads: int = 0
+    ssm_conv: int = 4  # mamba2 depthwise conv width
+    ssm_chunk: int = 64  # chunked-scan chunk length
+    attn_every: int = 0  # hybrid: shared attention block every N layers
+
+    # --- encoder-decoder (seamless) ---
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+
+    # --- modality frontend stub ---
+    input_mode: str = "tokens"  # tokens | embeddings (audio frames / vision patches)
+
+    # --- numerics / training ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"  # activation/compute dtype
+    param_dtype: str = "float32"
+    remat_policy: str = "minimal"  # none | minimal | full
+    optimizer: str = "adamw"  # adamw | adafactor | sgdm
+
+    def __post_init__(self):
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+        if self.family == "moe":
+            assert self.num_experts > 0 and self.moe_top_k > 0
+        if self.ssm_kind:
+            assert self.ssm_kind in ("rwkv6", "mamba2")
+            assert self.ssm_state > 0 and self.ssm_heads > 0
+        if self.use_mla:
+            assert self.kv_lora_rank > 0
+        if self.num_heads and not self.ssm_kind:
+            assert self.num_heads % max(self.num_kv_heads, 1) == 0
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def num_params(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6*N*D roofline)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        embed = V * D * (1 if self.tie_embeddings else 2)
+        total = embed + D  # final norm
+        enc_layers = self.encoder_layers if self.is_encoder_decoder else 0
+        for layer in range(L + enc_layers):
+            total += 2 * D  # norms
+            is_enc = layer >= L
+            # attention
+            if self.ssm_kind and not self._layer_has_attn(layer if not is_enc else 0):
+                pass
+            elif not self.ssm_kind or self._layer_has_attn(layer):
+                if self.use_mla:
+                    total += D * (self.kv_lora_rank + self.rope_head_dim)
+                    total += self.kv_lora_rank * self.num_heads * self.head_dim * 2
+                    total += D * self.num_heads * (self.head_dim + self.rope_head_dim)
+                    total += self.q_dim * D
+                else:
+                    total += D * self.q_dim + 2 * D * self.kv_dim + self.q_dim * D
+                    if self.qkv_bias:
+                        total += self.q_dim + 2 * self.kv_dim
+                if self.is_encoder_decoder and not is_enc:
+                    total += D * self.q_dim + 2 * D * self.kv_dim + self.q_dim * D  # cross attn
+            # ffn / moe / ssm
+            if self.ssm_kind and not is_enc:
+                H, N = self.ssm_heads, self.ssm_state
+                if self.ssm_kind == "rwkv6":
+                    total += 5 * D * D + D * D  # r,k,v,g,o + decay lora approx
+                else:  # mamba2
+                    d_inner = 2 * D
+                    total += D * (2 * d_inner + 2 * H * N + H) + d_inner * D + d_inner * self.ssm_conv
+                total += D * F + F * D  # channel-mix / mlp
+            elif self.num_experts and layer >= self.first_k_dense and not is_enc:
+                total += D * self.num_experts  # router
+                total += self.num_experts * 3 * D * F
+                total += self.num_shared_experts * 3 * D * F
+            else:
+                total += 3 * D * F
+        return total
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if not self.num_experts:
+            return self.num_params()
+        D, F, L = self.d_model, self.d_ff, self.num_layers
+        dense_total = self.num_params()
+        all_expert = (L - self.first_k_dense) * self.num_experts * 3 * D * F
+        active_expert = (L - self.first_k_dense) * (self.moe_top_k) * 3 * D * F
+        return dense_total - all_expert + active_expert
+
+    def _layer_has_attn(self, layer: int) -> bool:
+        if not self.ssm_kind:
+            return True
+        if self.attn_every <= 0:
+            return False
+        return layer % self.attn_every == self.attn_every - 1
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "qwen2-vl-72b",
+    "kimi-k2-1t-a32b",
+    "chatglm3-6b",
+    "seamless-m4t-large-v2",
+    "deepseek-v2-236b",
+    "qwen1.5-32b",
+    "llama3.2-1b",
+    "rwkv6-3b",
+    "llama3.2-3b",
+    "zamba2-1.2b",
+    # the paper's own workload: a GCN — handled by src/repro/core, but kept
+    # addressable through the same --arch flag for the launcher.
+    "gcn-paper",
+)
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.smoke_config()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Decode-shape policy (documented in DESIGN.md)."""
+    if shape.name == "long_500k":
+        if cfg.is_encoder_decoder:
+            return False, "enc-dec: 500k-token decoder target out of family scope"
+    return True, ""

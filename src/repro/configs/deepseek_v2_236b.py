@@ -1,0 +1,55 @@
+"""deepseek-v2-236b [moe] — MLA kv_lora=512, 2 shared + 160 routed top-6
+[arXiv:2405.04434].
+
+60L d_model=5120 128H (kv=128) d_ff=1536(expert) vocab=102400.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    source="arXiv:2405.04434",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=102400,
+    use_mla=True,
+    kv_lora_rank=512,
+    rope_head_dim=64,
+    num_experts=160,
+    num_shared_experts=2,
+    moe_top_k=6,
+    first_k_dense=1,
+    capacity_factor=1.25,
+    moe_dispatch_chunk=2048,
+    optimizer="adafactor",
+    param_dtype="bfloat16",
+    remat_policy="full",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-smoke",
+        family="moe",
+        source=CONFIG.source,
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=128,
+        vocab_size=512,
+        use_mla=True,
+        kv_lora_rank=32,
+        rope_head_dim=16,
+        num_experts=4,
+        num_shared_experts=1,
+        moe_top_k=2,
+        first_k_dense=1,
+        moe_dispatch_chunk=64,
+        optimizer="adafactor",
+    )

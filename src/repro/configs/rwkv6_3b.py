@@ -1,0 +1,44 @@
+"""rwkv6-3b [ssm] — Finch, data-dependent decay [arXiv:2404.05892].
+
+32L d_model=2560 (attention-free) d_ff=8960 vocab=65536.
+RWKV6 head size 64 => 40 heads, per-channel data-dependent decay; trained and
+prefilled with the chunked WKV scan (TPU-native chunk matmuls), decoded with
+the O(1)-state recurrence.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    source="arXiv:2404.05892",
+    num_layers=32,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=8960,
+    vocab_size=65536,
+    ssm_kind="rwkv6",
+    ssm_state=64,  # head key dim
+    ssm_heads=40,
+    ssm_chunk=64,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke",
+        family="ssm",
+        source=CONFIG.source,
+        num_layers=2,
+        d_model=128,
+        num_heads=0,
+        num_kv_heads=0,
+        head_dim=0,
+        d_ff=256,
+        vocab_size=512,
+        ssm_kind="rwkv6",
+        ssm_state=32,
+        ssm_heads=4,
+        ssm_chunk=16,
+    )

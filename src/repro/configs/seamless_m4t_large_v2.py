@@ -1,0 +1,43 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, multimodal [arXiv:2308.11596].
+
+24L(+24 encoder) d_model=1024 16H (kv=16) d_ff=8192 vocab=256206.
+Backbone only: mel-spectrogram + conv feature extractor are stubbed;
+``input_specs`` supplies frame embeddings (B, S_enc, d_model).
+Training shape splits seq_len into encoder/decoder halves; decode shapes cache
+decoder self-attn KV plus precomputed cross-attn KV over the encoder output.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    source="arXiv:2308.11596",
+    num_layers=24,
+    encoder_layers=24,
+    is_encoder_decoder=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256206,
+    input_mode="embeddings",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-smoke",
+        family="audio",
+        source=CONFIG.source,
+        num_layers=2,
+        encoder_layers=2,
+        is_encoder_decoder=True,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        input_mode="embeddings",
+    )

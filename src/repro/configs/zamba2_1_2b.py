@@ -1,0 +1,45 @@
+"""zamba2-1.2b [hybrid] — Mamba2 + shared attention blocks [arXiv:2411.15242].
+
+38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+Mamba2 (SSD) backbone; a single *shared* attention block (one set of params)
+is applied every 6 layers (the Zamba2 shared-block design).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_kind="mamba2",
+    ssm_state=64,
+    ssm_heads=64,  # d_inner = 2*d_model, head dim 64
+    ssm_chunk=128,
+    attn_every=6,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke",
+        family="hybrid",
+        source=CONFIG.source,
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        ssm_kind="mamba2",
+        ssm_state=16,
+        ssm_heads=8,
+        ssm_chunk=16,
+        attn_every=2,
+    )

@@ -1,0 +1,12 @@
+"""The survey's taxonomy as a working distributed-GNN engine (DESIGN.md §1):
+data partition, batch generation, execution models, communication protocols,
+GNN models, and end-to-end training loops.
+"""
+from repro.core.graph import Graph, er_graph, from_edges, powerlaw_graph, sbm_graph
+from repro.core.training import (
+    FullGraphResult,
+    MiniBatchResult,
+    full_graph_train,
+    llcg_train,
+    minibatch_train,
+)

@@ -1,0 +1,23 @@
+from repro.core.execution.chunk import (
+    one_shot_aggregate,
+    parallel_chunk_aggregate,
+    sequential_chunk_aggregate,
+)
+from repro.core.execution.minibatch_pipeline import (
+    PullPushPlan,
+    StageTimes,
+    p3_plan,
+    run_conventional,
+    run_factored,
+    run_operator_parallel,
+)
+from repro.core.execution.spmm_models import (
+    SPMM_MODELS,
+    p2p_plan,
+    spmm_15d,
+    spmm_1d_broadcast,
+    spmm_1d_p2p,
+    spmm_1d_ring,
+    spmm_2d_summa,
+    spmm_replicated,
+)

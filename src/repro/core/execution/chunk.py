@@ -1,0 +1,44 @@
+"""Graph-view execution models (survey §6.2.1): one-shot vs chunk-based
+aggregation, single-device reference semantics (the distributed counterparts
+live in spmm_models: one-shot == 1D broadcast, sequential chunk == ring,
+parallel chunk == CCR reduction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def one_shot_aggregate(A: jnp.ndarray, H: jnp.ndarray) -> jnp.ndarray:
+    """Collect every neighbor feature first, aggregate in one shot."""
+    return A @ H
+
+
+def sequential_chunk_aggregate(A: jnp.ndarray, H: jnp.ndarray, num_chunks: int) -> jnp.ndarray:
+    """Split the neighborhood into chunks; accumulate partial aggregations
+    sequentially (NeuGraph/SAR) — bounded memory: one chunk live at a time."""
+    V = H.shape[0]
+    assert V % num_chunks == 0
+    nb = V // num_chunks
+    Ar = A.reshape(A.shape[0], num_chunks, nb).transpose(1, 0, 2)
+    Hr = H.reshape(num_chunks, nb, H.shape[1])
+
+    def step(acc, blk):
+        A_blk, H_blk = blk
+        return acc + A_blk @ H_blk, None
+
+    acc0 = jnp.zeros((A.shape[0], H.shape[1]), H.dtype)
+    acc, _ = jax.lax.scan(step, acc0, (Ar, Hr))
+    return acc
+
+
+def parallel_chunk_aggregate(A: jnp.ndarray, H: jnp.ndarray, num_chunks: int) -> jnp.ndarray:
+    """All chunks compute partials in parallel, then one reduction
+    (DeepGalois/DistGNN/FlexGraph) — on hardware the reduction is the psum."""
+    V = H.shape[0]
+    assert V % num_chunks == 0
+    nb = V // num_chunks
+    Ar = A.reshape(A.shape[0], num_chunks, nb).transpose(1, 0, 2)
+    Hr = H.reshape(num_chunks, nb, H.shape[1])
+    partials = jnp.einsum("krn,knd->krd", Ar, Hr)  # all chunks at once
+    return partials.sum(0)

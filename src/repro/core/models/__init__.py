@@ -1,0 +1,8 @@
+from repro.core.models.gnn import (
+    accuracy,
+    full_graph_forward,
+    gnn_layer,
+    init_gnn_params,
+    minibatch_forward,
+    softmax_xent,
+)

@@ -1,0 +1,32 @@
+from repro.core.partition.cost_models import (
+    OperatorCostModel,
+    RocCostModel,
+    bgl_score,
+    bytegnn_score,
+    flexgraph_cost,
+    pagraph_score,
+)
+from repro.core.partition.edge_cut import (
+    PARTITIONERS,
+    Partition,
+    block_partition,
+    hash_partition,
+    ldg_partition,
+    metis_like_partition,
+    range_partition,
+    range_partition_by_cost,
+)
+from repro.core.partition.feature_partition import (
+    FeatureShards,
+    column_partition,
+    replicated,
+    row_partition,
+    row_partition_with_halo,
+    twod_partition,
+)
+from repro.core.partition.vertex_cut import (
+    VertexCut,
+    cartesian_2d_vertex_cut,
+    libra_vertex_cut,
+    random_vertex_cut,
+)

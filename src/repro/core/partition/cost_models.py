@@ -1,0 +1,160 @@
+"""GNN cost models (survey §4.1): heuristic affinity scores (Eq. 3-5),
+learning-based linear regression (ROC, Eq. 6-7), operator-based (CM-GCN,
+Eq. 9-11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+# ---------------------------------------------------------------------------
+# Heuristic affinity scores for streaming partition
+# ---------------------------------------------------------------------------
+
+
+def pagraph_score(candidate_in_nbrs: np.ndarray, part_train_sets: Sequence[set],
+                  part_sizes: np.ndarray, avg_train: float) -> np.ndarray:
+    """Eq. 3 (Lin et al. / PaGraph): |V_train^i ∩ IN(v)| * (avg - |V_train^i|)/|P_i|."""
+    K = len(part_train_sets)
+    scores = np.zeros(K)
+    nbrs = set(candidate_in_nbrs.tolist())
+    for i in range(K):
+        inter = len(part_train_sets[i] & nbrs)
+        denom = max(part_sizes[i], 1)
+        scores[i] = inter * (avg_train - len(part_train_sets[i])) / denom
+    return scores
+
+
+def bgl_score(block_in_nbrs: np.ndarray, part_vertex_sets: Sequence[set],
+              part_sizes: np.ndarray, part_train_counts: np.ndarray,
+              avg_part: float, avg_train: float) -> np.ndarray:
+    """Eq. 4 (Liu et al. / BGL): |P_i ∩ IN(B)| * (1-|P_i|/P_avg) * (1-train_i/train_avg)."""
+    K = len(part_vertex_sets)
+    nbrs = set(block_in_nbrs.tolist())
+    scores = np.zeros(K)
+    for i in range(K):
+        inter = len(part_vertex_sets[i] & nbrs)
+        scores[i] = (inter * (1.0 - part_sizes[i] / max(avg_part, 1.0))
+                     * (1.0 - part_train_counts[i] / max(avg_train, 1.0)))
+    return scores
+
+
+def bytegnn_score(cross_edges: np.ndarray, part_sizes: np.ndarray,
+                  train_counts: np.ndarray, valid_counts: np.ndarray,
+                  test_counts: np.ndarray, avgs: tuple, alpha=0.5, beta=0.3,
+                  gamma=0.2) -> np.ndarray:
+    """Eq. 5 (Zheng et al. / ByteGNN)."""
+    t_avg, v_avg, s_avg = avgs
+    frac = cross_edges / np.maximum(part_sizes, 1)
+    penalty = (1.0 - alpha * train_counts / max(t_avg, 1.0)
+               - beta * valid_counts / max(v_avg, 1.0)
+               - gamma * test_counts / max(s_avg, 1.0))
+    return frac * penalty
+
+
+# ---------------------------------------------------------------------------
+# Learning-based (ROC): t(l, G) = sum_i w_i x_i(G)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RocCostModel:
+    """Linear model over the five ROC vertex features (Table 1)."""
+    weights: Optional[np.ndarray] = None  # [5]
+    word_size: int = 16  # elements per memory transaction
+
+    def vertex_features(self, g: Graph, hidden_dim: int) -> np.ndarray:
+        V = g.num_vertices
+        deg = g.degree().astype(np.float64)
+        x1 = np.ones(V)
+        x2 = deg
+        # x3: continuity of neighbors — fraction of consecutive neighbor ids
+        x3 = np.zeros(V)
+        for v in range(V):
+            nb = np.sort(g.neighbors(v))
+            if len(nb) > 1:
+                x3[v] = np.mean(np.diff(nb) == 1)
+        x4 = np.ceil(deg / self.word_size)  # mem transactions to load neighbor ids
+        x5 = np.ceil(deg * hidden_dim / self.word_size)  # to load activations
+        return np.stack([x1, x2, x3, x4, x5], axis=1)
+
+    def fit(self, feats: np.ndarray, times: np.ndarray) -> "RocCostModel":
+        w, *_ = np.linalg.lstsq(feats, times, rcond=None)
+        self.weights = w
+        return self
+
+    def fit_from_measurements(self, g: Graph, hidden_dim: int, n_chunks: int = 16,
+                              repeats: int = 3) -> "RocCostModel":
+        """Measure real aggregation runtimes on vertex chunks and fit."""
+        V = g.num_vertices
+        H = np.random.default_rng(0).standard_normal((V, hidden_dim)).astype(np.float32)
+        order = np.arange(V)
+        chunks = np.array_split(order, n_chunks)
+        feats_all = self.vertex_features(g, hidden_dim)
+        X, y = [], []
+        for ch in chunks:
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                for v in ch:
+                    nb = g.neighbors(v)
+                    if len(nb):
+                        H[v] = H[nb].sum(0)
+            dt = (time.perf_counter() - t0) / repeats
+            X.append(feats_all[ch].sum(0))
+            y.append(dt)
+        return self.fit(np.stack(X), np.asarray(y))
+
+    def predict_subgraph(self, g: Graph, vertices: np.ndarray, hidden_dim: int) -> float:
+        assert self.weights is not None, "fit first"
+        feats = self.vertex_features(g, hidden_dim)[vertices].sum(0)
+        return float(feats @ self.weights)
+
+
+def flexgraph_cost(neighbor_counts: np.ndarray, feature_dims: np.ndarray) -> float:
+    """Eq. 8 (Wang et al. / FlexGraph): f = sum_i n_i * m_i over neighbor types."""
+    return float(np.sum(neighbor_counts * feature_dims))
+
+
+# ---------------------------------------------------------------------------
+# Operator-based (CM-GCN, Eq. 9-11)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class OperatorCostModel:
+    alpha: float = 1.0  # aggregation per neighbor-element
+    beta: float = 1.0  # linear transform
+    gamma: float = 0.1  # activation
+    lam: float = 0.5  # loss-gradient
+    eta: float = 0.5  # gradient multiplications
+
+    def forward_cost(self, deg_v: float, d_in: int, d_out: int) -> float:
+        return self.alpha * deg_v * d_in + self.beta * d_out * d_in + self.gamma * d_out
+
+    def backward_cost(self, deg_v: float, d_in: int, d_out: int, is_last: bool) -> float:
+        if is_last:
+            return (self.lam + self.eta) * d_out + (2 * self.beta + self.eta) * d_out * d_in
+        return (self.alpha * deg_v * d_out + (self.beta + self.eta) * d_out * d_in
+                + self.eta * d_out)
+
+    def batch_cost(self, g: Graph, batch: np.ndarray, layer_dims: Sequence[int]) -> float:
+        """Eq. 11: sum over the L-hop expansion of the batch."""
+        L = len(layer_dims) - 1
+        frontier = set(batch.tolist())
+        total = 0.0
+        deg = g.degree()
+        for l in range(L, 0, -1):
+            d_in, d_out = layer_dims[l - 1], layer_dims[l]
+            for v in frontier:
+                total += self.forward_cost(deg[v], d_in, d_out)
+                total += self.backward_cost(deg[v], d_in, d_out, is_last=(l == L))
+            nxt = set(frontier)
+            for v in frontier:
+                nxt.update(g.neighbors(v).tolist())
+            frontier = nxt
+        return total

@@ -1,0 +1,82 @@
+"""Vertex-cut partitioning (survey §2, §4.2): edges are partitioned; vertices
+replicate. Includes the 2D Cartesian vertex-cut used by CAGNET/DeepGalois.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+@dataclasses.dataclass
+class VertexCut:
+    edge_owner: np.ndarray  # [E] partition id per edge (CSR order)
+    num_parts: int
+    masters: np.ndarray  # [V] master partition per vertex
+
+    def replication_factor(self, g: Graph) -> float:
+        """Mean number of partitions in which a vertex appears."""
+        V = g.num_vertices
+        present = np.zeros((self.num_parts, V), bool)
+        e = 0
+        for v in range(V):
+            for u in g.neighbors(v):
+                p = self.edge_owner[e]
+                present[p, v] = True
+                present[p, u] = True
+                e += 1
+        appears = present.sum(0)
+        return float(appears[appears > 0].mean()) if (appears > 0).any() else 0.0
+
+
+def random_vertex_cut(g: Graph, k: int, seed: int = 0) -> VertexCut:
+    rng = np.random.default_rng(seed)
+    owner = rng.integers(0, k, g.num_edges).astype(np.int32)
+    masters = rng.integers(0, k, g.num_vertices).astype(np.int32)
+    return VertexCut(owner, k, masters)
+
+
+def cartesian_2d_vertex_cut(g: Graph, rows: int, cols: int, seed: int = 0) -> VertexCut:
+    """2D Cartesian: edge (u->v) owned by grid block (row(u), col(v)) — each
+    vertex replicates across at most rows+cols-1 partitions (Hoang et al.)."""
+    rng = np.random.default_rng(seed)
+    row_of = rng.integers(0, rows, g.num_vertices)
+    col_of = rng.integers(0, cols, g.num_vertices)
+    owner = np.zeros(g.num_edges, np.int32)
+    e = 0
+    for v in range(g.num_vertices):
+        for u in g.neighbors(v):
+            owner[e] = row_of[u] * cols + col_of[v]
+            e += 1
+    masters = (row_of * cols + col_of).astype(np.int32)
+    return VertexCut(owner, rows * cols, masters)
+
+
+def libra_vertex_cut(g: Graph, k: int, seed: int = 0) -> VertexCut:
+    """Degree-aware greedy vertex-cut (Libra/PowerGraph-style): assign each
+    edge to the least-loaded partition among those already holding one of its
+    endpoints (reduces replication of low-degree vertices)."""
+    loads = np.zeros(k, np.int64)
+    holds: List[set] = [set() for _ in range(k)]
+    owner = np.zeros(g.num_edges, np.int32)
+    e = 0
+    for v in range(g.num_vertices):
+        for u in g.neighbors(v):
+            cands = [i for i in range(k) if (u in holds[i]) or (v in holds[i])]
+            if cands:
+                i = min(cands, key=lambda i: loads[i])
+            else:
+                i = int(np.argmin(loads))
+            owner[e] = i
+            holds[i].add(int(u))
+            holds[i].add(int(v))
+            loads[i] += 1
+            e += 1
+    masters = np.zeros(g.num_vertices, np.int32)
+    for v in range(g.num_vertices):
+        cands = [i for i in range(k) if v in holds[i]]
+        masters[v] = cands[0] if cands else v % k
+    return VertexCut(owner, k, masters)

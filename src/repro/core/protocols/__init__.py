@@ -1,0 +1,17 @@
+from repro.core.protocols.async_hist import (
+    STALENESS_MODELS,
+    HistoricalState,
+    PipeGCNState,
+    epoch_adaptive_refresh,
+    epoch_fixed_refresh,
+    variation_refresh,
+)
+from repro.core.protocols.sync import (
+    PROTOCOL_COSTS,
+    ProtocolCost,
+    broadcast_cost,
+    p2p_cost,
+    pipeline_cost,
+    remote_partial_aggregation_cost,
+    shared_memory_cost,
+)

@@ -1,0 +1,148 @@
+"""Asynchronous protocols with historical embeddings (survey §7.2): the three
+staleness models (epoch-fixed, epoch-adaptive, variation-based) as pure,
+jittable state machines, plus PipeGCN-style embedding+gradient staleness.
+
+SPMD adaptation (DESIGN.md §2): true racing asynchrony does not exist under
+jit; the staleness BOUND (the convergence-relevant property) is preserved by a
+deterministic refresh schedule. Refresh decisions are computed with masks
+(no data-dependent control flow), so everything stays one compiled program.
+
+State layout: hist [V, D] historical embeddings; age [K] per-partition epochs
+since refresh. `boundary_mask` [V] marks vertices whose CONSUMERS are remote —
+only those ever read stale values (local reads are always fresh), exactly the
+GA-stage semantics of Table 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HistoricalState:
+    hist: jnp.ndarray  # [V, D]
+    age: jnp.ndarray  # [K] int32 epochs since each partition's last push
+    bytes_pushed: jnp.ndarray  # [] running comm counter (rows refreshed * D * 4)
+
+    @staticmethod
+    def create(V: int, D: int, K: int) -> "HistoricalState":
+        return HistoricalState(jnp.zeros((V, D), jnp.float32),
+                               jnp.zeros((K,), jnp.int32), jnp.zeros((), jnp.float32))
+
+
+def _mix(h_new, hist, part_refreshed, assignment, boundary_mask):
+    """Rows of refreshed partitions read fresh; stale boundary rows read hist;
+    non-boundary rows are always fresh (they never cross the wire)."""
+    fresh_row = part_refreshed[assignment] | (~boundary_mask)
+    return jnp.where(fresh_row[:, None], h_new, hist)
+
+
+def epoch_fixed_refresh(state: HistoricalState, h_new: jnp.ndarray, step: jnp.ndarray,
+                        assignment: jnp.ndarray, boundary_mask: jnp.ndarray,
+                        staleness: int) -> Tuple[jnp.ndarray, HistoricalState]:
+    """DistGNN/PipeGCN (Table 3, epoch-fixed): every partition pushes every
+    `staleness` epochs — bound |e - ẽ| <= staleness by construction."""
+    K = state.age.shape[0]
+    refresh = (step % staleness) == 0
+    part_refreshed = jnp.broadcast_to(refresh, (K,))
+    h_used = _mix(h_new, state.hist, part_refreshed, assignment, boundary_mask)
+    rows = jnp.where(refresh, boundary_mask.sum(), 0)
+    hist2 = jnp.where(refresh, h_new, state.hist)
+    return h_used, HistoricalState(
+        hist2, jnp.where(part_refreshed, 0, state.age + 1),
+        state.bytes_pushed + rows * h_new.shape[1] * 4.0)
+
+
+def epoch_adaptive_refresh(state: HistoricalState, h_new: jnp.ndarray, step: jnp.ndarray,
+                           assignment: jnp.ndarray, boundary_mask: jnp.ndarray,
+                           staleness: int) -> Tuple[jnp.ndarray, HistoricalState]:
+    """DIGEST (epoch-adaptive): partitions push round-robin, 1/staleness of
+    them per epoch — each partition's age stays <= staleness, but DIFFERENT
+    partitions have different staleness within one epoch."""
+    K = state.age.shape[0]
+    part_refreshed = (jnp.arange(K) % staleness) == (step % staleness)
+    # safety: anything that would exceed the bound refreshes too
+    part_refreshed = part_refreshed | (state.age >= staleness - 1)
+    h_used = _mix(h_new, state.hist, part_refreshed, assignment, boundary_mask)
+    row_refresh = part_refreshed[assignment] & boundary_mask
+    hist2 = jnp.where(row_refresh[:, None], h_new, state.hist)
+    return h_used, HistoricalState(
+        hist2, jnp.where(part_refreshed, 0, state.age + 1),
+        state.bytes_pushed + row_refresh.sum() * h_new.shape[1] * 4.0)
+
+
+def variation_refresh(state: HistoricalState, h_new: jnp.ndarray, step: jnp.ndarray,
+                      assignment: jnp.ndarray, boundary_mask: jnp.ndarray,
+                      eps: float, hard_bound: int = 16) -> Tuple[jnp.ndarray, HistoricalState]:
+    """SANCUS skip-broadcast (variation-based): a partition pushes only when
+    its embeddings drifted more than eps (relative Frobenius) from the last
+    pushed version; a hard epoch bound keeps staleness finite."""
+    K = state.age.shape[0]
+    diff = jnp.square(h_new - state.hist).sum(-1)  # [V]
+    base = jnp.square(state.hist).sum(-1) + 1e-12
+    drift_v = diff / base
+    # per-partition mean drift over boundary rows
+    w = boundary_mask.astype(jnp.float32)
+    num = jnp.zeros((K,)).at[assignment].add(drift_v * w)
+    den = jnp.zeros((K,)).at[assignment].add(w) + 1e-9
+    part_drift = num / den
+    part_refreshed = (part_drift > eps) | (state.age >= hard_bound)
+    h_used = _mix(h_new, state.hist, part_refreshed, assignment, boundary_mask)
+    row_refresh = part_refreshed[assignment] & boundary_mask
+    hist2 = jnp.where(row_refresh[:, None], h_new, state.hist)
+    return h_used, HistoricalState(
+        hist2, jnp.where(part_refreshed, 0, state.age + 1),
+        state.bytes_pushed + row_refresh.sum() * h_new.shape[1] * 4.0)
+
+
+STALENESS_MODELS = {
+    "epoch_fixed": epoch_fixed_refresh,
+    "epoch_adaptive": epoch_adaptive_refresh,
+    "variation": variation_refresh,
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PipeGCNState:
+    """PipeGCN: both boundary embeddings AND boundary gradients come from the
+    previous epoch (staleness exactly 1); carried per layer."""
+    hist_h: jnp.ndarray  # [L, V, D]
+    hist_g: jnp.ndarray  # [L, V, D]
+
+    @staticmethod
+    def create(L: int, V: int, D: int) -> "PipeGCNState":
+        return PipeGCNState(jnp.zeros((L, V, D), jnp.float32),
+                            jnp.zeros((L, V, D), jnp.float32))
+
+
+@jax.custom_vjp
+def pipegcn_mix(h_new, hist_h, hist_g, bmask_f):
+    """Forward: boundary rows read last epoch's embeddings. Backward: boundary
+    rows receive last epoch's GRADIENTS (hist_g), and the FRESH boundary
+    cotangent is emitted on the hist_g gradient channel so the caller can
+    harvest it as next epoch's state — both PipeGCN staleness points (GA and
+    gradient-GA, survey Table 3) in one primitive."""
+    b = bmask_f[:, None]
+    return h_new * (1.0 - b) + hist_h * b
+
+
+def _pipegcn_mix_fwd(h_new, hist_h, hist_g, bmask_f):
+    return pipegcn_mix(h_new, hist_h, hist_g, bmask_f), (hist_g, bmask_f)
+
+
+def _pipegcn_mix_bwd(res, ct):
+    hist_g, bmask_f = res
+    b = bmask_f[:, None]
+    d_h_new = ct * (1.0 - b) + hist_g * b  # stale gradient injected
+    d_hist_h = jnp.zeros_like(ct)
+    d_hist_g = ct * b  # fresh boundary cotangent -> next epoch's hist_g
+    return d_h_new, d_hist_h, d_hist_g, jnp.zeros_like(bmask_f)
+
+
+pipegcn_mix.defvjp(_pipegcn_mix_fwd, _pipegcn_mix_bwd)

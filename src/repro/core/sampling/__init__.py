@@ -1,0 +1,27 @@
+from repro.core.sampling.cache import (
+    FIFOCache,
+    analysis_cache,
+    importance_cache,
+    presampling_cache,
+    proximity_ordering,
+    simulate_hit_ratio,
+    static_degree_cache,
+)
+from repro.core.sampling.distributed import (
+    CommStats,
+    csp_sample,
+    feature_fetch_bytes,
+    pull_based_sample,
+    skewed_weighted_sample,
+)
+from repro.core.sampling.partition_batch import (
+    LLCGSchedule,
+    expanded_partition_minibatch,
+    partition_minibatch,
+)
+from repro.core.sampling.samplers import (
+    MiniBatch,
+    layer_wise_sample,
+    node_wise_sample,
+    subgraph_sample,
+)

@@ -1,0 +1,138 @@
+"""Feature-cache policies (survey §5.1) and a hit-ratio simulator.
+
+Policies:
+  StaticDegreeCache   — PaGraph: cache highest out-degree vertices.
+  ImportanceCache     — AliGraph: cache vertices with Imp^l(v) = D_in/D_out
+                        above a threshold (capped at capacity).
+  PreSamplingCache    — GNNLab: run K sampling epochs, cache hottest.
+  AnalysisCache       — SALIENT++: propagate sampled-probability through the
+                        graph analytically, cache highest-probability.
+  FIFOCache           — BGL: dynamic FIFO with proximity-aware ordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Iterable, List, Sequence
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.sampling.samplers import node_wise_sample
+
+
+def simulate_hit_ratio(cached_ids: np.ndarray, access_stream: Iterable[np.ndarray]) -> float:
+    cached = set(np.asarray(cached_ids).tolist())
+    hits = total = 0
+    for batch in access_stream:
+        for v in np.asarray(batch).ravel():
+            hits += int(v) in cached
+            total += 1
+    return hits / max(total, 1)
+
+
+def static_degree_cache(g: Graph, capacity: int) -> np.ndarray:
+    """PaGraph: high OUT-degree vertices are accessed most by samplers."""
+    return np.argsort(-g.out_degree())[:capacity]
+
+
+def importance_cache(g: Graph, capacity: int, l: int = 1) -> np.ndarray:
+    """AliGraph Imp^l(v) = D_in^l / D_out^l (1-hop approximation for l=1)."""
+    d_in = g.degree().astype(np.float64)
+    d_out = g.out_degree().astype(np.float64)
+    imp = d_in / np.maximum(d_out, 1.0)
+    # among high-importance, prefer frequently accessed (high out-degree):
+    order = np.lexsort((-d_out, -imp))
+    return order[:capacity]
+
+
+def presampling_cache(g: Graph, capacity: int, *, fanouts=(5, 5), batch_size=32,
+                      epochs: int = 3, seed: int = 0) -> np.ndarray:
+    """GNNLab: K pre-sampling epochs measure empirical hotness."""
+    rng = np.random.default_rng(seed)
+    train = np.where(g.train_mask)[0] if g.train_mask is not None else np.arange(g.num_vertices)
+    counts = np.zeros(g.num_vertices, np.int64)
+    for _ in range(epochs):
+        perm = rng.permutation(train)
+        for i in range(0, len(perm), batch_size):
+            mb = node_wise_sample(g, perm[i : i + batch_size], fanouts, rng)
+            np.add.at(counts, mb.layer_vertices[0], 1)
+    return np.argsort(-counts)[:capacity]
+
+
+def analysis_cache(g: Graph, capacity: int, *, fanouts=(5, 5)) -> np.ndarray:
+    """SALIENT++ propagation model: p_0 = uniform over train set; each hop
+    propagates p along in-edges scaled by min(fanout/deg, 1)."""
+    V = g.num_vertices
+    train = np.where(g.train_mask)[0] if g.train_mask is not None else np.arange(V)
+    p = np.zeros(V)
+    p[train] = 1.0 / max(len(train), 1)
+    total = p.copy()
+    deg = g.degree().astype(np.float64)
+    for fanout in fanouts:
+        nxt = np.zeros(V)
+        scale = np.minimum(fanout / np.maximum(deg, 1.0), 1.0)
+        for v in range(V):
+            if p[v] > 0 and deg[v] > 0:
+                nb = g.neighbors(v)
+                nxt[nb] += p[v] * scale[v] / len(nb) * len(nb)  # prob mass per nbr
+        total += nxt
+        p = nxt
+    return np.argsort(-total)[:capacity]
+
+
+@dataclasses.dataclass
+class FIFOCache:
+    """BGL dynamic FIFO cache; feed access batches in (proximity-aware) order."""
+    capacity: int
+
+    def __post_init__(self):
+        self._set = OrderedDict()
+
+    def access(self, v: int) -> bool:
+        hit = v in self._set
+        if not hit:
+            if len(self._set) >= self.capacity:
+                self._set.popitem(last=False)
+            self._set[v] = True
+        return hit
+
+    def run(self, stream: Iterable[np.ndarray]) -> float:
+        hits = total = 0
+        for batch in stream:
+            for v in np.asarray(batch).ravel():
+                hits += self.access(int(v))
+                total += 1
+        return hits / max(total, 1)
+
+
+def proximity_ordering(g: Graph, train: np.ndarray, *, seed: int = 0,
+                       shift: bool = True) -> np.ndarray:
+    """BGL: BFS-ordered training sequence (+ random shift for convergence)."""
+    rng = np.random.default_rng(seed)
+    train_set = set(train.tolist())
+    order: List[int] = []
+    seen = set()
+    q = deque()
+    start = int(rng.choice(train))
+    q.append(start)
+    seen.add(start)
+    while q:
+        v = q.popleft()
+        if v in train_set:
+            order.append(v)
+        for u in g.neighbors(v):
+            if int(u) not in seen:
+                seen.add(int(u))
+                q.append(int(u))
+        if not q:
+            rest = [t for t in train_set if t not in set(order)]
+            if rest:
+                nxt = int(rng.choice(np.asarray(rest)))
+                q.append(nxt)
+                seen.add(nxt)
+    arr = np.asarray(order, np.int64)
+    if shift and len(arr):
+        k = int(rng.integers(0, len(arr)))
+        arr = np.roll(arr, k)
+    return arr

@@ -1,0 +1,72 @@
+"""Partition-based mini-batch generation (survey §5.2): the local partition IS
+the batch (PSGD-PA), subgraph expansion to restore boundary context, and LLCG
+(Learn Locally, Correct Globally).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.partition.edge_cut import Partition
+from repro.core.sampling.samplers import MiniBatch
+
+
+def partition_minibatch(g: Graph, part: Partition, worker: int,
+                        num_layers: int = 2) -> MiniBatch:
+    """PSGD-PA: ignore cross edges; train on the induced local subgraph."""
+    verts = np.where(part.assignment == worker)[0]
+    sub, _ = g.subgraph(verts)
+    A = sub.to_dense_adj(normalized=True)
+    return MiniBatch(
+        targets=verts,
+        layer_vertices=[verts] * (num_layers + 1),
+        layer_adj=[A] * num_layers,
+        input_features=g.features[verts] if g.features is not None else None,
+        labels=g.labels[verts] if g.labels is not None else None,
+    )
+
+
+def expanded_partition_minibatch(g: Graph, part: Partition, worker: int,
+                                 hops: int = 1, num_layers: int = 2) -> MiniBatch:
+    """Subgraph expansion (Xue/Angerd): add `hops` rings of remote neighbors so
+    boundary vertices keep their local structure; loss only on owned targets."""
+    owned = np.where(part.assignment == worker)[0]
+    verts = set(owned.tolist())
+    frontier = set(owned.tolist())
+    for _ in range(hops):
+        nxt = set()
+        for v in frontier:
+            for u in g.neighbors(v):
+                if int(u) not in verts:
+                    nxt.add(int(u))
+        verts |= nxt
+        frontier = nxt
+    all_verts = np.asarray(sorted(verts), np.int64)
+    sub, remap = g.subgraph(all_verts)
+    A = sub.to_dense_adj(normalized=True)
+    return MiniBatch(
+        targets=owned,  # loss restricted to owned vertices
+        layer_vertices=[all_verts] * (num_layers + 1),
+        layer_adj=[A] * num_layers,
+        input_features=g.features[all_verts] if g.features is not None else None,
+        labels=g.labels[owned] if g.labels is not None else None,
+    )
+
+
+@dataclasses.dataclass
+class LLCGSchedule:
+    """Learn Locally, Correct Globally (Ramezani et al.): each round, workers
+    take `local_steps` on their partition; a server then applies one global
+    full-graph correction step."""
+    local_steps: int = 5
+    rounds: int = 10
+
+    def plan(self) -> List[Tuple[str, int]]:
+        out = []
+        for r in range(self.rounds):
+            out.extend([("local", r)] * self.local_steps)
+            out.append(("global_correct", r))
+        return out

@@ -1,0 +1,145 @@
+"""Mini-batch samplers (survey §5): node-wise (GraphSAGE), layer-wise
+(FastGCN-style importance), and subgraph (GraphSAINT random walk).
+
+A MiniBatch carries the layered computation graph as dense block matrices
+(rows = targets of layer l, cols = sources of layer l-1) — TPU-friendly, and
+exactly the "computation graph generation" stage of the survey's pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+@dataclasses.dataclass
+class MiniBatch:
+    targets: np.ndarray  # [B] final-layer vertex ids (global)
+    layer_vertices: List[np.ndarray]  # L+1 frontiers, [0]=input layer
+    layer_adj: List[np.ndarray]  # L dense normalized blocks [n_l, n_{l-1}]
+    input_features: Optional[np.ndarray] = None
+    labels: Optional[np.ndarray] = None
+
+    @property
+    def num_input_vertices(self) -> int:
+        return len(self.layer_vertices[0])
+
+    def accessed_vertices(self) -> np.ndarray:
+        return np.unique(np.concatenate(self.layer_vertices))
+
+
+def _block_adj(g: Graph, rows: np.ndarray, cols: np.ndarray,
+               sampled_nbrs: List[np.ndarray]) -> np.ndarray:
+    col_pos = {int(c): j for j, c in enumerate(cols)}
+    A = np.zeros((len(rows), len(cols)), np.float32)
+    for i, nbrs in enumerate(sampled_nbrs):
+        for u in nbrs:
+            A[i, col_pos[int(u)]] = 1.0
+        # self loop
+        A[i, col_pos[int(rows[i])]] += 1.0
+    norm = A.sum(1, keepdims=True)
+    return A / np.maximum(norm, 1.0)
+
+
+def node_wise_sample(g: Graph, targets: np.ndarray, fanouts: Sequence[int],
+                     rng: np.random.Generator) -> MiniBatch:
+    """GraphSAGE: sample `fanout` neighbors per vertex per layer."""
+    layer_vertices = [np.asarray(targets, np.int64)]
+    per_layer_nbrs: List[List[np.ndarray]] = []
+    frontier = layer_vertices[0]
+    for fanout in fanouts:  # from top layer down
+        sampled = []
+        nxt = set(frontier.tolist())
+        for v in frontier:
+            nb = g.neighbors(v)
+            if len(nb) > fanout:
+                nb = rng.choice(nb, size=fanout, replace=False)
+            sampled.append(np.asarray(nb))
+            nxt.update(np.asarray(nb).tolist())
+        per_layer_nbrs.append(sampled)
+        frontier = np.asarray(sorted(nxt), np.int64)
+        layer_vertices.append(frontier)
+    # build blocks: layer l rows = layer_vertices[l], cols = layer_vertices[l+1]
+    layer_adj = []
+    for l, fanout in enumerate(fanouts):
+        layer_adj.append(_block_adj(g, layer_vertices[l], layer_vertices[l + 1],
+                                    per_layer_nbrs[l]))
+    # reorder: MiniBatch stores [input ... output]
+    layer_vertices = layer_vertices[::-1]
+    layer_adj = layer_adj[::-1]
+    return MiniBatch(
+        targets=np.asarray(targets, np.int64),
+        layer_vertices=layer_vertices,
+        layer_adj=layer_adj,
+        input_features=None if g.features is None else g.features[layer_vertices[0]],
+        labels=None if g.labels is None else g.labels[targets],
+    )
+
+
+def layer_wise_sample(g: Graph, targets: np.ndarray, layer_sizes: Sequence[int],
+                      rng: np.random.Generator) -> MiniBatch:
+    """FastGCN-style: per layer, sample a fixed vertex set with probability
+    proportional to degree; connect to the previous frontier."""
+    deg = g.degree().astype(np.float64)
+    p = deg / max(deg.sum(), 1)
+    layer_vertices = [np.asarray(targets, np.int64)]
+    per_layer_nbrs = []
+    frontier = layer_vertices[0]
+    for size in layer_sizes:
+        pool = rng.choice(g.num_vertices, size=min(size, g.num_vertices),
+                          replace=False, p=p)
+        pool_set = set(pool.tolist())
+        sampled = []
+        used = set()
+        for v in frontier:
+            nb = np.asarray([u for u in g.neighbors(v) if int(u) in pool_set])
+            sampled.append(nb)
+            used.update(nb.tolist())
+        used.update(frontier.tolist())
+        nxt = np.asarray(sorted(used), np.int64)
+        per_layer_nbrs.append(sampled)
+        layer_vertices.append(nxt)
+        frontier = nxt
+    layer_adj = []
+    for l in range(len(layer_sizes)):
+        layer_adj.append(_block_adj(g, layer_vertices[l], layer_vertices[l + 1],
+                                    per_layer_nbrs[l]))
+    layer_vertices = layer_vertices[::-1]
+    layer_adj = layer_adj[::-1]
+    return MiniBatch(
+        targets=np.asarray(targets, np.int64),
+        layer_vertices=layer_vertices,
+        layer_adj=layer_adj,
+        input_features=None if g.features is None else g.features[layer_vertices[0]],
+        labels=None if g.labels is None else g.labels[targets],
+    )
+
+
+def subgraph_sample(g: Graph, roots: np.ndarray, walk_length: int,
+                    rng: np.random.Generator, num_layers: int = 2) -> MiniBatch:
+    """GraphSAINT random-walk subgraph: induced subgraph over walk vertices;
+    all layers share the same (sub)adjacency."""
+    visited = set(np.asarray(roots).tolist())
+    cur = np.asarray(roots)
+    for _ in range(walk_length):
+        nxt = []
+        for v in cur:
+            nb = g.neighbors(v)
+            if len(nb):
+                nxt.append(int(rng.choice(nb)))
+        visited.update(nxt)
+        cur = np.asarray(nxt) if nxt else cur
+    verts = np.asarray(sorted(visited), np.int64)
+    sub, remap = g.subgraph(verts)
+    A = sub.to_dense_adj(normalized=True)
+    layer_vertices = [verts] * (num_layers + 1)
+    return MiniBatch(
+        targets=verts,
+        layer_vertices=layer_vertices,
+        layer_adj=[A] * num_layers,
+        input_features=None if g.features is None else g.features[verts],
+        labels=None if g.labels is None else g.labels[verts],
+    )

@@ -1,0 +1,388 @@
+"""End-to-end distributed GNN training (the survey's Fig. 2 pipeline):
+
+  full_graph_train   — full-graph training with a selectable execution model
+                       (one-shot / chunk) and protocol (sync broadcast/p2p or
+                       async historical embeddings with any staleness model).
+  minibatch_train    — sampling-based training with cache + execution model.
+  llcg_train         — partition-based batches + periodic global correction.
+
+All training math is jitted; protocol state (historical embeddings) is
+carried functionally. These run on one device (smoke) or under a mesh with
+the spmm execution models (multi-device tests / benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.models.gnn import (
+    accuracy,
+    full_graph_forward,
+    gnn_layer,
+    init_gnn_params,
+    minibatch_forward,
+    softmax_xent,
+)
+from repro.core.partition.edge_cut import PARTITIONERS, Partition
+from repro.core.protocols.async_hist import (
+    STALENESS_MODELS,
+    HistoricalState,
+    PipeGCNState,
+    pipegcn_mix,
+)
+from repro.core.sampling.cache import simulate_hit_ratio, static_degree_cache
+from repro.core.sampling.partition_batch import expanded_partition_minibatch, partition_minibatch
+from repro.core.sampling.samplers import MiniBatch, node_wise_sample
+
+
+# ---------------------------------------------------------------------------
+# shared bits
+# ---------------------------------------------------------------------------
+
+
+def _sgd(params, grads, lr):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def boundary_mask_for(g: Graph, part: Partition) -> np.ndarray:
+    """Vertices read by at least one remote partition (their embeddings cross
+    the wire during GA — the only rows that can ever be stale)."""
+    V = g.num_vertices
+    mask = np.zeros(V, bool)
+    for v in range(V):
+        pv = part.assignment[v]
+        for u in g.neighbors(v):
+            if part.assignment[u] != pv:
+                mask[u] = True
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Full-graph training
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FullGraphResult:
+    losses: List[float]
+    train_acc: float
+    test_acc: float
+    bytes_pushed: float = 0.0  # async protocols: rows refreshed * D * 4
+
+
+def full_graph_train(g: Graph, *, model: str = "gcn", hidden: int = 32,
+                     epochs: int = 60, lr: float = 0.5,
+                     protocol: str = "sync",
+                     staleness: int = 2, eps_v: float = 0.05,
+                     partition: Optional[Partition] = None,
+                     num_parts: int = 4, seed: int = 0) -> FullGraphResult:
+    """protocol: 'sync' | 'epoch_fixed' | 'epoch_adaptive' | 'variation'.
+
+    Async protocols reproduce the survey §7.2 semantics: the GA stage of every
+    layer reads historical embeddings for boundary vertices, refreshed per the
+    staleness model (bounded staleness); sync reads fresh embeddings.
+    """
+    A = jnp.asarray(g.to_dense_adj())
+    X = jnp.asarray(g.features)
+    y = jnp.asarray(g.labels.astype(np.int32))
+    train_m = jnp.asarray(g.train_mask.astype(np.float32))
+    test_m = jnp.asarray(g.test_mask.astype(np.float32))
+    num_classes = int(g.labels.max()) + 1
+    dims = [g.features.shape[1], hidden, num_classes]
+    params = init_gnn_params(model, dims, jax.random.PRNGKey(seed))
+
+    if protocol == "sync":
+        def loss_fn(p):
+            logits = full_graph_forward(model, p, A, X)
+            return softmax_xent(logits, y, train_m), logits
+
+        @jax.jit
+        def step(p, _):
+            (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+            return _sgd(p, grads, lr), loss, logits
+
+        losses = []
+        logits = None
+        for e in range(epochs):
+            params, loss, logits = step(params, e)
+            losses.append(float(loss))
+        return FullGraphResult(losses, float(accuracy(logits, y, train_m)),
+                               float(accuracy(logits, y, test_m)))
+
+    if protocol == "pipegcn":
+        return _pipegcn_train(g, model=model, hidden=hidden, epochs=epochs, lr=lr,
+                              partition=partition, num_parts=num_parts, seed=seed)
+
+    # --- async with historical embeddings ---
+    part = partition or PARTITIONERS["metis_like"](g, num_parts, seed=seed)
+    assignment = jnp.asarray(part.assignment.astype(np.int32))
+    bmask = jnp.asarray(boundary_mask_for(g, part))
+    refresh_fn = STALENESS_MODELS[protocol]
+    kw = {"staleness": staleness} if protocol != "variation" else {"eps": eps_v}
+    L = len(dims) - 1
+    states = [HistoricalState.create(g.num_vertices, d, part.num_parts)
+              for d in dims[1:]]
+
+    def forward_with_hist(p, states, step_i):
+        H = X
+        new_states = []
+        for l, pl in enumerate(p["layers"]):
+            H = gnn_layer(model, pl, A, H, last=(l == L - 1))
+            H_used, st2 = refresh_fn(states[l], H, step_i, assignment, bmask, **kw)
+            new_states.append(st2)
+            H = H_used
+        return H, new_states
+
+    def loss_fn(p, states, step_i):
+        logits, new_states = forward_with_hist(p, states, step_i)
+        return softmax_xent(logits, y, train_m), (logits, new_states)
+
+    @jax.jit
+    def step(p, states, step_i):
+        (loss, (logits, new_states)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, states, step_i)
+        return _sgd(p, grads, lr), new_states, loss, logits
+
+    losses = []
+    logits = None
+    for e in range(epochs):
+        params, states, loss, logits = step(params, states, jnp.asarray(e))
+        losses.append(float(loss))
+    return FullGraphResult(losses, float(accuracy(logits, y, train_m)),
+                           float(accuracy(logits, y, test_m)),
+                           bytes_pushed=float(states[-1].bytes_pushed))
+
+
+# ---------------------------------------------------------------------------
+# Mini-batch training
+# ---------------------------------------------------------------------------
+
+
+def _pad_pow2(n: int, lo: int = 8) -> int:
+    m = lo
+    while m < n:
+        m *= 2
+    return m
+
+
+def _device_batch(mb: MiniBatch) -> Tuple:
+    """Pad frontiers to pow2 buckets so jit retraces stay bounded."""
+    adjs, self_idx, sizes = [], [], []
+    lv = mb.layer_vertices
+    for l, A in enumerate(mb.layer_adj):
+        rows = lv[l + 1]
+        cols = lv[l]
+        nr, nc = _pad_pow2(len(rows)), _pad_pow2(len(cols))
+        Ap = np.zeros((nr, nc), np.float32)
+        Ap[: A.shape[0], : A.shape[1]] = A
+        adjs.append(jnp.asarray(Ap))
+        si = np.searchsorted(cols, rows)
+        si = np.clip(si, 0, len(cols) - 1)
+        sip = np.zeros(nr, np.int64)
+        sip[: len(si)] = si
+        self_idx.append(jnp.asarray(sip))
+        sizes.append((A.shape[0], A.shape[1]))
+    n_in = _pad_pow2(mb.input_features.shape[0])
+    X = np.zeros((n_in, mb.input_features.shape[1]), np.float32)
+    X[: mb.input_features.shape[0]] = mb.input_features
+    nt = _pad_pow2(len(mb.targets))
+    yb = np.zeros(nt, np.int32)
+    yb[: len(mb.targets)] = mb.labels
+    wb = np.zeros(nt, np.float32)
+    wb[: len(mb.targets)] = 1.0
+    return tuple(adjs), tuple(self_idx), jnp.asarray(X), jnp.asarray(yb), jnp.asarray(wb)
+
+
+@dataclasses.dataclass
+class MiniBatchResult:
+    losses: List[float]
+    test_acc: float
+    cache_hit_ratio: float
+
+
+def minibatch_train(g: Graph, *, model: str = "sage", hidden: int = 32,
+                    fanouts=(5, 5), batch_size: int = 32, epochs: int = 3,
+                    lr: float = 0.1, cache_capacity: int = 0,
+                    seed: int = 0) -> MiniBatchResult:
+    rng = np.random.default_rng(seed)
+    num_classes = int(g.labels.max()) + 1
+    dims = [g.features.shape[1]] + [hidden] * (len(fanouts) - 1) + [num_classes]
+    params = init_gnn_params(model, dims, jax.random.PRNGKey(seed))
+    train = np.where(g.train_mask)[0]
+    cached = set(static_degree_cache(g, cache_capacity).tolist()) if cache_capacity else set()
+    hits = total = 0
+
+    @functools.partial(jax.jit, static_argnums=())
+    def step(p, adjs, self_idx, X, yb, wb):
+        def lf(p):
+            logits = minibatch_forward(model, p, list(adjs), list(self_idx), X)
+            return softmax_xent(logits, yb, wb)
+
+        loss, grads = jax.value_and_grad(lf)(p)
+        return _sgd(p, grads, lr), loss
+
+    losses = []
+    for _ in range(epochs):
+        perm = rng.permutation(train)
+        for i in range(0, len(perm) - batch_size + 1, batch_size):
+            mb = node_wise_sample(g, perm[i : i + batch_size], fanouts, rng)
+            for v in mb.layer_vertices[0]:
+                hits += int(v) in cached
+                total += 1
+            adjs, self_idx, X, yb, wb = _device_batch(mb)
+            params, loss = step(params, adjs, self_idx, X, yb, wb)
+            losses.append(float(loss))
+    # full-graph eval
+    A = jnp.asarray(g.to_dense_adj())
+    logits = full_graph_forward(model, params, A, jnp.asarray(g.features))
+    acc = float(accuracy(logits, jnp.asarray(g.labels.astype(np.int32)),
+                         jnp.asarray(g.test_mask.astype(np.float32))))
+    return MiniBatchResult(losses, acc, hits / max(total, 1))
+
+
+# ---------------------------------------------------------------------------
+# LLCG (partition-based batches + global correction)
+# ---------------------------------------------------------------------------
+
+
+def llcg_train(g: Graph, *, model: str = "gcn", hidden: int = 32,
+               num_parts: int = 4, rounds: int = 10, local_steps: int = 5,
+               server_correct: bool = True, expand_hops: int = 0,
+               lr: float = 0.5, seed: int = 0) -> FullGraphResult:
+    """Learn-Locally-Correct-Globally: workers train on their partition batch
+    (optionally expanded); the server periodically takes one full-graph step.
+    server_correct=False reproduces plain PSGD-PA (the accuracy-loss baseline
+    of §5.2)."""
+    part = PARTITIONERS["metis_like"](g, num_parts, seed=seed)
+    num_classes = int(g.labels.max()) + 1
+    dims = [g.features.shape[1], hidden, num_classes]
+    params = init_gnn_params(model, dims, jax.random.PRNGKey(seed))
+    make_mb = (functools.partial(expanded_partition_minibatch, hops=expand_hops)
+               if expand_hops else partition_minibatch)
+    local_batches = []
+    for w in range(num_parts):
+        mb = make_mb(g, part, w)
+        owned_local = np.searchsorted(mb.layer_vertices[0], mb.targets)
+        local_batches.append((jnp.asarray(mb.layer_adj[0]),
+                              jnp.asarray(mb.input_features),
+                              jnp.asarray(mb.labels.astype(np.int32)),
+                              jnp.asarray(owned_local)))
+    A = jnp.asarray(g.to_dense_adj())
+    X = jnp.asarray(g.features)
+    y = jnp.asarray(g.labels.astype(np.int32))
+    train_m = jnp.asarray(g.train_mask.astype(np.float32))
+    test_m = jnp.asarray(g.test_mask.astype(np.float32))
+
+    @jax.jit
+    def local_step(p, A_l, X_l, y_l, owned):
+        def lf(p):
+            logits = full_graph_forward(model, p, A_l, X_l)
+            return softmax_xent(logits[owned], y_l)
+
+        loss, grads = jax.value_and_grad(lf)(p)
+        return grads, loss
+
+    @jax.jit
+    def global_step(p):
+        def lf(p):
+            logits = full_graph_forward(model, p, A, X)
+            return softmax_xent(logits, y, train_m), logits
+
+        (loss, logits), grads = jax.value_and_grad(lf, has_aux=True)(p)
+        return _sgd(p, grads, lr), loss, logits
+
+    losses = []
+    logits = None
+    for r in range(rounds):
+        for _ in range(local_steps):
+            grad_acc = None
+            loss_sum = 0.0
+            for (A_l, X_l, y_l, owned) in local_batches:
+                grads, loss = local_step(params, A_l, X_l, y_l, owned)
+                loss_sum += float(loss)
+                grad_acc = grads if grad_acc is None else jax.tree_util.tree_map(
+                    jnp.add, grad_acc, grads)
+            grad_acc = jax.tree_util.tree_map(lambda x: x / num_parts, grad_acc)
+            params = _sgd(params, grad_acc, lr)
+            losses.append(loss_sum / num_parts)
+        if server_correct:
+            params, loss, logits = global_step(params)
+            losses.append(float(loss))
+    if logits is None:
+        logits = full_graph_forward(model, params, A, X)
+    return FullGraphResult(losses, float(accuracy(logits, y, train_m)),
+                           float(accuracy(logits, y, test_m)))
+
+
+def _pipegcn_train(g: Graph, *, model: str, hidden: int, epochs: int, lr: float,
+                   partition: Optional[Partition], num_parts: int, seed: int
+                   ) -> FullGraphResult:
+    """PipeGCN (survey Table 3): staleness-1 boundary embeddings in GA AND
+    staleness-1 boundary gradients in grad-GA, via the pipegcn_mix custom-vjp
+    primitive. Communication accounting: every epoch pushes boundary rows of
+    embeddings + gradients once (the overlapped pipeline payload)."""
+    A = jnp.asarray(g.to_dense_adj())
+    X = jnp.asarray(g.features)
+    y = jnp.asarray(g.labels.astype(np.int32))
+    train_m = jnp.asarray(g.train_mask.astype(np.float32))
+    test_m = jnp.asarray(g.test_mask.astype(np.float32))
+    num_classes = int(g.labels.max()) + 1
+    dims = [g.features.shape[1], hidden, num_classes]
+    L = len(dims) - 1
+    params = init_gnn_params(model, dims, jax.random.PRNGKey(seed))
+    part = partition or PARTITIONERS["metis_like"](g, num_parts, seed=seed)
+    bmask_f = jnp.asarray(boundary_mask_for(g, part).astype(np.float32))
+    V = g.num_vertices
+    hist_h = [jnp.zeros((V, d), jnp.float32) for d in dims[1:]]
+    hist_g = [jnp.zeros((V, d), jnp.float32) for d in dims[1:]]
+
+    def loss_fn_mask(p, hist_h, hist_g, mask_f):
+        H = X
+        outs = []
+        for l, pl in enumerate(p["layers"]):
+            H = gnn_layer(model, pl, A, H, last=(l == L - 1))
+            if l < L - 1:  # only embeddings consumed by the NEXT aggregation
+                H = pipegcn_mix(H, hist_h[l], hist_g[l], mask_f)
+            outs.append(H)
+        return softmax_xent(H, y, train_m), outs
+
+    def loss_fn(p, hist_h, hist_g):
+        return loss_fn_mask(p, hist_h, hist_g, bmask_f)
+
+    @jax.jit
+    def step(p, hist_h, hist_g):
+        (loss, outs), (grads_p, fresh_g) = jax.value_and_grad(
+            loss_fn, argnums=(0, 2), has_aux=True)(p, hist_h, hist_g)
+        p2 = _sgd(p, grads_p, lr)
+        new_hist_h = [jax.lax.stop_gradient(o) for o in outs]
+        return p2, new_hist_h, list(fresh_g), loss, outs[-1]
+
+    losses = []
+    logits = None
+    zero_mask = jnp.zeros_like(bmask_f)
+    for e in range(epochs):
+        if e == 0:
+            # PipeGCN warm-up epoch: run sync (no staleness) to initialize the
+            # historical embeddings/gradients, as in the original system.
+            (loss, outs), (grads_p, fresh_g) = jax.value_and_grad(
+                lambda p, hh, hg: loss_fn_mask(p, hh, hg, zero_mask),
+                argnums=(0, 2), has_aux=True)(params, hist_h, hist_g)
+            params = _sgd(params, grads_p, lr)
+            hist_h = [jax.lax.stop_gradient(o) for o in outs]
+            hist_g = list(fresh_g)
+            losses.append(float(loss))
+            logits = outs[-1]
+            continue
+        params, hist_h, hist_g, loss, logits = step(params, hist_h, hist_g)
+        losses.append(float(loss))
+    rows = float(bmask_f.sum())
+    bytes_pushed = epochs * rows * sum(dims[1:]) * 4.0 * 2  # h and g per epoch
+    return FullGraphResult(losses, float(accuracy(logits, y, train_m)),
+                           float(accuracy(logits, y, test_m)),
+                           bytes_pushed=bytes_pushed)

@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    batch_logical_axes,
+    input_specs,
+    make_batch,
+    synthetic_token_stream,
+)
+
+__all__ = ["batch_logical_axes", "input_specs", "make_batch", "synthetic_token_stream"]

@@ -1,0 +1,175 @@
+"""Data pipeline: deterministic synthetic streams + the single source of truth
+for model input signatures.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input of an (architecture x input-shape) pair — weak-type-correct, shardable,
+no device allocation — used by the AOT dry-run (DESIGN.md deliverable e).
+``make_batch`` produces concrete arrays with the same structure for real
+training/serving; a structural test asserts they agree.
+
+Modality frontends are stubs per the assignment: for [audio]/[vlm] archs the
+pipeline emits precomputed frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.kvcache import cache_logical_axes, init_cache
+
+
+def _positions_struct(cfg, B, S, concrete: bool):
+    if cfg.rope_style == "mrope":
+        if concrete:
+            # text-style M-RoPE positions: all three components equal
+            p = np.broadcast_to(np.arange(S, dtype=np.int32)[None, None], (3, B, S))
+            return jnp.asarray(p)
+        return jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if concrete:
+        return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+
+def _enc_dec_split(cfg, S: int) -> Tuple[int, int]:
+    """Training shape for enc-dec archs: split seq budget into enc/dec halves."""
+    return S // 2, S // 2
+
+
+def make_train_batch(cfg: ModelConfig, shape: ShapeConfig, *, concrete: bool,
+                     rng: np.random.Generator = None) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        S_enc, S_dec = _enc_dec_split(cfg, S)
+        if concrete:
+            batch["enc_embeds"] = jnp.asarray(
+                rng.standard_normal((B, S_enc, cfg.d_model), np.float32) * 0.02, jnp.bfloat16)
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S_dec)), jnp.int32)
+            batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S_dec)), jnp.int32)
+        else:
+            batch["enc_embeds"] = jax.ShapeDtypeStruct((B, S_enc, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S_dec), jnp.int32)
+            batch["labels"] = jax.ShapeDtypeStruct((B, S_dec), jnp.int32)
+        batch["positions"] = _positions_struct(cfg, B, S_dec, concrete)
+        return batch
+    if cfg.input_mode == "embeddings":
+        if concrete:
+            batch["embeds"] = jnp.asarray(
+                rng.standard_normal((B, S, cfg.d_model), np.float32) * 0.02, jnp.bfloat16)
+        else:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        if concrete:
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if concrete:
+        batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    else:
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch["positions"] = _positions_struct(cfg, B, S, concrete)
+    return batch
+
+
+def make_prefill_batch(cfg: ModelConfig, shape: ShapeConfig, *, concrete: bool,
+                       rng: np.random.Generator = None) -> Dict[str, Any]:
+    b = make_train_batch(cfg, shape, concrete=concrete, rng=rng)
+    b.pop("labels", None)
+    return b
+
+
+def make_decode_inputs(cfg: ModelConfig, shape: ShapeConfig, *, concrete: bool,
+                       rng: np.random.Generator = None):
+    """Returns (cache, tokens [B,1], pos scalar). Cache holds shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = _enc_dec_split(cfg, S)[0] if cfg.is_encoder_decoder else 0
+    cache = init_cache(cfg, B, S, enc_len=enc_len, mode="zeros" if concrete else "shape")
+    if concrete:
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+        pos = jnp.asarray(S - 1, jnp.int32)
+    else:
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    if shape.kind == "train":
+        return {"batch": make_train_batch(cfg, shape, concrete=False)}
+    if shape.kind == "prefill":
+        return {"batch": make_prefill_batch(cfg, shape, concrete=False)}
+    cache, tokens, pos = make_decode_inputs(cfg, shape, concrete=False)
+    return {"cache": cache, "tokens": tokens, "pos": pos}
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    if shape.kind == "train":
+        return {"batch": make_train_batch(cfg, shape, concrete=True, rng=rng)}
+    if shape.kind == "prefill":
+        return {"batch": make_prefill_batch(cfg, shape, concrete=True, rng=rng)}
+    cache, tokens, pos = make_decode_inputs(cfg, shape, concrete=True, rng=rng)
+    return {"cache": cache, "tokens": tokens, "pos": pos}
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeConfig):
+    """Logical axes mirroring input_specs, for in_shardings."""
+    pos_axes = (None, "act_batch", "act_seq") if cfg.rope_style == "mrope" else ("act_batch", "act_seq")
+    if shape.kind in ("train", "prefill"):
+        axes: Dict[str, Any] = {}
+        if cfg.is_encoder_decoder:
+            axes["enc_embeds"] = ("act_batch", None, "act_embed")
+            axes["tokens"] = ("act_batch", "act_seq")
+            if shape.kind == "train":
+                axes["labels"] = ("act_batch", "act_seq")
+            axes["positions"] = pos_axes
+            return {"batch": axes}
+        if cfg.input_mode == "embeddings":
+            axes["embeds"] = ("act_batch", "act_seq", "act_embed")
+        else:
+            axes["tokens"] = ("act_batch", "act_seq")
+        if shape.kind == "train":
+            axes["labels"] = ("act_batch", "act_seq")
+        axes["positions"] = pos_axes
+        return {"batch": axes}
+    S = shape.seq_len
+    enc_len = _enc_dec_split(cfg, S)[0] if cfg.is_encoder_decoder else 0
+    return {
+        "cache": cache_logical_axes(cfg, shape.global_batch, S, enc_len),
+        "tokens": ("act_batch", None),
+        "pos": (),
+    }
+
+
+def synthetic_token_stream(vocab_size: int, batch: int, seq_len: int, seed: int = 0,
+                           pattern_len: int = 16, noise: float = 0.02
+                           ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Deterministic LM data: each sequence tiles a random `pattern_len`-token
+    pattern (plus a little noise) — an induction-head task a transformer
+    cracks within a few hundred steps, so end-to-end training drivers have a
+    visible convergence signal. labels = next-token."""
+    rng = np.random.default_rng(seed)
+    pattern_len = min(pattern_len, max(seq_len // 4, 2))
+    # Zipf-skewed vocabulary: gives an immediately-learnable unigram signal
+    # (loss falls within tens of steps) on top of the copy structure.
+    ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+    probs = 1.0 / (ranks + 8.0)
+    probs /= probs.sum()
+    while True:
+        pat = rng.choice(vocab_size, size=(batch, pattern_len), p=probs)
+        reps = (seq_len + 1) // pattern_len + 1
+        seq = np.tile(pat, (1, reps))[:, : seq_len + 1]
+        noise_tok = rng.integers(0, vocab_size, seq.shape)
+        mask = rng.random(seq.shape) < noise
+        seq = np.where(mask, noise_tok, seq).astype(np.int32)
+        yield {
+            "tokens": jnp.asarray(seq[:, :-1]),
+            "labels": jnp.asarray(seq[:, 1:]),
+            "positions": jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32)[None],
+                                          (batch, seq_len)),
+        }

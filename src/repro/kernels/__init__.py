@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) with jnp oracles.
+
+Kernels: ell_spmm (GNN aggregation), sddmm (GAT edge scores),
+flash_attention (transformer prefill), wkv_chunk (RWKV6 chunked scan).
+Validated in interpret mode on CPU; dispatched natively on TPU via ops.py.
+"""
+from repro.kernels.ops import ell_spmm, flash_attention, sddmm, wkv
+
+__all__ = ["ell_spmm", "flash_attention", "sddmm", "wkv"]

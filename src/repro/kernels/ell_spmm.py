@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: ELLPACK SpMM (neighbor aggregation).
+
+TPU adaptation of CSR gather-SpMM (DESIGN.md §2): neighbor lists are padded to
+width K (ELLPACK), so per row-block the aggregation is a dense gather +
+masked reduction over lanes the MXU/VPU handle natively. The feature matrix
+block assigned to a grid row (partition-centric processing, PCGCN-style) is
+resident in VMEM; rows/features are tiled by BlockSpec.
+
+Grid: (num_row_blocks, num_feat_blocks). Per invocation:
+  ids   [Rb, K]   int32 (VMEM)   — neighbor ids into H
+  mask  [Rb, K]   f32   (VMEM)
+  H     [N, Fb]   f32   (VMEM)   — the feature block (all rows, one col block)
+  out   [Rb, Fb]  f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ell_spmm_kernel(ids_ref, mask_ref, h_ref, out_ref, *, normalize: bool):
+    ids = ids_ref[...]  # [Rb, K]
+    mask = mask_ref[...]
+    h = h_ref[...]  # [N, Fb]
+    gathered = jnp.take(h, ids, axis=0)  # [Rb, K, Fb] — dynamic-gather on TPU
+    acc = jnp.sum(mask[..., None] * gathered, axis=1)  # [Rb, Fb] f32
+    if normalize:
+        deg = jnp.sum(mask, axis=1, keepdims=True)
+        acc = acc / jnp.maximum(deg, 1.0)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def ell_spmm_pallas(ids: jnp.ndarray, mask: jnp.ndarray, H: jnp.ndarray, *,
+                    row_block: int = 128, feat_block: int = 128,
+                    normalize: bool = True, interpret: bool = False) -> jnp.ndarray:
+    V, K = ids.shape
+    N, D = H.shape
+    row_block = min(row_block, V)
+    feat_block = min(feat_block, D)
+    assert V % row_block == 0 and D % feat_block == 0, (V, row_block, D, feat_block)
+    grid = (V // row_block, D // feat_block)
+    kernel = functools.partial(_ell_spmm_kernel, normalize=normalize)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_block, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((N, feat_block), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((row_block, feat_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((V, D), H.dtype),
+        interpret=interpret,
+    )(ids, mask.astype(jnp.float32), H)

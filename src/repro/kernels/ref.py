@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(ids: jnp.ndarray, mask: jnp.ndarray, H: jnp.ndarray,
+                 *, normalize: bool = True) -> jnp.ndarray:
+    """ELLPACK aggregation. ids [V,K] int32 (padded entries point anywhere but
+    are masked), mask [V,K] float, H [N,D]. y[v] = sum_k mask[v,k] H[ids[v,k]]
+    (normalized by degree if requested)."""
+    gathered = H[ids]  # [V,K,D]
+    y = (mask[..., None] * gathered).sum(1)
+    if normalize:
+        deg = mask.sum(1, keepdims=True)
+        y = y / jnp.maximum(deg, 1.0)
+    return y
+
+
+def sddmm_ref(ids: jnp.ndarray, mask: jnp.ndarray, Hw: jnp.ndarray,
+              a_src: jnp.ndarray, a_dst: jnp.ndarray,
+              *, slope: float = 0.2) -> jnp.ndarray:
+    """GAT edge scores on ELL structure: e[v,k] = LeakyReLU(a_dst.Hw[v] +
+    a_src.Hw[ids[v,k]]), masked entries -> -inf (pre-softmax)."""
+    s_dst = Hw @ a_dst  # [V]
+    s_src = (Hw @ a_src)[ids]  # [V,K]
+    e = s_dst[:, None] + s_src
+    e = jnp.where(e > 0, e, slope * e)
+    return jnp.where(mask > 0, e, -1e30)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True) -> jnp.ndarray:
+    """q,k,v [B,H,S,D] -> [B,H,S,D], fp32 softmax."""
+    S = q.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s / (q.shape[-1] ** 0.5)
+    if causal:
+        m = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def wkv_chunk_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  g: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """RWKV6 WKV oracle, naive per-step recurrence.
+    r,k [B,H,S,K]; v [B,H,S,K]; g [B,H,S,K] log-decay (<=0); u [H,K] bonus.
+    Returns y [B,H,S,K]."""
+    B, H, S, K = r.shape
+    rf = r.reshape(B * H, S, K).astype(jnp.float32)
+    kf = k.reshape(B * H, S, K).astype(jnp.float32)
+    vf = v.reshape(B * H, S, K).astype(jnp.float32)
+    gf = g.reshape(B * H, S, K).astype(jnp.float32)
+    uf = jnp.broadcast_to(u.astype(jnp.float32), (B, H, K)).reshape(B * H, K)
+
+    def per_bh(rb, kb, vb, gb, ub):
+        def step(state, inp):
+            rt, kt, vt, gt = inp
+            kv = jnp.outer(kt, vt)
+            y = rt @ (state + ub[:, None] * kv)
+            state = jnp.exp(gt)[:, None] * state + kv
+            return state, y
+
+        _, ys = jax.lax.scan(step, jnp.zeros((K, K), jnp.float32),
+                             (rb, kb, vb, gb))
+        return ys
+
+    return jax.vmap(per_bh)(rf, kf, vf, gf, uf).reshape(B, H, S, K).astype(r.dtype)

@@ -1,0 +1,112 @@
+"""Serving driver: sharded serve_step / prefill builders and a batched-request
+decode loop used by examples/serve_llm.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_shape, get_smoke_config
+from repro.data.pipeline import batch_logical_axes
+from repro.launch.sharding import make_rules, sharding_for_tree, use_rules
+from repro.models import transformer as T
+from repro.models.kvcache import cache_logical_axes, init_cache
+from repro.models.transformer import ServeOptions
+from repro.utils import get_logger
+
+log = get_logger("repro.serve")
+
+
+def decode_rules_overrides(cfg, shape, mesh) -> Dict[str, Any]:
+    """Shape-dependent rule overrides for decode:
+    - long-context batch=1: batch unshardable -> shard the KV-cache sequence
+      axis over 'data' (flash-decode path).
+    - otherwise shard batch, replicate cache seq."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_ways = sizes.get("data", 1) * sizes.get("pod", 1)
+    if shape.global_batch % batch_ways != 0:
+        return {"act_batch": None, "act_kv_seq": ("data",)}
+    return {}
+
+
+def serve_options_for(cfg, shape, mesh) -> ServeOptions:
+    ov = decode_rules_overrides(cfg, shape, mesh)
+    return ServeOptions(seq_sharded_cache=("act_kv_seq" in ov and ov["act_kv_seq"] is not None))
+
+
+def make_sharded_serve_step(cfg, mesh, shape, *, opts: Optional[ServeOptions] = None,
+                            donate: bool = True):
+    rules_ov = decode_rules_overrides(cfg, shape, mesh)
+    rules = make_rules(cfg, mesh, rules_ov)
+    opts = opts if opts is not None else serve_options_for(cfg, shape, mesh)
+    enc_len = shape.seq_len // 2 if cfg.is_encoder_decoder else 0
+    c_axes = cache_logical_axes(cfg, shape.global_batch, shape.seq_len, enc_len)
+    cache_sh = sharding_for_tree(c_axes, mesh, rules)
+    tok_sh = sharding_for_tree(("act_batch", None), mesh, rules)
+    logits_sh = sharding_for_tree(("act_batch", "act_vocab"), mesh, rules)
+
+    def wrapped(params, cache, tokens, pos):
+        with use_rules(mesh, rules):
+            return T.serve_step(cfg, params, cache, tokens, pos, opts)
+
+    from repro.models.transformer import param_logical_axes
+
+    params_sh = sharding_for_tree(param_logical_axes(cfg), mesh, rules)
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(params_sh, cache_sh, tok_sh, None),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted, params_sh, cache_sh, rules, opts
+
+
+def greedy_decode(cfg, params, prompt_tokens: jnp.ndarray, max_new: int,
+                  *, max_len: Optional[int] = None, temperature: float = 0.0,
+                  key=None):
+    """Single-host greedy/sampling decode for the examples: prefill the prompt
+    token-by-token then generate max_new tokens. Returns [B, max_new]."""
+    B, S0 = prompt_tokens.shape
+    max_len = max_len or (S0 + max_new)
+    cache = init_cache(cfg, B, max_len, enc_len=max(S0, 1))
+    step = jax.jit(lambda p, c, t, pos: T.serve_step(cfg, p, c, t, pos))
+    tok = prompt_tokens[:, :1]
+    out = []
+    logits = None
+    for i in range(S0 + max_new - 1):
+        logits, cache = step(params, cache, tok, jnp.asarray(i, jnp.int32))
+        if i + 1 < S0:
+            tok = prompt_tokens[:, i + 1 : i + 2]
+        else:
+            if temperature > 0 and key is not None:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / temperature)[:, None]
+            else:
+                tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    cfg = get_smoke_config(args.arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.ones((args.batch, args.prompt_len), jnp.int32)
+    t0 = time.time()
+    toks = greedy_decode(cfg, params, prompt, args.max_new)
+    log.info("decoded %s tokens in %.2fs: %s", toks.shape, time.time() - t0,
+             np.asarray(toks)[0, :8])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Logical-axis sharding: the single place where model code meets the mesh.
+
+Model code annotates tensors with *logical* axis names via ``logical(x, ...)``
+and declares parameter logical axes through the ParamBuilder. The launcher
+activates a (mesh, rules) context; outside a context, annotations are no-ops,
+which is what CPU smoke tests use.
+
+Rules map logical names -> mesh axis (or tuple of axes, or None). They are
+computed per (config, mesh) because e.g. GQA KV heads smaller than the model
+axis must be replicated, not unevenly sharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+# Baseline rules: data-parallel batch (composed with the pod axis when it
+# exists), tensor-parallel heads/ffn/experts/vocab, FSDP (ZeRO-3) on the
+# d_model ("embed") dim of weights over the data axis.
+DEFAULT_RULES: Dict[str, AxisRule] = {
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_res_seq": None,  # residual-stream seq dim; 'model' => Megatron-SP
+    "act_kv_seq": None,  # overridden to ("data",) for seq-sharded decode caches
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_ff": "model",
+    "act_vocab": "model",
+    "act_expert": "model",
+    # params
+    "layer": None,
+    "embed": "data",  # FSDP dim
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head": None,
+    "mlp": "model",
+    "expert": "model",
+    "expert_embed": "data",  # FSDP dim of expert weights (train layout)
+    "expert_mlp": None,  # expert inner dim: experts already consume 'model'
+    "kv_lora": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, AxisRule]] = None
+
+
+_CTX = _Ctx()
+
+
+def make_rules(cfg: Any, mesh: Mesh, overrides: Optional[Dict[str, AxisRule]] = None) -> Dict[str, AxisRule]:
+    """Compute config/mesh-aware rules (divisibility-safe)."""
+    rules = dict(DEFAULT_RULES)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = axis_sizes.get("model", 1)
+    data_size = axis_sizes.get("data", 1) * axis_sizes.get("pod", 1)
+    if "pod" not in axis_sizes:
+        rules["act_batch"] = ("data",)
+
+    def drop_if_indivisible(name: str, dim: int, axis: str = "model"):
+        if dim and dim % axis_sizes.get(axis, 1) != 0:
+            rules[name] = None
+
+    drop_if_indivisible("kv_heads", getattr(cfg, "num_kv_heads", 0))
+    drop_if_indivisible("act_kv_heads", getattr(cfg, "num_kv_heads", 0))
+    drop_if_indivisible("heads", getattr(cfg, "num_heads", 0))
+    drop_if_indivisible("act_heads", getattr(cfg, "num_heads", 0))
+    drop_if_indivisible("expert", getattr(cfg, "num_experts", 0))
+    drop_if_indivisible("act_expert", getattr(cfg, "num_experts", 0))
+    drop_if_indivisible("mlp", getattr(cfg, "d_ff", 0))
+    drop_if_indivisible("act_ff", getattr(cfg, "d_ff", 0))
+    drop_if_indivisible("vocab", getattr(cfg, "vocab_size", 0))
+    drop_if_indivisible("act_vocab", getattr(cfg, "vocab_size", 0))
+    drop_if_indivisible("kv_lora", getattr(cfg, "kv_lora_rank", 0))
+    drop_if_indivisible("ssm_heads", getattr(cfg, "ssm_heads", 0))
+    if getattr(cfg, "d_model", 0) and cfg.d_model % max(data_size, 1) != 0:
+        rules["embed"] = None
+        rules["expert_embed"] = None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, AxisRule]]):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def active_rules() -> Optional[Dict[str, AxisRule]]:
+    return _CTX.rules
+
+
+def spec_for(axes: Sequence[Optional[str]], rules: Optional[Dict[str, AxisRule]] = None) -> P:
+    rules = rules if rules is not None else (_CTX.rules or {})
+    parts = []
+    for name in axes:
+        rule = rules.get(name) if name is not None else None
+        parts.append(rule)
+    return P(*parts)
+
+
+def logical(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without an active context)."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    assert len(axes) == x.ndim, f"{axes} vs rank {x.ndim}"
+    spec = spec_for(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def sharding_for_tree(axes_tree: Any, mesh: Mesh, rules: Dict[str, AxisRule]):
+    """Build a NamedSharding pytree from a logical-axes pytree."""
+
+    def one(axes):
+        return NamedSharding(mesh, spec_for(axes, rules))
+
+    return jax.tree_util.tree_map(one, axes_tree, is_leaf=lambda t: isinstance(t, tuple))

@@ -1,0 +1,140 @@
+"""Distributed training driver: sharded train state, train_step builder, and a
+CLI training loop (used by examples/ and the multi-pod dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_latest, save_checkpoint
+from repro.configs import get_config, get_shape, get_smoke_config
+from repro.data.pipeline import batch_logical_axes, make_batch, synthetic_token_stream
+from repro.launch.sharding import make_rules, sharding_for_tree, use_rules
+from repro.models import transformer as T
+from repro.optim import Optimizer, clip_by_global_norm, cosine_schedule, make_optimizer
+from repro.utils import get_logger, human_count, tree_num_params
+
+log = get_logger("repro.train")
+
+
+def make_train_state_specs(cfg, optimizer: Optimizer):
+    """Abstract state + logical axes (no allocation)."""
+    abs_params = T.abstract_params(cfg)
+    p_axes = T.param_logical_axes(cfg)
+    abs_opt = jax.eval_shape(optimizer.init, abs_params)
+    o_axes = optimizer.state_logical_axes(p_axes, abs_params)
+    state = {"params": abs_params, "opt": abs_opt,
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    axes = {"params": p_axes, "opt": o_axes, "step": ()}
+    return state, axes
+
+
+def make_train_step(cfg, optimizer: Optimizer, *, clip_norm: float = 1.0, window: int = 0):
+    def train_step(state, batch):
+        def lf(params):
+            return T.loss_fn(cfg, params, batch, window=window)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt2 = optimizer.update(grads, state["opt"], state["params"], state["step"])
+        params2 = jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                         state["params"], updates)
+        new_state = {"params": params2, "opt": opt2, "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg, optimizer: Optimizer, key):
+    params = T.init_params(cfg, key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_sharded_train_step(cfg, optimizer: Optimizer, mesh, shape, *,
+                            rules_overrides=None, clip_norm: float = 1.0,
+                            window: int = 0, donate: bool = True):
+    """Returns (jitted step fn wrapped in the rules context, state sharding,
+    batch sharding, rules)."""
+    rules = make_rules(cfg, mesh, rules_overrides)
+    _, state_axes = make_train_state_specs(cfg, optimizer)
+    state_sh = sharding_for_tree(state_axes, mesh, rules)
+    batch_axes = batch_logical_axes(cfg, shape)
+    batch_sh = sharding_for_tree(batch_axes, mesh, rules)
+    raw_step = make_train_step(cfg, optimizer, clip_norm=clip_norm, window=window)
+
+    def wrapped(state, batch):
+        with use_rules(mesh, rules):
+            return raw_step(state, batch["batch"] if "batch" in batch else batch)
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, state_sh, batch_sh, rules
+
+
+def default_optimizer(cfg, *, base_lr=3e-4, warmup=100, total=10000) -> Optimizer:
+    return make_optimizer(cfg.optimizer, cosine_schedule(base_lr, warmup, total))
+
+
+# ---------------------------------------------------------------------------
+# CLI loop (single-host; real meshes come from the dry-run / cluster launch)
+# ---------------------------------------------------------------------------
+
+
+def run_training(arch: str, steps: int, *, smoke: bool = True, batch: int = 8,
+                 seq: int = 128, log_every: int = 10, ckpt_dir: Optional[str] = None):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    optimizer = default_optimizer(cfg, total=steps)
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(cfg, optimizer, key)
+    log.info("arch=%s params=%s", cfg.name, human_count(tree_num_params(state["params"])))
+    step_fn = jax.jit(make_train_step(cfg, optimizer))
+    stream = synthetic_token_stream(cfg.vocab_size, batch, seq)
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        b = next(stream)
+        if cfg.input_mode == "embeddings" and not cfg.is_encoder_decoder:
+            # stub frontend: embed tokens through a fixed random projection
+            emb = jax.nn.one_hot(b["tokens"] % cfg.d_model, cfg.d_model, dtype=jnp.bfloat16)
+            b = {"embeds": emb, "labels": b["labels"], "positions": b["positions"]}
+        elif cfg.is_encoder_decoder:
+            emb = jax.nn.one_hot(b["tokens"] % cfg.d_model, cfg.d_model, dtype=jnp.bfloat16)
+            b = dict(b, enc_embeds=emb)
+        state, metrics = step_fn(state, b)
+        losses.append(float(metrics["loss"]))
+        if i % log_every == 0:
+            log.info("step %d loss %.4f grad_norm %.3f (%.2fs)", i, losses[-1],
+                     float(metrics["grad_norm"]), time.time() - t0)
+        if ckpt_dir and (i + 1) % 100 == 0:
+            save_checkpoint(ckpt_dir, i + 1, jax.device_get(state))
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    losses = run_training(args.arch, args.steps, smoke=not args.full_config,
+                          batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir)
+    log.info("first loss %.4f final loss %.4f", losses[0], losses[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""KV / state cache containers for decode.
+
+A cache is a flat dict of arrays stacked over layers (leading L dim), built in
+one of two modes: 'zeros' (real buffers) or 'shape' (ShapeDtypeStruct stand-ins
+for the AOT dry-run). ``cache_logical_axes`` returns the structurally
+identical logical-axes pytree used to derive shardings.
+
+Layout per family:
+  attention       : k, v        [L, B, T, KV, hd]
+  MLA (deepseek)  : c [L,B,T,R], kr [L,B,T,Rh]
+  enc-dec         : + xk, xv    [L, B, T_enc, KV, hd] (cross-attn, precomputed)
+  rwkv6           : tm_x, cm_x  [L, B, D], s [L, B, H, K, K]
+  mamba2 (hybrid) : conv [L,B,W-1,2D], s [L,B,H,K,P]
+  hybrid (+attn)  : ak, av      [A, B, T, KV, hd]  (A = shared-attn applications)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def num_attn_applications(cfg) -> int:
+    if not cfg.ssm_kind:
+        return cfg.num_layers
+    if cfg.attn_every <= 0:
+        return 0
+    return sum(1 for i in range(cfg.num_layers) if (i % cfg.attn_every) == cfg.attn_every - 1)
+
+
+def cache_spec(cfg, batch: int, max_len: int, enc_len: int = 0) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """Returns {name: (shape, dtype)}."""
+    L, B, T, D = cfg.num_layers, batch, max_len, cfg.d_model
+    dt = jnp.bfloat16
+    spec: Dict[str, Tuple[Tuple[int, ...], Any]] = {}
+    if cfg.ssm_kind == "rwkv6":
+        H, K = cfg.ssm_heads, cfg.ssm_state
+        spec["tm_x"] = ((L, B, D), dt)
+        spec["cm_x"] = ((L, B, D), dt)
+        spec["s"] = ((L, B, H, K, K), jnp.float32)
+    elif cfg.ssm_kind == "mamba2":
+        H, N = cfg.ssm_heads, cfg.ssm_state
+        P_dim = 2 * D // H
+        spec["conv"] = ((L, B, cfg.ssm_conv - 1, 2 * D), dt)
+        spec["s"] = ((L, B, H, N, P_dim), jnp.float32)
+        A = num_attn_applications(cfg)
+        if A:
+            spec["ak"] = ((A, B, T, cfg.num_kv_heads, cfg.head_dim), dt)
+            spec["av"] = ((A, B, T, cfg.num_kv_heads, cfg.head_dim), dt)
+    elif cfg.use_mla:
+        spec["c"] = ((L, B, T, cfg.kv_lora_rank), dt)
+        spec["kr"] = ((L, B, T, cfg.rope_head_dim), dt)
+    else:
+        spec["k"] = ((L, B, T, cfg.num_kv_heads, cfg.head_dim), dt)
+        spec["v"] = ((L, B, T, cfg.num_kv_heads, cfg.head_dim), dt)
+    if cfg.is_encoder_decoder:
+        spec["xk"] = ((L, B, enc_len or T, cfg.num_kv_heads, cfg.head_dim), dt)
+        spec["xv"] = ((L, B, enc_len or T, cfg.num_kv_heads, cfg.head_dim), dt)
+    return spec
+
+
+_AXES = {
+    "k": ("layer", "act_batch", "act_kv_seq", "act_kv_heads", None),
+    "v": ("layer", "act_batch", "act_kv_seq", "act_kv_heads", None),
+    "ak": ("layer", "act_batch", "act_kv_seq", "act_kv_heads", None),
+    "av": ("layer", "act_batch", "act_kv_seq", "act_kv_heads", None),
+    "xk": ("layer", "act_batch", None, "act_kv_heads", None),
+    "xv": ("layer", "act_batch", None, "act_kv_heads", None),
+    "c": ("layer", "act_batch", "act_kv_seq", "kv_lora"),
+    "kr": ("layer", "act_batch", "act_kv_seq", None),
+    "tm_x": ("layer", "act_batch", "act_embed"),
+    "cm_x": ("layer", "act_batch", "act_embed"),
+    "s": ("layer", "act_batch", "ssm_heads", None, None),
+    "conv": ("layer", "act_batch", None, "ssm_inner"),
+}
+
+
+def init_cache(cfg, batch: int, max_len: int, *, enc_len: int = 0, mode: str = "zeros"):
+    spec = cache_spec(cfg, batch, max_len, enc_len)
+    if mode == "shape":
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in spec.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in spec.items()}
+
+
+def cache_logical_axes(cfg, batch: int, max_len: int, enc_len: int = 0):
+    spec = cache_spec(cfg, batch, max_len, enc_len)
+    return {k: _AXES[k] for k in spec}
+
+
+def cache_bytes(cfg, batch: int, max_len: int, enc_len: int = 0) -> int:
+    spec = cache_spec(cfg, batch, max_len, enc_len)
+    return sum(int(np.prod(s)) * np.dtype(d).itemsize for s, d in spec.values())

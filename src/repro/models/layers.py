@@ -1,0 +1,538 @@
+"""Core neural layers: ParamBuilder, norms, RoPE (full/half/M-RoPE),
+chunked flash-style attention, decode attention (incl. sequence-sharded
+flash-decode), GQA/MLA attention blocks, SwiGLU MLP.
+
+All functions are pure; parameters are plain dict pytrees created by
+``ParamBuilder`` so that the value pytree, the logical-axes pytree, and the
+abstract-shape pytree are guaranteed structurally identical.
+"""
+from __future__ import annotations
+
+import contextlib
+import zlib
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from repro.launch.sharding import active_mesh, active_rules, logical
+
+# ---------------------------------------------------------------------------
+# ParamBuilder
+# ---------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    """Builds parameter pytrees in one of three modes.
+
+    mode='init'  -> arrays (deterministic per-path RNG)
+    mode='axes'  -> logical-axes tuples (for sharding rules)
+    mode='shape' -> jax.ShapeDtypeStruct (for AOT dry-runs, no allocation)
+    """
+
+    def __init__(self, mode: str, key: Optional[jax.Array] = None, param_dtype=jnp.float32):
+        assert mode in ("init", "axes", "shape")
+        if mode == "init":
+            assert key is not None
+        self.mode = mode
+        self.key = key
+        self.param_dtype = param_dtype
+        self._prefix = []
+        self._stack = []
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._prefix.append(name)
+        try:
+            yield
+        finally:
+            self._prefix.pop()
+
+    @contextlib.contextmanager
+    def stacked(self, n: int):
+        """All params created inside get a leading (n,) 'layer' dim."""
+        self._stack.append(n)
+        try:
+            yield
+        finally:
+            self._stack.pop()
+
+    def param(self, name, shape, axes, init="fan_in", fan_in=None, scale=1.0):
+        assert len(shape) == len(axes), (name, shape, axes)
+        full_shape = tuple(self._stack) + tuple(shape)
+        full_axes = ("layer",) * len(self._stack) + tuple(axes)
+        if self.mode == "axes":
+            return full_axes
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(full_shape, self.param_dtype)
+        path = "/".join(self._prefix + [name])
+        k = jax.random.fold_in(self.key, zlib.crc32(path.encode()))
+        if init == "zeros":
+            return jnp.zeros(full_shape, self.param_dtype)
+        if init == "ones":
+            return jnp.ones(full_shape, self.param_dtype)
+        if init == "fan_in":
+            fi = fan_in if fan_in is not None else (shape[0] if shape else 1)
+            std = scale / max(float(fi), 1.0) ** 0.5
+        elif init == "normal":
+            std = scale
+        else:
+            raise ValueError(init)
+        return (jax.random.normal(k, full_shape, jnp.float32) * std).astype(self.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(b: ParamBuilder, name: str, dim: int):
+    with b.scope(name):
+        return {"scale": b.param("scale", (dim,), ("act_embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _apply_rotary(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x [..., 2m] rotated pairwise by angles [..., m] (broadcastable)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float, style: str = "full"):
+    """x [B,S,H,Dh]; positions [B,S] (or [3,B,S] for mrope)."""
+    dh = x.shape[-1]
+    if style == "half":
+        rot, keep = jnp.split(x, 2, axis=-1)
+        freqs = _rope_freqs(dh // 2, theta)
+        ang = positions[..., None, None].astype(jnp.float32) * freqs  # [B,S,1,m]
+        return jnp.concatenate([_apply_rotary(rot, ang), keep], axis=-1)
+    if style == "mrope":
+        assert positions.ndim == 3, "mrope needs [3,B,S] position triplets"
+        half = dh // 2
+        s_hw = 3 * half // 8
+        sections = (half - 2 * s_hw, s_hw, s_hw)  # (t, h, w): [16,24,24] for dh=128
+        freqs = _rope_freqs(dh, theta)  # [half]
+        ang_parts = []
+        off = 0
+        for i, sec in enumerate(sections):
+            p = positions[i][..., None, None].astype(jnp.float32)  # [B,S,1,1]
+            ang_parts.append(p * freqs[off : off + sec])
+            off += sec
+        ang = jnp.concatenate(ang_parts, axis=-1)  # [B,S,1,half]
+        return _apply_rotary(x, ang)
+    # full
+    freqs = _rope_freqs(dh, theta)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs
+    return _apply_rotary(x, ang)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure JAX, TPU-fusable; the Pallas kernel
+# in repro.kernels.flash_attention is the TPU-target twin of this routine.
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_mask(q_idx, k_idx, causal: bool, window: int):
+    m = jnp.ones((q_idx.shape[0], k_idx.shape[0]), jnp.bool_)
+    if causal:
+        m &= k_idx[None, :] <= q_idx[:, None]
+    if window > 0:
+        m &= q_idx[:, None] - k_idx[None, :] < window
+    return m
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """q [B,S,H,D]; k,v [B,T,H,D] (heads already expanded). Streaming softmax
+    over kv chunks; memory O(S*chunk) instead of O(S*T)."""
+    B, S, H, Dh = q.shape
+    Dv = v.shape[-1]
+    T = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, q_chunk, T, kv_chunk)
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = Dh ** -0.5
+
+    kr = k.reshape(B, nk, kv_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, kv_chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def one_q_chunk(qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        q_idx = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, ki = inp
+            k_idx = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk, preferred_element_type=jnp.float32)
+            s = s * scale
+            if softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = _attn_mask(q_idx, k_idx, causal, window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((B, H, q_chunk), jnp.float32),
+            jnp.zeros((B, H, q_chunk, Dv), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(body, init, (kr, vr, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,qc,H,Dv]
+
+    outs = jax.lax.map(one_q_chunk, jnp.arange(nq))  # [nq,B,qc,H,Dv]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dv)
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """[B,T,KV,D] -> [B,T,KV*n_rep,D] (contiguous groups)."""
+    if n_rep == 1:
+        return x
+    B, T, KV, Dh = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, T, KV, n_rep, Dh)).reshape(B, T, KV * n_rep, Dh)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0, softcap: float = 0.0):
+    """q [B,1,H,D]; caches [B,T,H,D] (heads expanded); cache_len scalar or
+    per-batch [B] vector (continuous batching)."""
+    B, _, H, Dh = q.shape
+    T = k_cache.shape[1]
+    scale = Dh ** -0.5
+    s = jnp.einsum("bqhd,bthd->bhqt", q, k_cache, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    t_idx = jnp.arange(T)
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 0:
+        cl = jnp.broadcast_to(cache_len, (B, 1))
+    else:
+        cl = cache_len.reshape(B, 1)
+    valid = t_idx[None, :] < cl
+    if window > 0:
+        valid &= t_idx[None, :] > cl - 1 - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqt,bthd->bqhd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def flash_decode_sharded(q, k_cache, v_cache, cache_len, *, axis: str = "data"):
+    """Sequence-sharded decode attention (long_500k): the KV cache's T axis is
+    sharded over ``axis``; partial softmax stats are LSE-combined with psum.
+
+    Called INSIDE shard_map: all inputs are device-local views;
+    k_cache/v_cache [B, T_local, H, D]; the global position of local slot t is
+    axis_index(axis)*T_local + t.
+    """
+    B, _, H, Dh = q.shape
+    T_l = k_cache.shape[1]
+    scale = Dh ** -0.5
+    shard = jax.lax.axis_index(axis)
+    t_idx = shard * T_l + jnp.arange(T_l)
+    s = jnp.einsum("bqhd,bthd->bhqt", q, k_cache, preferred_element_type=jnp.float32) * scale
+    s = jnp.where((t_idx < cache_len)[None, None, None, :], s, NEG_INF)
+    m_l = s.max(-1)  # [B,H,1]
+    p = jnp.exp(s - m_l[..., None])
+    l_l = p.sum(-1)
+    acc_l = jnp.einsum("bhqt,bthd->bhqd", p.astype(v_cache.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+    m_g = jax.lax.pmax(m_l, axis)
+    c = jnp.exp(m_l - m_g)
+    l_g = jax.lax.psum(l_l * c, axis)
+    acc_g = jax.lax.psum(acc_l * c[..., None], axis)
+    out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,1,H,D]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def attention_params(b: ParamBuilder, cfg, name="attn", cross: bool = False):
+    D, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    with b.scope(name):
+        p = {
+            "wq": b.param("wq", (D, H, Dh), ("embed", "heads", "head")),
+            "wk": b.param("wk", (D, KV, Dh), ("embed", "kv_heads", "head")),
+            "wv": b.param("wv", (D, KV, Dh), ("embed", "kv_heads", "head")),
+            "wo": b.param("wo", (H, Dh, D), ("heads", "head", "embed"), fan_in=H * Dh),
+        }
+        if cfg.qkv_bias and not cross:
+            p["bq"] = b.param("bq", (H, Dh), ("heads", "head"), init="zeros")
+            p["bk"] = b.param("bk", (KV, Dh), ("kv_heads", "head"), init="zeros")
+            p["bv"] = b.param("bv", (KV, Dh), ("kv_heads", "head"), init="zeros")
+    return p
+
+
+def attention_qkv(p, x, cfg, *, kv_x=None, positions=None, rope: bool = True):
+    """Returns q [B,S,H,D], k,v [B,T,KV,D] with RoPE applied to q,k."""
+    dtype = x.dtype
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"].astype(dtype))
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"].astype(dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_style)
+        k = apply_rope(k, positions if kv_x is None else positions, cfg.rope_theta, cfg.rope_style)
+    q = logical(q, "act_batch", "act_seq", "act_heads", None)
+    k = logical(k, "act_batch", "act_kv_seq", "act_kv_heads", None)
+    v = logical(v, "act_batch", "act_kv_seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def attention_out(p, y, dtype):
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(dtype))
+    return logical(out, "act_batch", "act_res_seq", "act_embed")
+
+
+def attention_apply(p, x, positions, cfg, *, kv_x=None, causal=True, window=0,
+                    q_chunk=512, kv_chunk=1024):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q, k, v = attention_qkv(p, x, cfg, kv_x=kv_x, positions=positions, rope=(kv_x is None))
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    y = chunked_attention(q, k, v, causal=causal, window=window,
+                          softcap=cfg.attn_logit_softcap, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return attention_out(p, y, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): compressed KV with decoupled RoPE
+# ---------------------------------------------------------------------------
+
+
+def mla_params(b: ParamBuilder, cfg, name="attn"):
+    D, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    R, Rh = cfg.kv_lora_rank, cfg.rope_head_dim
+    with b.scope(name):
+        return {
+            "wq": b.param("wq", (D, H, Dh + Rh), ("embed", "heads", "head")),
+            "w_dkv": b.param("w_dkv", (D, R + Rh), ("embed", "kv_lora")),
+            # R stays unsharded here: 'heads' already consumes the model axis
+            # (the kv_lora rule shards the *cache*, not these projections).
+            "w_uk": b.param("w_uk", (R, H, Dh), (None, "heads", "head"), fan_in=R),
+            "w_uv": b.param("w_uv", (R, H, Dh), (None, "heads", "head"), fan_in=R),
+            "wo": b.param("wo", (H, Dh, D), ("heads", "head", "embed"), fan_in=H * Dh),
+        }
+
+
+def mla_compress(p, x, positions, cfg):
+    """Returns compressed cache entries: c [B,T,R], k_rope [B,T,Rh]."""
+    dtype = x.dtype
+    ckv = jnp.einsum("btd,dr->btr", x, p["w_dkv"].astype(dtype))
+    c, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank :]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta, "full")[:, :, 0]
+    return c, k_rope
+
+
+def mla_queries(p, x, positions, cfg):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    q_nope, q_rope = q[..., : cfg.head_dim], q[..., cfg.head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta, "full")
+    return q_nope, q_rope
+
+
+def mla_apply(p, x, positions, cfg, *, causal=True, window=0, q_chunk=512, kv_chunk=1024):
+    """Training/prefill path: expand compressed KV to per-head K,V."""
+    dtype = x.dtype
+    c, k_rope = mla_compress(p, x, positions, cfg)
+    q_nope, q_rope = mla_queries(p, x, positions, cfg)
+    k_nope = jnp.einsum("btr,rhk->bthk", c, p["w_uk"].astype(dtype))
+    v = jnp.einsum("btr,rhk->bthk", c, p["w_uv"].astype(dtype))
+    H = cfg.num_heads
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_rope.shape[:2] + (H, cfg.rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    q = logical(q, "act_batch", "act_seq", "act_heads", None)
+    k = logical(k, "act_batch", "act_kv_seq", "act_heads", None)
+    v = logical(v, "act_batch", "act_kv_seq", "act_heads", None)
+    y = chunked_attention(q, k, v, causal=causal, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return attention_out(p, y, dtype)
+
+
+def mla_decode(p, x, c_cache, krope_cache, pos, cfg):
+    """Absorbed-projection decode: attention in the compressed space.
+    x [B,1,D]; c_cache [B,T,R]; krope_cache [B,T,Rh]. Returns [B,1,D] and new
+    cache entries for position pos."""
+    dtype = x.dtype
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    c_new, kr_new = mla_compress(p, x, positions, cfg)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new.astype(c_cache.dtype), pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(krope_cache, kr_new.astype(krope_cache.dtype), pos, axis=1)
+    q_nope, q_rope = mla_queries(p, x, positions, cfg)
+    # absorb: q_eff [B,1,H,R] = q_nope @ w_uk
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(dtype))
+    s = jnp.einsum("bshr,btr->bhst", q_eff, c_cache.astype(dtype), preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bshk,btk->bhst", q_rope, krope_cache.astype(dtype), preferred_element_type=jnp.float32)
+    s = s * ((cfg.head_dim + cfg.rope_head_dim) ** -0.5)
+    T = c_cache.shape[1]
+    valid = jnp.arange(T) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", prob.astype(dtype), c_cache.astype(dtype))
+    y = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"].astype(dtype))
+    return attention_out(p, y, dtype), c_cache, krope_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(b: ParamBuilder, cfg, name="mlp", d_ff: Optional[int] = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    with b.scope(name):
+        return {
+            "wi": b.param("wi", (D, F), ("embed", "mlp")),
+            "wg": b.param("wg", (D, F), ("embed", "mlp")),
+            "wo": b.param("wo", (F, D), ("mlp", "embed")),
+        }
+
+
+def mlp_apply(p, x):
+    dtype = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dtype))
+    h = jax.nn.silu(g) * h
+    h = logical(h, "act_batch", "act_seq", "act_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+    return logical(out, "act_batch", "act_res_seq", "act_embed")
+
+
+def mla_decode_seqsharded(p, x, c_cache, kr_cache, pos, cfg):
+    """MLA flash-decode with the compressed cache SEQUENCE-sharded over
+    'model' (§Perf pair C): scores/LSE are computed per T-shard and combined
+    with psum; heads stay sharded for the projections and only the tiny
+    [B,1,H,R] effective queries are gathered. Per-layer collective payload is
+    ~5MB instead of gathering the 512MB compressed cache."""
+    mesh = active_mesh()
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    heads_shard = cfg.num_heads % msize == 0
+    xs = P(ba if ba else None, None, None)
+    cs = P(ba if ba else None, "model", None)
+    wq_spec = P(None, "model", None) if heads_shard else P(None, None, None)
+    wuk_spec = P(None, "model", None) if heads_shard else P(None, None, None)
+    wo_spec = P("model", None, None) if heads_shard else P(None, None, None)
+
+    def local(wq, w_dkv, w_uk, w_uv, wo, x_l, c_l, kr_l, pos_s):
+        dt = x_l.dtype
+        R, Rh = cfg.kv_lora_rank, cfg.rope_head_dim
+        Bl = x_l.shape[0]
+        positions = jnp.full((Bl, 1), pos_s, jnp.int32)
+        # new compressed entries (replicated compute across model shards)
+        ckv = jnp.einsum("btd,dr->btr", x_l, w_dkv.astype(dt))
+        c_new, kr_new = ckv[..., :R], ckv[..., R:]
+        kr_new = apply_rope(kr_new[:, :, None, :], positions, cfg.rope_theta, "full")[:, :, 0]
+        T_l = c_l.shape[1]
+        me = jax.lax.axis_index("model")
+        off = pos_s - me * T_l
+        in_range = (off >= 0) & (off < T_l)
+        off_c = jnp.clip(off, 0, T_l - 1)
+        c_upd = jax.lax.dynamic_update_slice_in_dim(c_l, c_new.astype(c_l.dtype), off_c, 1)
+        kr_upd = jax.lax.dynamic_update_slice_in_dim(kr_l, kr_new.astype(kr_l.dtype), off_c, 1)
+        c_l = jnp.where(in_range, c_upd, c_l)
+        kr_l = jnp.where(in_range, kr_upd, kr_l)
+        # queries on the local head slice, absorbed, then gathered (tiny)
+        q = jnp.einsum("bsd,dhk->bshk", x_l, wq.astype(dt))
+        q_nope, q_rope = q[..., : cfg.head_dim], q[..., cfg.head_dim :]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta, "full")
+        q_eff_l = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk.astype(dt))
+        if heads_shard:
+            q_eff = jax.lax.all_gather(q_eff_l, "model", axis=2, tiled=True)
+            q_rope_f = jax.lax.all_gather(q_rope, "model", axis=2, tiled=True)
+        else:
+            q_eff, q_rope_f = q_eff_l, q_rope
+        # local scores over the T shard, all heads
+        s = jnp.einsum("bshr,btr->bhst", q_eff, c_l.astype(dt),
+                       preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bshk,btk->bhst", q_rope_f, kr_l.astype(dt),
+                           preferred_element_type=jnp.float32)
+        s = s * ((cfg.head_dim + cfg.rope_head_dim) ** -0.5)
+        t_idx = me * T_l + jnp.arange(T_l)
+        s = jnp.where((t_idx <= pos_s)[None, None, None, :], s, NEG_INF)
+        m_l = s.max(-1)  # [B,H,1]
+        m_g = jax.lax.pmax(m_l, "model")
+        e = jnp.exp(s - m_g[..., None])
+        l_g = jax.lax.psum(e.sum(-1), "model")  # [B,H,1]
+        ctx = jnp.einsum("bhst,btr->bshr", e.astype(dt), c_l.astype(dt),
+                         preferred_element_type=jnp.float32)
+        ctx = jax.lax.psum(ctx, "model")  # [B,1,H,R]
+        ctx = (ctx / jnp.maximum(l_g, 1e-30).transpose(0, 2, 1)[..., None]).astype(dt)
+        # back to the local head slice for the value/out projections
+        if heads_shard:
+            H_l = wo.shape[0]
+            ctx_l = jax.lax.dynamic_slice_in_dim(ctx, me * H_l, H_l, axis=2)
+        else:
+            ctx_l = ctx
+        y = jnp.einsum("bshr,rhk->bshk", ctx_l, w_uv.astype(dt))
+        out = jnp.einsum("bshk,hkd->bsd", y, wo.astype(dt))
+        if heads_shard:
+            out = jax.lax.psum(out, "model")
+        return out, c_l, kr_l
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(wq_spec, P(None, None), wuk_spec, wuk_spec, wo_spec,
+                  xs, cs, cs, P()),
+        out_specs=(xs, cs, cs), check_vma=False,
+    )(p["wq"], p["w_dkv"], p["w_uk"], p["w_uv"], p["wo"], x, c_cache, kr_cache, pos)

@@ -1,0 +1,390 @@
+"""Mixture-of-Experts with expert-parallel all_to_all dispatch.
+
+Two execution paths with identical math:
+
+* ``_moe_reference``: single-device dense-gather path used by CPU smoke tests
+  and as the correctness oracle for the distributed path.
+* ``_moe_expert_parallel``: shard_map path — experts are sharded over the
+  'model' mesh axis; tokens are routed with capacity-based packing and moved
+  by ``lax.all_to_all`` (the survey's P2P communication protocol, §7.1.2,
+  instantiated for the token->expert bipartite graph), processed with grouped
+  matmuls, and combined back. Token chunks bound the dispatch-buffer memory
+  (``cfg.moe_dispatch_chunk`` — a §Perf lever).
+
+The survey connection (DESIGN.md §3): MoE dispatch *is* distributed graph
+aggregation under a vertex-cut (expert) partition; router load imbalance is
+challenge #3, and the aux loss below is the standard mitigation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax>=0.4.35 exposes shard_map at top level
+    from jax import shard_map as _shard_map_mod  # type: ignore
+
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from repro.launch.sharding import active_mesh, active_rules, logical, spec_for
+from repro.models.layers import ParamBuilder, mlp_params, mlp_apply
+
+
+def moe_params(b: ParamBuilder, cfg, name="moe"):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    with b.scope(name):
+        p = {
+            "router": b.param("router", (D, E), ("embed", None)),
+            "wi": b.param("wi", (E, D, F), ("expert", "expert_embed", "expert_mlp"), fan_in=D),
+            "wg": b.param("wg", (E, D, F), ("expert", "expert_embed", "expert_mlp"), fan_in=D),
+            "wo": b.param("wo", (E, F, D), ("expert", "expert_mlp", "expert_embed"), fan_in=F),
+        }
+        if cfg.num_shared_experts:
+            p["shared"] = mlp_params(b, cfg, "shared", d_ff=cfg.d_ff * cfg.num_shared_experts)
+    return p
+
+
+def _router(p, x_flat, cfg):
+    """x_flat [T,D] -> (weights [T,k], expert_ids [T,k], aux_loss scalar)."""
+    logits = (x_flat.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # [T,E]
+    vals, ids = jax.lax.top_k(probs, cfg.moe_top_k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    E = cfg.num_experts
+    me = probs.mean(0)  # mean router prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (
+        x_flat.shape[0] * cfg.moe_top_k)
+    aux = E * jnp.sum(me * ce)
+    return vals.astype(x_flat.dtype), ids, aux
+
+
+def _expert_ffn(wi, wg, wo, x, dtype):
+    """Grouped SwiGLU: x [E,C,D]; weights [E,D,F]/[E,F,D]."""
+    h = jnp.einsum("ecd,edf->ecf", x, wi.astype(dtype))
+    g = jnp.einsum("ecd,edf->ecf", x, wg.astype(dtype))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Reference (single-device) path
+# ---------------------------------------------------------------------------
+
+
+def _moe_reference(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, D = x.shape
+    dtype = x.dtype
+    T = B * S
+    xf = x.reshape(T, D)
+    w, ids, aux = _router(p, xf, cfg)
+    E, k = cfg.num_experts, cfg.moe_top_k
+    cap = max(int(T * k / E * cfg.capacity_factor), 1)
+    flat_ids = ids.reshape(-1)  # [T*k]
+    tok = jnp.repeat(jnp.arange(T), k)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(T * k), flat_ids]
+    keep = pos < cap
+    ex_in = jnp.zeros((E, cap, D), dtype).at[
+        jnp.where(keep, flat_ids, E), jnp.where(keep, pos, 0)
+    ].set(xf[tok], mode="drop")
+    ex_out = _expert_ffn(p["wi"], p["wg"], p["wo"], ex_in, dtype)
+    y_pair = ex_out[jnp.where(keep, flat_ids, 0), jnp.where(keep, pos, 0)]
+    y_pair = jnp.where(keep[:, None], y_pair, 0.0)
+    y = jnp.zeros((T, D), dtype).at[tok].add(y_pair * w.reshape(-1)[:, None])
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x).reshape(T, D)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel shard_map path
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_chunk_dedup(p_local, x_c, cfg, model_size: int, dtype,
+                          shared_local: bool = False):
+    """Deduplicated (and optionally group-limited) dispatch: each token is sent
+    ONCE per destination shard carrying its [E_local] weight vector, instead of
+    once per (token, expert) pair. With group_limit G < top_k this bounds the
+    copies per token to G (DeepSeek-style node-limited routing) — the §Perf
+    optimization for all-to-all-bound MoE training. With G == model_size the
+    math is identical to the baseline dispatch (pure dedup, given ample
+    capacity)."""
+    Ck, D = x_c.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    M = model_size
+    E_local = E // M
+    G = min(cfg.moe_group_limit or M, M)
+    w, ids, aux = _router(p_local, x_c, cfg)
+    # dense weight matrix [Ck, M, E_local]
+    W = jnp.zeros((Ck, E), dtype).at[jnp.arange(Ck)[:, None], ids].set(w)
+    W = W.reshape(Ck, M, E_local)
+    if G < M:
+        # keep only the top-G shards by total routed weight; renormalize
+        shard_w = jnp.abs(W).sum(-1)  # [Ck, M]
+        topv = jax.lax.top_k(jax.lax.stop_gradient(shard_w), G)[0]
+        thresh = topv[:, G - 1 : G]  # G-th largest (selection is not diff'd)
+        keep_shard = shard_w >= thresh
+        W = W * keep_shard[..., None].astype(W.dtype)
+        norm = W.sum((1, 2), keepdims=True)
+        W = W / jnp.maximum(norm, 1e-9)
+    active = jnp.abs(W).sum(-1) > 0  # [Ck, M]
+    # capacity packing over (token, dest) pairs, per destination column
+    cap = max(int(Ck * min(G if G < M else k, M) / M * cfg.capacity_factor), 8)
+    act_i = active.astype(jnp.int32)
+    cnt = jnp.cumsum(act_i, axis=0) - act_i  # per-dest running position
+    keep = active & (cnt < cap)
+    d_grid = jnp.broadcast_to(jnp.arange(M)[None], (Ck, M))
+    t_grid = jnp.broadcast_to(jnp.arange(Ck)[:, None], (Ck, M))
+    keep_f = keep.reshape(-1)
+    d_idx = jnp.where(keep_f, d_grid.reshape(-1), M)
+    p_idx = jnp.where(keep_f, cnt.reshape(-1), 0)
+    send = jnp.zeros((M + 1, cap, D + E_local), dtype)
+    send = send.at[d_idx, p_idx, :D].set(x_c[t_grid.reshape(-1)], mode="drop")
+    send = send.at[d_idx, p_idx, D:].set(W.reshape(Ck * M, E_local), mode="drop")
+    send = send[:M]
+    recv = jax.lax.all_to_all(send, "model", split_axis=0, concat_axis=0, tiled=False)
+    rx = recv.reshape(M * cap, D + E_local)
+    xr, wr = rx[:, :D], rx[:, D:]
+    # per-local-expert capacity packing over received slots; lax.scan over the
+    # expert axis keeps exactly ONE expert's buffers live (the unrolled-loop
+    # version held all E_local of them and tripled temp memory)
+    N = M * cap
+    cap_e = max(int(N * min(1.0, max(k, 1) / max(E_local, 1)) * cfg.capacity_factor), 8)
+
+    @jax.checkpoint
+    def expert_body(y_acc, exp):
+        wi_e, wg_e, wo_e, we = exp  # we [N]
+        act = jnp.abs(we) > 0
+        pos = jnp.cumsum(act.astype(jnp.int32)) - act.astype(jnp.int32)
+        kp = act & (pos < cap_e)
+        slot_idx = jnp.where(kp, pos, cap_e)
+        ex_in = jnp.zeros((cap_e + 1, D), dtype).at[slot_idx].set(
+            jnp.where(kp[:, None], xr, 0.0), mode="drop")[:cap_e]
+        h = jax.nn.silu(ex_in @ wg_e.astype(dtype)) * (ex_in @ wi_e.astype(dtype))
+        out_e = h @ wo_e.astype(dtype)  # [cap_e, D]
+        gathered = jnp.where(kp[:, None], out_e[jnp.where(kp, pos, 0)], 0.0)
+        return y_acc + gathered * we[:, None], None
+
+    y_slot, _ = jax.lax.scan(
+        expert_body, jnp.zeros((N, D), dtype),
+        (p_local["wi"], p_local["wg"], p_local["wo"], wr.T))
+    y_rx = y_slot.reshape(M, cap, D)
+    y_send = jax.lax.all_to_all(y_rx, "model", split_axis=0, concat_axis=0, tiled=False)
+    y_pair = y_send[jnp.where(keep_f, d_idx, 0).clip(0, M - 1), p_idx]
+    y_pair = jnp.where(keep_f[:, None], y_pair, 0.0)
+    y_c = jnp.zeros((Ck, D), dtype).at[t_grid.reshape(-1)].add(y_pair)
+    if "shared" in p_local:
+        sh = p_local["shared"]
+        h = x_c @ sh["wi"].astype(dtype)
+        g = x_c @ sh["wg"].astype(dtype)
+        part = (jax.nn.silu(g) * h) @ sh["wo"].astype(dtype)
+        if shared_local:
+            # seq-sharded tokens: every shard holds DIFFERENT tokens, so the
+            # shared expert runs fully local on replicated weights (no psum)
+            y_c = y_c + part
+        else:
+            y_c = y_c + jax.lax.psum(part, "model")
+    return y_c, aux
+
+
+def _dispatch_chunk(p_local, x_c, cfg, model_size: int, dtype,
+                    shared_local: bool = False):
+    """One token chunk, device-local code inside shard_map.
+    x_c [Ck, D] -> (y_c [Ck, D], aux scalar)."""
+    Ck, D = x_c.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    E_local = E // model_size
+    w, ids, aux = _router(p_local, x_c, cfg)
+    flat_ids = ids.reshape(-1)
+    tok = jnp.repeat(jnp.arange(Ck), k)
+    wflat = w.reshape(-1)
+    dest = flat_ids // E_local  # destination model shard
+    local_eid = flat_ids % E_local
+    # --- pack into per-destination capacity buffers ---
+    cap = max(int(Ck * k / model_size * cfg.capacity_factor), 8)
+    oh = jax.nn.one_hot(dest, model_size, dtype=jnp.int32)
+    pos = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(Ck * k), dest]
+    keep = pos < cap
+    d_idx = jnp.where(keep, dest, model_size)
+    p_idx = jnp.where(keep, pos, 0)
+    send_x = jnp.zeros((model_size, cap, D), dtype).at[d_idx, p_idx].set(
+        x_c[tok], mode="drop")
+    send_eid = jnp.full((model_size, cap), -1, jnp.int32).at[d_idx, p_idx].set(
+        local_eid, mode="drop")
+    # --- all_to_all over the expert-parallel axis ---
+    recv_x = jax.lax.all_to_all(send_x, "model", split_axis=0, concat_axis=0, tiled=False)
+    recv_eid = jax.lax.all_to_all(send_eid, "model", split_axis=0, concat_axis=0, tiled=False)
+    rx = recv_x.reshape(model_size * cap, D)
+    re = recv_eid.reshape(model_size * cap)
+    # --- pack per local expert ---
+    N = rx.shape[0]
+    cap_e = max(int(N / E_local * cfg.capacity_factor), 8)
+    valid = re >= 0
+    re_safe = jnp.where(valid, re, 0)
+    oh2 = jax.nn.one_hot(re_safe, E_local, dtype=jnp.int32) * valid[:, None]
+    pos2 = (jnp.cumsum(oh2, axis=0) - oh2)[jnp.arange(N), re_safe]
+    keep2 = valid & (pos2 < cap_e)
+    e_idx = jnp.where(keep2, re_safe, E_local)
+    c_idx = jnp.where(keep2, pos2, 0)
+    ex_in = jnp.zeros((E_local, cap_e, D), dtype).at[e_idx, c_idx].set(rx, mode="drop")
+    ex_out = _expert_ffn(p_local["wi"], p_local["wg"], p_local["wo"], ex_in, dtype)
+    y_rx = ex_out[jnp.where(keep2, re_safe, 0), c_idx]
+    y_rx = jnp.where(keep2[:, None], y_rx, 0.0).reshape(model_size, cap, D)
+    # --- return trip ---
+    y_send = jax.lax.all_to_all(y_rx, "model", split_axis=0, concat_axis=0, tiled=False)
+    y_pair = y_send[d_idx.clip(0, model_size - 1), p_idx]
+    y_pair = jnp.where(keep[:, None], y_pair, 0.0)
+    y_c = jnp.zeros((Ck, D), dtype).at[tok].add(y_pair * wflat[:, None])
+    # --- shared experts: plain tensor-parallel MLP (partial-F + psum) ---
+    if "shared" in p_local:
+        sh = p_local["shared"]
+        h = x_c @ sh["wi"].astype(dtype)
+        g = x_c @ sh["wg"].astype(dtype)
+        part = (jax.nn.silu(g) * h) @ sh["wo"].astype(dtype)
+        if shared_local:
+            # seq-sharded tokens: every shard holds DIFFERENT tokens, so the
+            # shared expert runs fully local on replicated weights (no psum)
+            y_c = y_c + part
+        else:
+            y_c = y_c + jax.lax.psum(part, "model")
+    return y_c, aux
+
+
+
+
+def _moe_decode_2d(p, x, cfg, mesh) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Weights-stationary decode dispatch (§Perf pair C, iteration 2): expert
+    weights are 2D-sharded [E over 'model', F over 'data'] and NEVER move;
+    the (tiny) decode token batch is all-gathered over 'data', every shard
+    computes the partial-F expert outputs for all tokens, partials psum over
+    'data', and each shard keeps its own batch rows. Token payloads are ~MBs
+    versus ~1GB/layer of expert-weight FSDP gathers."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    B, S, D = x.shape
+    bw = 1
+    for a in ba:
+        bw *= sizes[a]
+    batch_sharded = B % max(bw, 1) == 0 and bw > 1
+
+    def local_fn(p_local, x_l):
+        dtype = x_l.dtype
+        if batch_sharded:
+            xg = jax.lax.all_gather(x_l, ba, axis=0, tiled=True)  # [B,S,D] full
+        else:
+            xg = x_l
+        T = xg.shape[0] * xg.shape[1]
+        xf = xg.reshape(T, D)
+        p_routed = {k: v for k, v in p_local.items() if k != "shared"}
+        y_part, aux = _dispatch_chunk(p_routed, xf, cfg, model_size, dtype)
+        y = jax.lax.psum(y_part, ba) if ba else y_part  # combine F partials
+        if "shared" in p_local:
+            sh = p_local["shared"]
+            h = xf @ sh["wi"].astype(dtype)
+            g = xf @ sh["wg"].astype(dtype)
+            part = (jax.nn.silu(g) * h) @ sh["wo"].astype(dtype)
+            y = y + jax.lax.psum(part, "model")
+        y = y.reshape(xg.shape)
+        if batch_sharded:
+            me = jax.lax.axis_index(ba)
+            Bl = x_l.shape[0]
+            y = jax.lax.dynamic_slice_in_dim(y, me * Bl, Bl, axis=0)
+        return y, aux
+
+    p_specs = {
+        "router": P(None, None),
+        "wi": P("model", None, "data"),
+        "wg": P("model", None, "data"),
+        "wo": P("model", "data", None),
+    }
+    if "shared" in p:
+        p_specs["shared"] = {"wi": P(None, "model"), "wg": P(None, "model"),
+                             "wo": P("model", None)}
+    x_spec = P(ba if (ba and batch_sharded) else None, None, None)
+    fn = shard_map(local_fn, mesh=mesh, in_specs=(p_specs, x_spec),
+                   out_specs=(x_spec, P()), check_vma=False)
+    return fn(p, x)
+
+
+def _moe_expert_parallel(p, x, cfg, mesh) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_ways = 1
+    for a in batch_axes:
+        batch_ways *= sizes[a]
+    if x.shape[0] % max(batch_ways, 1) != 0:
+        batch_axes = ()  # e.g. decode with global batch 1: replicate tokens
+    rules = active_rules() or {}
+    seq_sharded = (rules.get("act_res_seq") == "model"
+                   and x.shape[1] % model_size == 0)
+
+    def local_fn(p_local, x_local):
+        Bl, S, D = x_local.shape
+        dtype = x_local.dtype
+        T = Bl * S
+        chunk = min(cfg.moe_dispatch_chunk, T)
+        n = T // chunk
+        assert T % chunk == 0, (T, chunk)
+        xf = x_local.reshape(n, chunk, D)
+
+        dispatch = (_dispatch_chunk_dedup if cfg.moe_group_limit
+                    else _dispatch_chunk)
+
+        @jax.checkpoint
+        def body(_, x_c):
+            y_c, aux = dispatch(p_local, x_c, cfg, model_size, dtype,
+                                shared_local=seq_sharded)
+            return None, (y_c, aux)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xf)
+        y = ys.reshape(Bl, S, D)
+        aux = auxs.mean()
+        mean_axes = tuple(batch_axes) + (("model",) if seq_sharded else ())
+        aux = jax.lax.pmean(aux, mean_axes) if mean_axes else aux
+        return y, aux
+
+    # device-local views: experts split over 'model'; x split over batch axes.
+    p_specs = {
+        "router": P(None, None),
+        "wi": P("model", None, None),
+        "wg": P("model", None, None),
+        "wo": P("model", None, None),
+    }
+    if "shared" in p:
+        if seq_sharded:
+            p_specs["shared"] = {"wi": P(None, None), "wg": P(None, None),
+                                 "wo": P(None, None)}
+        else:
+            p_specs["shared"] = {"wi": P(None, "model"), "wg": P(None, "model"),
+                                 "wo": P("model", None)}
+    x_spec = P(batch_axes if batch_axes else None,
+               "model" if seq_sharded else None, None)
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    return fn(p, x)
+
+
+def moe_apply(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,D] -> (y [B,S,D], aux_loss scalar)."""
+    mesh = active_mesh()
+    if mesh is not None and "model" in mesh.axis_names and cfg.num_experts % (
+        dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    ) == 0:
+        rules = active_rules() or {}
+        if rules.get("_moe_2d") and x.shape[0] * x.shape[1] <= 4096:
+            return _moe_decode_2d(p, x, cfg, mesh)
+        return _moe_expert_parallel(p, x, cfg, mesh)
+    return _moe_reference(p, x, cfg)

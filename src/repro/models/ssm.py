@@ -1,0 +1,298 @@
+"""SSM layers: RWKV6 ("Finch", data-dependent per-channel decay) and Mamba2
+(SSD, scalar-per-head data-dependent decay), implemented as a *chunked* linear
+attention scan.
+
+TPU adaptation (DESIGN.md §2): instead of the per-timestep recurrence used by
+CUDA implementations, the sequence is split into chunks; within a chunk the
+contribution is a masked matmul (MXU-friendly), across chunks a [H,K,V] state
+is carried by lax.scan. This is exactly the survey's *sequential chunk-based
+execution model* (§6.2.1) applied to the time dimension.
+
+Numerics: log-decays are clamped to >= LOG_DECAY_MIN per step so that the
+exp(+|L|) factors in the factorized intra-chunk matmul stay inside fp32 range
+for chunk lengths <= 128 (a token >= 64 steps away at the clamp is attenuated
+by < e^-76, i.e. exactly zero in fp32 — no information is lost).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import logical
+from repro.models.layers import ParamBuilder, rmsnorm, rmsnorm_params
+
+LOG_DECAY_MIN = -1.2
+
+
+def _chunked_linear_attention(q, k, v, log_decay, *, chunk: int, mode: str,
+                              bonus: Optional[jnp.ndarray] = None,
+                              init_state: Optional[jnp.ndarray] = None,
+                              return_state: bool = False):
+    """y_t = sum_{s} decay(s,t) (q_t . k_s) v_s, chunked.
+
+    q,k [B,S,H,K]; v [B,S,H,V]; log_decay [B,S,H,K] (rwkv) or [B,S,H,1] (mamba).
+    mode='mamba': inclusive (s<=t), decay prod over (s,t].
+    mode='rwkv' : strictly past (s<t), decay prod over (s,t-1], plus bonus
+                  term (q_t . (u*k_t)) v_t with u [H,K].
+    Returns y [B,S,H,V] (fp32 accumulate, cast to q.dtype) and optionally the
+    final state [B,H,K,V].
+    """
+    B, S, H, K = q.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    f32 = jnp.float32
+    out_dtype = q.dtype
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    g = jnp.clip(log_decay.astype(f32), LOG_DECAY_MIN, 0.0)
+    g = jnp.broadcast_to(g, (B, S, H, K))
+    if pad:
+        # zero k/v and unit decay on the tail: earlier outputs unaffected,
+        # final state unchanged by padded steps.
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v, g = zpad(q), zpad(k), zpad(v), zpad(g)
+    S_pad = S + pad
+    n = S_pad // chunk
+
+    # [n, B, chunk, H, *]
+    def split(x):
+        return x.reshape(B, n, chunk, H, -1).transpose(1, 0, 2, 3, 4)
+
+    qs, ks, vs, gs = split(q), split(k), split(v), split(g)
+    state0 = (jnp.zeros((B, H, K, V), f32) if init_state is None
+              else init_state.astype(f32))
+    mask_incl = jnp.tril(jnp.ones((chunk, chunk), bool))  # s <= t
+    mask_strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # s < t
+
+    def body(state, inp):
+        qc, kc, vc, gc = inp  # [B,chunk,H,*]
+        L = jnp.cumsum(gc, axis=1)  # inclusive cumulative log decay [B,c,H,K]
+        L_end = L[:, -1]  # [B,H,K]
+        if mode == "mamba":
+            q_eff = qc * jnp.exp(L)
+            k_eff = kc * jnp.exp(-L)
+            mask = mask_incl
+        else:  # rwkv: past decay over (s, t-1]
+            L_prev = L - gc  # exclusive cumsum
+            q_eff = qc * jnp.exp(L_prev)
+            k_eff = kc * jnp.exp(-L)
+            mask = mask_strict
+        # intra-chunk
+        A = jnp.einsum("bthk,bshk->bhts", q_eff, k_eff)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y = jnp.einsum("bhts,bshv->bthv", A, vc)
+        if mode == "rwkv" and bonus is not None:
+            coef = jnp.einsum("bthk,hk->bth", qc * kc, bonus.astype(f32))
+            y = y + coef[..., None] * vc
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("bthk,bhkv->bthv", q_eff, state)
+        # state update: S' = exp(L_end)*S + sum_s exp(L_end - L_s) k_s v_s^T
+        k_dec = kc * jnp.exp(L_end[:, None] - L)
+        state_new = jnp.exp(L_end)[..., None] * state + jnp.einsum("bshk,bshv->bhkv", k_dec, vc)
+        return state_new, y
+
+    state_f, ys = jax.lax.scan(body, state0, (qs, ks, vs, gs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S_pad, H, V)[:, :S].astype(out_dtype)
+    if return_state:
+        return y, state_f
+    return y
+
+
+def linear_attention_step(q, k, v, log_decay, state, *, mode: str,
+                          bonus: Optional[jnp.ndarray] = None):
+    """Single-token recurrence for decode. q,k [B,H,K]; v [B,H,V];
+    log_decay [B,H,K] or [B,H,1]; state [B,H,K,V]. Returns (y [B,H,V], state)."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    g = jnp.clip(log_decay.astype(f32), LOG_DECAY_MIN, 0.0)
+    g = jnp.broadcast_to(g, k.shape)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    if mode == "mamba":
+        state = jnp.exp(g)[..., None] * state + kv
+        y = jnp.einsum("bhk,bhkv->bhv", q, state)
+    else:
+        eff = state + (bonus.astype(f32)[None, ..., None] * kv if bonus is not None else kv)
+        y = jnp.einsum("bhk,bhkv->bhv", q, eff)
+        state = jnp.exp(g)[..., None] * state + kv
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_params(b: ParamBuilder, cfg):
+    D = cfg.d_model
+    H, K = cfg.ssm_heads, cfg.ssm_state
+    inner = H * K
+    lora = max(32, D // 16)
+    with b.scope("rwkv"):
+        p = {
+            "w_r": b.param("w_r", (D, inner), ("embed", "ssm_inner")),
+            "w_k": b.param("w_k", (D, inner), ("embed", "ssm_inner")),
+            "w_v": b.param("w_v", (D, inner), ("embed", "ssm_inner")),
+            "w_g": b.param("w_g", (D, inner), ("embed", "ssm_inner")),
+            "w_o": b.param("w_o", (inner, D), ("ssm_inner", "embed")),
+            # data-dependent decay (low-rank, "Finch")
+            "wd1": b.param("wd1", (D, lora), ("embed", None)),
+            "wd2": b.param("wd2", (lora, inner), (None, "ssm_inner"), init="zeros"),
+            "w0": b.param("w0", (inner,), ("ssm_inner",), init="zeros"),
+            "u": b.param("u", (H, K), ("ssm_heads", "ssm_state"), init="zeros"),
+            # token-shift mix coefficients
+            "mu": b.param("mu", (5, D), (None, "embed"), init="zeros"),
+            "ln_x": b.param("ln_x", (inner,), ("ssm_inner",), init="ones"),
+        }
+    return p
+
+
+def _token_shift(x, prev: Optional[jnp.ndarray] = None):
+    """shift(x)[t] = x[t-1]; position 0 gets `prev` (decode state) or 0."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def rwkv6_time_mix(p, x, cfg, *, prev_x=None, state=None, chunk=None,
+                   return_state=False):
+    """x [B,S,D]. Returns y [B,S,D] (and (last_x, state) if return_state)."""
+    B, S, D = x.shape
+    H, K = cfg.ssm_heads, cfg.ssm_state
+    dtype = x.dtype
+    xs = _token_shift(x, prev_x)
+    mu = p["mu"].astype(dtype)
+    xr, xk, xv, xg, xw = [x + (xs - x) * jax.nn.sigmoid(mu[i]) for i in range(5)]
+    r = (xr @ p["w_r"].astype(dtype)).reshape(B, S, H, K)
+    k = (xk @ p["w_k"].astype(dtype)).reshape(B, S, H, K)
+    v = (xv @ p["w_v"].astype(dtype)).reshape(B, S, H, K)
+    gate = jax.nn.silu(xg @ p["w_g"].astype(dtype))
+    # per-channel data-dependent log decay: -exp(w0 + tanh(x wd1) wd2)
+    wlog = p["w0"].astype(jnp.float32) + (jnp.tanh(xw.astype(jnp.float32) @ p["wd1"].astype(jnp.float32))
+                                          @ p["wd2"].astype(jnp.float32))
+    log_decay = (-jnp.exp(wlog)).reshape(B, S, H, K)
+    if return_state:
+        y, state_f = _chunked_linear_attention(
+            r, k, v, log_decay, chunk=chunk or cfg.ssm_chunk, mode="rwkv",
+            bonus=p["u"], init_state=state, return_state=True)
+    else:
+        y = _chunked_linear_attention(r, k, v, log_decay, chunk=chunk or cfg.ssm_chunk,
+                                      mode="rwkv", bonus=p["u"], init_state=state)
+    y = y.reshape(B, S, H * K)
+    y = rmsnorm({"scale": p["ln_x"]}, y, 1e-5) * gate.astype(y.dtype)
+    out = (y.astype(dtype) @ p["w_o"].astype(dtype))
+    out = logical(out, "act_batch", "act_res_seq", "act_embed")
+    if return_state:
+        return out, (x[:, -1], state_f)
+    return out
+
+
+def rwkv6_time_mix_step(p, x, cfg, prev_x, state):
+    """Single-token decode. x [B,D]; prev_x [B,D]; state [B,H,K,K]."""
+    y, (last_x, state_f) = rwkv6_time_mix(p, x[:, None], cfg, prev_x=prev_x,
+                                          state=state, chunk=1, return_state=True)
+    return y[:, 0], (last_x, state_f)
+
+
+def rwkv6_channel_mix_params(b: ParamBuilder, cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    with b.scope("cmix"):
+        return {
+            "w_k": b.param("w_k", (D, F), ("embed", "mlp")),
+            "w_v": b.param("w_v", (F, D), ("mlp", "embed")),
+            "mu": b.param("mu", (D,), ("embed",), init="zeros"),
+        }
+
+
+def rwkv6_channel_mix(p, x, *, prev_x=None, return_state=False):
+    dtype = x.dtype
+    xs = _token_shift(x, prev_x)
+    xk = x + (xs - x) * jax.nn.sigmoid(p["mu"].astype(dtype))
+    h = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(dtype)))
+    h = logical(h, "act_batch", "act_seq", "act_ff")
+    out = h @ p["w_v"].astype(dtype)
+    out = logical(out, "act_batch", "act_res_seq", "act_embed")
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_params(b: ParamBuilder, cfg):
+    D = cfg.d_model
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    d_inner = 2 * D
+    assert d_inner % H == 0
+    with b.scope("mamba"):
+        return {
+            "w_in": b.param("w_in", (D, 2 * d_inner + 2 * N + H), ("embed", "ssm_inner")),
+            "conv_w": b.param("conv_w", (cfg.ssm_conv, d_inner), ("conv", "ssm_inner"),
+                              init="normal", scale=0.1),
+            "a_log": b.param("a_log", (H,), ("ssm_heads",), init="zeros"),
+            "dt_bias": b.param("dt_bias", (H,), ("ssm_heads",), init="zeros"),
+            "d_skip": b.param("d_skip", (H,), ("ssm_heads",), init="ones"),
+            "w_out": b.param("w_out", (d_inner, D), ("ssm_inner", "embed"), fan_in=d_inner),
+            "ln_y": b.param("ln_y", (d_inner,), ("ssm_inner",), init="ones"),
+        }
+
+
+def _causal_conv(x, w, *, conv_state=None):
+    """Depthwise causal conv. x [B,S,C]; w [W,C]; conv_state [B,W-1,C]."""
+    W = w.shape[0]
+    pad = conv_state if conv_state is not None else jnp.zeros(
+        (x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def mamba2_apply(p, x, cfg, *, conv_state=None, ssm_state=None, return_state=False):
+    """x [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    d_inner = 2 * D
+    P_dim = d_inner // H
+    dtype = x.dtype
+    zxbcdt = x @ p["w_in"].astype(dtype)
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    xin, new_conv = _causal_conv(xin, p["conv_w"], conv_state=conv_state)
+    xin = jax.nn.silu(xin)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H] (negative)
+    log_decay = (dt * a)[..., None]  # [B,S,H,1]
+    xh = xin.reshape(B, S, H, P_dim)
+    v = xh * dt[..., None].astype(dtype)  # dt-scaled input is the "value"
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, H, N))
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, H, N))
+    if return_state:
+        y, state_f = _chunked_linear_attention(q, k, v, log_decay, chunk=min(cfg.ssm_chunk, S),
+                                               mode="mamba", init_state=ssm_state,
+                                               return_state=True)
+    else:
+        y = _chunked_linear_attention(q, k, v, log_decay, chunk=min(cfg.ssm_chunk, S),
+                                      mode="mamba", init_state=ssm_state)
+    y = y + xh.astype(y.dtype) * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm({"scale": p["ln_y"]}, y, 1e-5)
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    out = y.astype(dtype) @ p["w_out"].astype(dtype)
+    out = logical(out, "act_batch", "act_res_seq", "act_embed")
+    if return_state:
+        return out, (new_conv, state_f)
+    return out
+
+
+def mamba2_step(p, x, cfg, conv_state, ssm_state):
+    """Single-token decode. x [B,D]; conv_state [B,W-1,d_inner];
+    ssm_state [B,H,N,P]."""
+    y, (new_conv, state_f) = mamba2_apply(p, x[:, None], cfg, conv_state=conv_state,
+                                          ssm_state=ssm_state, return_state=True)
+    return y[:, 0], (new_conv, state_f)

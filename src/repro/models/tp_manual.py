@@ -1,0 +1,135 @@
+"""Manual tensor-parallel blocks (beyond-paper §Perf optimization).
+
+Hypothesis (EXPERIMENTS.md §Perf, iteration 3): GSPMD's auto-partitioning of
+the Megatron pattern on this toolchain (a) keeps f32 pre-cast tensors on the
+wire and (b) lowers the output partial-sum as all-reduce (2x bytes) plus an
+extra gather under sequence sharding. Writing the block with EXPLICIT
+collectives — bf16 all_gather of the seq-sharded residual in, bf16
+psum_scatter of the partial output — moves exactly one [B,S,D] bf16 payload
+each way per projection pair, the Megatron-SP minimum.
+
+Enabled by the '_manual_tp' rules flag (dryrun --opt mtp); the residual
+stream must be seq-sharded over 'model' (act_res_seq rule).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.launch.sharding import active_mesh, spec_for
+from repro.models.layers import apply_rope, chunked_attention, repeat_kv
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _model_size(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def mlp_tp(p, x, cfg):
+    """x [B, S, D] with S sharded over 'model' (residual layout).
+    Explicit AG(seq) -> local SwiGLU on the F shard -> RS(seq)."""
+    mesh = active_mesh()
+    ba = _batch_axes(mesh)
+    xs = P(ba if ba else None, "model", None)
+
+    def local(wi, wg, wo, h_loc):
+        xg = jax.lax.all_gather(h_loc, "model", axis=1, tiled=True)  # bf16 [B,S,D]
+        xg = checkpoint_name(xg, "tp_gather")
+        dt = h_loc.dtype
+        a = jnp.einsum("bsd,df->bsf", xg, wi.astype(dt))
+        b = jnp.einsum("bsd,df->bsf", xg, wg.astype(dt))
+        h_mid = jax.nn.silu(b) * a
+        out = jnp.einsum("bsf,fd->bsd", h_mid, wo.astype(dt))  # partial over F
+        return jax.lax.psum_scatter(out, "model", scatter_dimension=1, tiled=True)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, "model"), P(None, "model"), P("model", None), xs),
+        out_specs=xs, check_vma=False,
+    )(p["wi"], p["wg"], p["wo"], x)
+
+
+def attention_tp(p, x, positions, cfg, *, causal=True, window=0):
+    """Manual-TP GQA attention on a seq-sharded residual.
+    Heads shard over 'model' when divisible; KV weights replicate when the KV
+    head count is below the model-axis size (each shard computes the full
+    small KV projection — cheaper than any reshard)."""
+    mesh = active_mesh()
+    ba = _batch_axes(mesh)
+    msize = _model_size(mesh)
+    heads_shard = cfg.num_heads % msize == 0
+    xs = P(ba if ba else None, "model", None)
+    wq_spec = P(None, "model", None) if heads_shard else P(None, None, None)
+    pos_spec = P(None, ba if ba else None, None) if cfg.rope_style == "mrope" else P(ba if ba else None, None)
+
+    def local(wq, wk, wv, wo, bq, bk, bv, h_loc, pos):
+        dt = h_loc.dtype
+        xg = jax.lax.all_gather(h_loc, "model", axis=1, tiled=True)  # [B,S,D]
+        xg = checkpoint_name(xg, "tp_gather")
+        q = jnp.einsum("bsd,dhk->bshk", xg, wq.astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", xg, wk.astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", xg, wv.astype(dt))
+        if bq is not None:
+            q = q + bq.astype(dt)  # bias views match the local head slice
+            k = k + bk.astype(dt)
+            v = v + bv.astype(dt)
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_style)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_style)
+        # align KV heads to the local q-head slice (KV weights replicated)
+        H_l = q.shape[2]
+        G = cfg.num_heads // cfg.num_kv_heads
+        me_h = jax.lax.axis_index("model") if heads_shard else 0
+        kv_sel = (me_h * H_l + jnp.arange(H_l)) // G
+        k = jnp.take(k, kv_sel, axis=2)
+        v = jnp.take(v, kv_sel, axis=2)
+        y = chunked_attention(q, k, v, causal=causal, window=window,
+                              softcap=cfg.attn_logit_softcap)
+        out = jnp.einsum("bshk,hkd->bsd", y, wo.astype(dt))  # partial over heads
+        if not heads_shard:
+            # fully replicated attention: no partial sum; just scatter rows
+            me = jax.lax.axis_index("model")
+            ns = out.shape[1] // msize
+            return jax.lax.dynamic_slice_in_dim(out, me * ns, ns, axis=1)
+        return jax.lax.psum_scatter(out, "model", scatter_dimension=1, tiled=True)
+
+    # bias handling: slice per shard for q when heads shard
+    bq = p.get("bq")
+    if bq is not None and heads_shard:
+        bq_spec = P("model", None)
+    else:
+        bq_spec = P(None, None) if bq is not None else P()
+    args = (p["wq"], p["wk"], p["wv"], p["wo"],
+            p.get("bq"), p.get("bk"), p.get("bv"), x, positions)
+    in_specs = (wq_spec, P(None, None, None), P(None, None, None),
+                (P("model", None, None) if heads_shard else P(None, None, None)),
+                (bq_spec if bq is not None else None),
+                (P(None, None) if bq is not None else None),
+                (P(None, None) if bq is not None else None),
+                xs, pos_spec)
+    # shard_map cannot take None leaves: drop absent biases from the call
+    if bq is None:
+        def local_nb(wq, wk, wv, wo, h_loc, pos):
+            return local(wq, wk, wv, wo, None, None, None, h_loc, pos)
+
+        return shard_map(local_nb, mesh=mesh,
+                         in_specs=(wq_spec, P(None, None, None), P(None, None, None),
+                                   P("model", None, None) if heads_shard else P(None, None, None),
+                                   xs, pos_spec),
+                         out_specs=xs, check_vma=False)(
+            p["wq"], p["wk"], p["wv"], p["wo"], x, positions)
+    return shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=xs,
+                     check_vma=False)(*args)

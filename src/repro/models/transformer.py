@@ -1,0 +1,660 @@
+"""The composable transformer: parameter construction, full-sequence forward
+(train / prefill), and single-token decode (serve) for every assigned family:
+dense GQA, MoE (+MLA), RWKV6, Mamba2 hybrid with shared attention, enc-dec,
+and VLM/audio embedding inputs.
+
+Everything is a pure function of (cfg, params, batch); distribution enters
+only through logical sharding annotations and the MoE shard_map path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import active_mesh, active_rules, logical, spec_for
+from repro.models import ssm as ssm_lib
+from repro.models.kvcache import num_attn_applications
+from repro.models.layers import (
+    ParamBuilder,
+    attention_apply,
+    attention_out,
+    attention_qkv,
+    decode_attention,
+    flash_decode_sharded,
+    mla_apply,
+    mla_decode,
+    mla_params,
+    attention_params,
+    mlp_apply,
+    mlp_params,
+    repeat_kv,
+    rmsnorm,
+    rmsnorm_params,
+)
+from repro.models.moe import moe_apply, moe_params
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    window: int = 0  # sliding window for dense long-context variants
+    seq_sharded_cache: bool = False  # long_500k: KV cache seq-sharded over 'data'
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _block_params(b: ParamBuilder, cfg, *, moe: bool, decoder_cross: bool):
+    p: Dict[str, Any] = {}
+    p["ln1"] = rmsnorm_params(b, "ln1", cfg.d_model)
+    p["ln2"] = rmsnorm_params(b, "ln2", cfg.d_model)
+    if cfg.ssm_kind == "rwkv6":
+        p["tmix"] = ssm_lib.rwkv6_params(b, cfg)
+        p["cmix"] = ssm_lib.rwkv6_channel_mix_params(b, cfg)
+        return p
+    if cfg.ssm_kind == "mamba2":
+        p["mixer"] = ssm_lib.mamba2_params(b, cfg)
+        p["mlp"] = mlp_params(b, cfg)
+        return p
+    p["attn"] = mla_params(b, cfg) if cfg.use_mla else attention_params(b, cfg)
+    if decoder_cross:
+        p["ln_x"] = rmsnorm_params(b, "ln_x", cfg.d_model)
+        p["xattn"] = attention_params(b, cfg, name="xattn", cross=True)
+    if moe:
+        p["moe"] = moe_params(b, cfg)
+    else:
+        p["mlp"] = mlp_params(b, cfg)
+    return p
+
+
+def build_params(cfg, b: ParamBuilder):
+    params: Dict[str, Any] = {}
+    params["embed"] = b.param("embed", (cfg.vocab_size, cfg.d_model),
+                              ("vocab", "embed"), init="normal", scale=0.02)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = b.param("lm_head", (cfg.d_model, cfg.vocab_size),
+                                    ("embed", "vocab"))
+    params["final_norm"] = rmsnorm_params(b, "final_norm", cfg.d_model)
+    cross = cfg.is_encoder_decoder
+    if cfg.is_encoder_decoder:
+        with b.scope("encoder"), b.stacked(cfg.encoder_layers):
+            params["enc_blocks"] = _block_params(b, cfg, moe=False, decoder_cross=False)
+        params["enc_norm"] = rmsnorm_params(b, "enc_norm", cfg.d_model)
+    n_dense = cfg.first_k_dense if cfg.num_experts else 0
+    if n_dense:
+        with b.scope("head_blocks"), b.stacked(n_dense):
+            params["head_blocks"] = _block_params(b, cfg, moe=False, decoder_cross=cross)
+    with b.scope("blocks"), b.stacked(cfg.num_layers - n_dense):
+        params["blocks"] = _block_params(b, cfg, moe=bool(cfg.num_experts), decoder_cross=cross)
+    if cfg.ssm_kind and cfg.attn_every > 0:
+        with b.scope("shared_attn"):
+            params["shared_attn"] = {
+                "ln1": rmsnorm_params(b, "ln1", cfg.d_model),
+                "attn": attention_params(b, cfg),
+                "ln2": rmsnorm_params(b, "ln2", cfg.d_model),
+                "mlp": mlp_params(b, cfg),
+            }
+    return params
+
+
+def init_params(cfg, key: jax.Array, param_dtype=None):
+    pd = jnp.dtype(param_dtype or cfg.param_dtype)
+    return build_params(cfg, ParamBuilder("init", key, pd))
+
+
+def param_logical_axes(cfg):
+    return build_params(cfg, ParamBuilder("axes"))
+
+
+def abstract_params(cfg, param_dtype=None):
+    pd = jnp.dtype(param_dtype or cfg.param_dtype)
+    return build_params(cfg, ParamBuilder("shape", param_dtype=pd))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "minimal":
+        # save only the residual-stream carry (checkpoint default saves
+        # nothing inside the body); measured on llama3.2-1b/train_4k this is
+        # the difference between 30GiB and ~5GiB of temps per device —
+        # dots_with_no_batch_dims_saveable keeps every [B,S,F] projection.
+        return jax.checkpoint(fn)
+    if policy == "save_tp_gather":
+        # manual-TP: keep the gathered activations so backward skips the
+        # re-gather collectives (trades ~2x[B,S,D] bf16 per layer of HBM)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names("tp_gather"))
+    return jax.checkpoint(fn)  # 'full': save nothing
+
+
+def _manual_tp_on() -> bool:
+    r = active_rules()
+    return bool(r and r.get("_manual_tp"))
+
+
+def _attn_block_seq(cfg, p, h, positions, *, enc_out, window, causal, collect_kv=False):
+    hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+    kv = None
+    if (_manual_tp_on() and not cfg.use_mla and not collect_kv
+            and enc_out is None and not cfg.qkv_bias or
+            (_manual_tp_on() and cfg.qkv_bias and not cfg.use_mla
+             and not collect_kv and enc_out is None)):
+        from repro.models.tp_manual import attention_tp
+
+        h = h + attention_tp(p["attn"], hn, positions, cfg, causal=causal,
+                             window=window)
+        return h, None
+    if cfg.use_mla:
+        attn = mla_apply(p["attn"], hn, positions, cfg, causal=causal, window=window)
+        if collect_kv:
+            from repro.models.layers import mla_compress
+
+            c, kr = mla_compress(p["attn"], hn, positions, cfg)
+            kv = (c.astype(jnp.bfloat16), kr.astype(jnp.bfloat16))
+    else:
+        if collect_kv:
+            q, k, v = attention_qkv(p["attn"], hn, cfg, positions=positions)
+            kv = (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+            n_rep = cfg.num_heads // cfg.num_kv_heads
+            from repro.models.layers import chunked_attention
+
+            y = chunked_attention(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep),
+                                  causal=causal, window=window,
+                                  softcap=cfg.attn_logit_softcap)
+            attn = attention_out(p["attn"], y, h.dtype)
+        else:
+            attn = attention_apply(p["attn"], hn, positions, cfg, causal=causal, window=window)
+    h = h + attn
+    if enc_out is not None and "xattn" in p:
+        hx = rmsnorm(p["ln_x"], h, cfg.norm_eps)
+        h = h + attention_apply(p["xattn"], hx, positions, cfg, kv_x=enc_out, causal=False)
+    return h, kv
+
+
+def _ffn_block_seq(cfg, p, h):
+    hn = rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_apply(p["moe"], hn, cfg)
+        return h + y, aux
+    if _manual_tp_on():
+        from repro.models.tp_manual import mlp_tp
+
+        return h + mlp_tp(p["mlp"], hn, cfg), jnp.zeros((), jnp.float32)
+    return h + mlp_apply(p["mlp"], hn), jnp.zeros((), jnp.float32)
+
+
+def _std_block_seq(cfg, p, h, positions, *, enc_out=None, window=0, causal=True,
+                   collect_kv=False):
+    h, kv = _attn_block_seq(cfg, p, h, positions, enc_out=enc_out, window=window,
+                            causal=causal, collect_kv=collect_kv)
+    h, aux = _ffn_block_seq(cfg, p, h)
+    return h, aux, kv
+
+
+def _rwkv_block_seq(cfg, p, h, collect_state=False):
+    if collect_state:
+        y, (tm_x, s_f) = ssm_lib.rwkv6_time_mix(
+            p["tmix"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg, return_state=True)
+        h = h + y
+        y2, cm_x = ssm_lib.rwkv6_channel_mix(
+            p["cmix"], rmsnorm(p["ln2"], h, cfg.norm_eps), return_state=True)
+        h = h + y2
+        return h, (tm_x.astype(jnp.bfloat16), cm_x.astype(jnp.bfloat16), s_f)
+    h = h + ssm_lib.rwkv6_time_mix(p["tmix"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+    h = h + ssm_lib.rwkv6_channel_mix(p["cmix"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+    return h, None
+
+
+def _mamba_block_seq(cfg, p, h, collect_state=False):
+    if collect_state:
+        y, (conv, s_f) = ssm_lib.mamba2_apply(
+            p["mixer"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg, return_state=True)
+        h = h + y
+        h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return h, (conv.astype(jnp.bfloat16), s_f)
+    h = h + ssm_lib.mamba2_apply(p["mixer"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+    h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+    return h, None
+
+
+def _scan_blocks(cfg, blocks, h, positions, *, enc_out=None, window=0, causal=True,
+                 collect_kv=False, collect_state=False):
+    """lax.scan over a stacked block pytree. Returns (h, aux_sum, kv_stack)."""
+
+    def body(carry, p_layer):
+        hh = carry
+        if cfg.ssm_kind == "rwkv6":
+            hh, st = _rwkv_block_seq(cfg, p_layer, hh, collect_state)
+            return hh, (jnp.zeros((), jnp.float32), st)
+        if cfg.ssm_kind == "mamba2":
+            hh, st = _mamba_block_seq(cfg, p_layer, hh, collect_state)
+            return hh, (jnp.zeros((), jnp.float32), st)
+        hh, aux, kv = _std_block_seq(cfg, p_layer, hh, positions, enc_out=enc_out,
+                                     window=window, causal=causal, collect_kv=collect_kv)
+        return hh, (aux, kv)
+
+    body = _remat(body, cfg.remat_policy)
+    h, (auxs, kvs) = jax.lax.scan(body, h, blocks)
+    return h, auxs.sum(), kvs
+
+
+def _hybrid_segments(cfg) -> List[Tuple[int, int, bool]]:
+    segs, start = [], 0
+    for i in range(cfg.num_layers):
+        if cfg._layer_has_attn(i):
+            segs.append((start, i + 1, True))
+            start = i + 1
+    if start < cfg.num_layers:
+        segs.append((start, cfg.num_layers, False))
+    return segs
+
+
+def _tree_slice(tree, s, e):
+    return jax.tree_util.tree_map(lambda a: a[s:e], tree)
+
+
+def _shared_attn_apply(cfg, p, h, positions, *, window=0, collect_kv=False):
+    hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+    kv = None
+    if collect_kv:
+        q, k, v = attention_qkv(p["attn"], hn, cfg, positions=positions)
+        kv = (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+        from repro.models.layers import chunked_attention
+
+        n_rep = cfg.num_heads // cfg.num_kv_heads
+        y = chunked_attention(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep), causal=True,
+                              window=window)
+        h = h + attention_out(p["attn"], y, h.dtype)
+    else:
+        h = h + attention_apply(p["attn"], hn, positions, cfg, causal=True, window=window)
+    h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+    return h, kv
+
+
+def embed_tokens(cfg, params, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    return logical(h, "act_batch", "act_res_seq", "act_embed")
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def encoder_forward(cfg, params, enc_embeds):
+    B, S, _ = enc_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = enc_embeds.astype(_dtype(cfg))
+    h, _, _ = _scan_blocks(cfg, params["enc_blocks"], h, positions, causal=False)
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def forward(cfg, params, batch, *, window: int = 0, collect_kv: bool = False,
+            collect_state: bool = False):
+    """Full-sequence forward. batch keys: 'tokens' [B,S] or 'embeds' [B,S,D];
+    'positions' [B,S] (or [3,B,S] for mrope); optional 'enc_embeds'.
+    Returns (h_final [B,S,D], aux, (kv_or_state_stacks, enc_out))."""
+    if "embeds" in batch:
+        h = batch["embeds"].astype(_dtype(cfg))
+        h = logical(h, "act_batch", "act_seq", "act_embed")
+    else:
+        h = embed_tokens(cfg, params, batch["tokens"])
+    positions = batch["positions"]
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encoder_forward(cfg, params, batch["enc_embeds"])
+    kv_head = None
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.ssm_kind and cfg.attn_every > 0:
+        kvs_apps, st_segs = [], []
+        for (s, e, has_attn) in _hybrid_segments(cfg):
+            h, aux, st = _scan_blocks(cfg, _tree_slice(params["blocks"], s, e), h, positions,
+                                      window=window, collect_state=collect_state)
+            aux_total += aux
+            if collect_state:
+                st_segs.append(st)
+            if has_attn:
+                h, kv = _shared_attn_apply(cfg, params["shared_attn"], h, positions,
+                                           window=window, collect_kv=collect_kv)
+                if collect_kv:
+                    kvs_apps.append(kv)
+        kvs = None
+        if collect_kv and kvs_apps:
+            kvs = (jnp.stack([a for a, _ in kvs_apps]), jnp.stack([b for _, b in kvs_apps]))
+        if collect_state:
+            states = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, 0), *st_segs)
+            kvs = (kvs, states)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return h, aux_total, (kvs, enc_out)
+    if cfg.ssm_kind:
+        h, aux, states = _scan_blocks(cfg, params["blocks"], h, positions,
+                                      collect_state=collect_state)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return h, aux, (states, enc_out)
+    if "head_blocks" in params:
+        h, aux, kv_head = _scan_blocks(cfg, params["head_blocks"], h, positions,
+                                       enc_out=enc_out, window=window, collect_kv=collect_kv)
+        aux_total += aux
+    h, aux, kvs = _scan_blocks(cfg, params["blocks"], h, positions, enc_out=enc_out,
+                               window=window, collect_kv=collect_kv)
+    aux_total += aux
+    if collect_kv and kv_head is not None and kvs is not None:
+        kvs = jax.tree_util.tree_map(lambda a, b: jnp.concatenate([a, b], 0), kv_head, kvs)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux_total, (kvs, enc_out)
+
+
+def lm_head(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_softmax_xent(cfg, h, head, labels, chunk: int = 1024):
+    """Cross-entropy without materializing [B,S,V]: scan over seq chunks."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    hr = h.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        hc, lc = inp
+        logits = jnp.einsum("bcd,dv->bcv", hc, head.astype(hc.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = logical(logits, "act_batch", "act_seq", "act_vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + (lse - ll).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hr, lr))
+    return total / (B * S)
+
+
+def loss_fn(cfg, params, batch, *, window: int = 0):
+    h, aux, _ = forward(cfg, params, batch, window=window)
+    loss = chunked_softmax_xent(cfg, h, lm_head(cfg, params), batch["labels"])
+    return loss + cfg.router_aux_coef * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg, params, batch, *, window: int = 0):
+    """Process the prompt; return (last-token logits [B,V], cache dict)."""
+    h, _, (kvs, enc_out) = forward(cfg, params, batch, window=window, collect_kv=True,
+                                   collect_state=bool(cfg.ssm_kind))
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], lm_head(cfg, params).astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+    cache: Dict[str, Any] = {}
+    if cfg.ssm_kind == "rwkv6":
+        tm_x, cm_x, s_f = kvs
+        return logits, {"tm_x": tm_x, "cm_x": cm_x, "s": s_f}
+    if cfg.ssm_kind == "mamba2":
+        if cfg.attn_every > 0:
+            kv_apps, states = kvs
+            conv, s_f = states
+            cache = {"conv": conv, "s": s_f}
+            if kv_apps is not None:
+                cache["ak"], cache["av"] = kv_apps
+            return logits, cache
+        conv, s_f = kvs
+        return logits, {"conv": conv, "s": s_f}
+    if kvs is not None:
+        if cfg.use_mla:
+            cache["c"], cache["kr"] = kvs
+        else:
+            cache["k"], cache["v"] = kvs
+    if cfg.is_encoder_decoder and enc_out is not None:
+        xks, xvs = [], []
+        # cross-attn KV per decoder layer, precomputed once
+        def collect(p_layer):
+            _, k, v = attention_qkv(p_layer["xattn"], enc_out, cfg, positions=None, rope=False)
+            return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+        kv = jax.lax.map(lambda p_l: collect(p_l), params["blocks"])
+        cache["xk"], cache["xv"] = kv
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def _decode_self_attention(cfg, q, k_cache, v_cache, pos, opts: ServeOptions):
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    if opts.seq_sharded_cache and active_mesh() is not None:
+        mesh = active_mesh()
+        kf = repeat_kv(k_cache, n_rep)
+        vf = repeat_kv(v_cache, n_rep)
+        kf = logical(kf, "act_batch", "act_kv_seq", "act_heads", None)
+        vf = logical(vf, "act_batch", "act_kv_seq", "act_heads", None)
+        q_spec = spec_for(("act_batch", None, "act_heads", None))
+        kv_spec = spec_for(("act_batch", "act_kv_seq", "act_heads", None))
+        fn = shard_map(
+            partial(flash_decode_sharded, axis="data"),
+            mesh=mesh,
+            in_specs=(q_spec, kv_spec, kv_spec, P()),
+            out_specs=q_spec,
+            check_vma=False,
+        )
+        return fn(q, kf, vf, pos + 1)
+    kf = repeat_kv(k_cache, n_rep)
+    vf = repeat_kv(v_cache, n_rep)
+    return decode_attention(q, kf, vf, pos + 1, window=opts.window,
+                            softcap=cfg.attn_logit_softcap)
+
+
+def _attn_block_decode(cfg, p, h, k_l, v_l, pos, opts: ServeOptions, xk=None, xv=None):
+    B = h.shape[0]
+    hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+    if cfg.rope_style == "mrope":
+        positions = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = attention_qkv(p["attn"], hn, cfg, positions=positions)
+    k_l = jax.lax.dynamic_update_slice_in_dim(k_l, k.astype(k_l.dtype), pos, axis=1)
+    v_l = jax.lax.dynamic_update_slice_in_dim(v_l, v.astype(v_l.dtype), pos, axis=1)
+    y = _decode_self_attention(cfg, q, k_l.astype(h.dtype), v_l.astype(h.dtype), pos, opts)
+    h = h + attention_out(p["attn"], y, h.dtype)
+    if xk is not None:
+        hx = rmsnorm(p["ln_x"], h, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hx, p["xattn"]["wq"].astype(h.dtype))
+        n_rep = cfg.num_heads // cfg.num_kv_heads
+        yx = decode_attention(qx, repeat_kv(xk.astype(h.dtype), n_rep),
+                              repeat_kv(xv.astype(h.dtype), n_rep), xk.shape[1])
+        h = h + attention_out(p["xattn"], yx, h.dtype)
+    return h, k_l, v_l
+
+
+def _mla_block_decode(cfg, p, h, c_l, kr_l, pos):
+    hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+    rules = active_rules() or {}
+    if rules.get("act_kv_seq") and active_mesh() is not None:
+        from repro.models.layers import mla_decode_seqsharded
+
+        y, c_l, kr_l = mla_decode_seqsharded(p["attn"], hn, c_l, kr_l, pos, cfg)
+        return h + y, c_l, kr_l
+    y, c_l, kr_l = mla_decode(p["attn"], hn, c_l.astype(h.dtype), kr_l.astype(h.dtype), pos, cfg)
+    return h + y, c_l.astype(jnp.bfloat16), kr_l.astype(jnp.bfloat16)
+
+
+def _ffn_decode(cfg, p, h):
+    hn = rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_apply(p["moe"], hn, cfg)
+        return h + y
+    return h + mlp_apply(p["mlp"], hn)
+
+
+def serve_step(cfg, params, cache, tokens, pos, opts: ServeOptions = ServeOptions()):
+    """One decode step. tokens [B,1] int32; pos scalar int32 (current length).
+    Returns (logits [B,V], new cache)."""
+    B = tokens.shape[0]
+    h = embed_tokens(cfg, params, tokens)
+    if cfg.ssm_kind == "rwkv6":
+        def body(hh, xs):
+            p_l, tm_x, cm_x, s = xs
+            hn = rmsnorm(p_l["ln1"], hh[:, 0], cfg.norm_eps)
+            y, (tm_x2, s2) = ssm_lib.rwkv6_time_mix_step(p_l["tmix"], hn, cfg, tm_x, s)
+            hh = hh + y[:, None]
+            hn2 = rmsnorm(p_l["ln2"], hh, cfg.norm_eps)
+            y2, cm_x2 = ssm_lib.rwkv6_channel_mix(p_l["cmix"], hn2, prev_x=cm_x,
+                                                  return_state=True)
+            hh = hh + y2
+            return hh, (tm_x2.astype(tm_x.dtype), cm_x2.astype(cm_x.dtype), s2)
+
+        h, (tm, cm, s) = jax.lax.scan(
+            body, h, (params["blocks"], cache["tm_x"], cache["cm_x"], cache["s"]))
+        new_cache = {"tm_x": tm, "cm_x": cm, "s": s}
+    elif cfg.ssm_kind == "mamba2":
+        app_idx = 0
+        new_conv, new_s = [], []
+        ak, av = cache.get("ak"), cache.get("av")
+        for (s_i, e_i, has_attn) in _hybrid_segments(cfg):
+            def body(hh, xs):
+                p_l, conv_l, s_l = xs
+                hn = rmsnorm(p_l["ln1"], hh[:, 0], cfg.norm_eps)
+                y, (conv2, s2) = ssm_lib.mamba2_step(p_l["mixer"], hn, cfg, conv_l, s_l)
+                hh = hh + y[:, None]
+                hh = hh + mlp_apply(p_l["mlp"], rmsnorm(p_l["ln2"], hh, cfg.norm_eps))
+                return hh, (conv2.astype(conv_l.dtype), s2)
+
+            h, (conv_seg, s_seg) = jax.lax.scan(
+                body, h,
+                (_tree_slice(params["blocks"], s_i, e_i),
+                 cache["conv"][s_i:e_i], cache["s"][s_i:e_i]))
+            new_conv.append(conv_seg)
+            new_s.append(s_seg)
+            if has_attn and ak is not None:
+                p_sh = dict(params["shared_attn"])
+                h, k_l, v_l = _attn_block_decode(cfg, p_sh, h, ak[app_idx], av[app_idx],
+                                                 pos, ServeOptions())
+                h = _ffn_decode(cfg, {"ln2": p_sh["ln2"], "mlp": p_sh["mlp"]}, h)
+                ak = ak.at[app_idx].set(k_l)
+                av = av.at[app_idx].set(v_l)
+                app_idx += 1
+        new_cache = {"conv": jnp.concatenate(new_conv, 0), "s": jnp.concatenate(new_s, 0)}
+        if ak is not None:
+            new_cache["ak"], new_cache["av"] = ak, av
+    elif cfg.use_mla:
+        blocks = [params["head_blocks"], params["blocks"]] if "head_blocks" in params else [params["blocks"]]
+        offs = 0
+        cs, krs = [], []
+        for blk in blocks:
+            n_l = jax.tree_util.tree_leaves(blk)[0].shape[0]
+
+            def body(hh, xs):
+                p_l, c_l, kr_l = xs
+                hh, c2, kr2 = _mla_block_decode(cfg, p_l, hh, c_l, kr_l, pos)
+                hh = _ffn_decode(cfg, p_l, hh)
+                return hh, (c2, kr2)
+
+            h, (c_new, kr_new) = jax.lax.scan(
+                body, h, (blk, cache["c"][offs : offs + n_l], cache["kr"][offs : offs + n_l]))
+            cs.append(c_new)
+            krs.append(kr_new)
+            offs += n_l
+        new_cache = {"c": jnp.concatenate(cs, 0), "kr": jnp.concatenate(krs, 0)}
+    else:
+        blocks_list = [params["head_blocks"], params["blocks"]] if "head_blocks" in params else [params["blocks"]]
+        offs = 0
+        ks, vs = [], []
+        has_cross = cfg.is_encoder_decoder
+        for blk in blocks_list:
+            n_l = jax.tree_util.tree_leaves(blk)[0].shape[0]
+            xs = [blk, cache["k"][offs : offs + n_l], cache["v"][offs : offs + n_l]]
+            if has_cross:
+                xs += [cache["xk"][offs : offs + n_l], cache["xv"][offs : offs + n_l]]
+
+            def body(hh, inp):
+                if has_cross:
+                    p_l, k_l, v_l, xk_l, xv_l = inp
+                else:
+                    p_l, k_l, v_l = inp
+                    xk_l = xv_l = None
+                hh, k2, v2 = _attn_block_decode(cfg, p_l, hh, k_l, v_l, pos, opts,
+                                                xk=xk_l, xv=xv_l)
+                hh = _ffn_decode(cfg, p_l, hh)
+                return hh, (k2, v2)
+
+            h, (k_new, v_new) = jax.lax.scan(body, h, tuple(xs))
+            ks.append(k_new)
+            vs.append(v_new)
+            offs += n_l
+        new_cache = {"k": jnp.concatenate(ks, 0), "v": jnp.concatenate(vs, 0)}
+        if has_cross:
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], lm_head(cfg, params).astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = logical(logits, "act_batch", "act_vocab")
+    return logits, new_cache
+
+
+def serve_step_vec(cfg, params, cache, tokens, pos_vec, opts: ServeOptions = ServeOptions()):
+    """Per-slot-position decode for continuous batching (dense GQA families).
+    tokens [B,1]; pos_vec [B] int32 — each batch lane writes its KV at its own
+    position and attends to its own prefix length."""
+    assert not cfg.ssm_kind and not cfg.use_mla and not cfg.is_encoder_decoder, (
+        "serve_step_vec currently supports the dense GQA families")
+    B = tokens.shape[0]
+    h = embed_tokens(cfg, params, tokens)
+    blocks_list = [params["head_blocks"], params["blocks"]] if "head_blocks" in params else [params["blocks"]]
+    offs = 0
+    ks, vs = [], []
+    if cfg.rope_style == "mrope":
+        positions = jnp.broadcast_to(pos_vec[None, :, None], (3, B, 1)).astype(jnp.int32)
+    else:
+        positions = pos_vec[:, None].astype(jnp.int32)
+    for blk in blocks_list:
+        n_l = jax.tree_util.tree_leaves(blk)[0].shape[0]
+
+        def body(hh, inp):
+            p_l, k_l, v_l = inp
+            hn = rmsnorm(p_l["ln1"], hh, cfg.norm_eps)
+            q, k, v = attention_qkv(p_l["attn"], hn, cfg, positions=positions)
+            lane = jnp.arange(B)
+            k_l = k_l.at[lane, pos_vec].set(k[:, 0].astype(k_l.dtype))
+            v_l = v_l.at[lane, pos_vec].set(v[:, 0].astype(v_l.dtype))
+            n_rep = cfg.num_heads // cfg.num_kv_heads
+            y = decode_attention(q, repeat_kv(k_l.astype(hh.dtype), n_rep),
+                                 repeat_kv(v_l.astype(hh.dtype), n_rep),
+                                 pos_vec + 1, window=opts.window,
+                                 softcap=cfg.attn_logit_softcap)
+            hh = hh + attention_out(p_l["attn"], y, hh.dtype)
+            hh = _ffn_decode(cfg, p_l, hh)
+            return hh, (k_l, v_l)
+
+        h, (k_new, v_new) = jax.lax.scan(
+            body, h, (blk, cache["k"][offs : offs + n_l], cache["v"][offs : offs + n_l]))
+        ks.append(k_new)
+        vs.append(v_new)
+        offs += n_l
+    new_cache = {"k": jnp.concatenate(ks, 0), "v": jnp.concatenate(vs, 0)}
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], lm_head(cfg, params).astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, new_cache

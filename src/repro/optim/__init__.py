@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+    sgdm,
+)
+
+__all__ = [
+    "Optimizer",
+    "adafactor",
+    "adamw",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+    "make_optimizer",
+    "sgdm",
+]

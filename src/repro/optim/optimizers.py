@@ -1,0 +1,174 @@
+"""Self-contained functional optimizers (no optax dependency).
+
+An Optimizer is a pair of pure functions:
+  init(params)                  -> opt_state (pytree)
+  update(grads, state, params, step) -> (updates, new_state)
+plus ``state_logical_axes(param_axes)`` so optimizer state shards like its
+parameter (critical for FSDP: Adam moments inherit the param sharding;
+Adafactor's factored moments inherit the corresponding row/col axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Any]  # (grads, state, params, step)
+    state_logical_axes: Callable[[Any], Any]
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params, step):
+        step1 = step + 1
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** step1.astype(jnp.float32)
+        bc2 = 1 - b2 ** step1.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mh, vh = m2 / bc1, v2 / bc2
+            u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m, "v": v}
+
+    def axes(param_axes, abstract_params=None):
+        return {"m": param_axes, "v": param_axes}
+
+    return Optimizer(init, update, axes)
+
+
+def adafactor(lr_fn, decay=0.8, eps=1e-30, weight_decay=0.0, min_dim_factored=128) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern). Params with >=2 dims whose
+    trailing two dims are both >= min_dim_factored get factored row/col stats;
+    everything else falls back to a full second moment."""
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return jax.tree_util.tree_map(one, params)
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                    vr.mean(-1)[..., None, None], eps)
+                u = g * jax.lax.rsqrt(denom + eps)
+                s2 = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                s2 = {"v": v}
+            # update clipping (RMS<=1) per Adafactor
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), s2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_state = tdef.unflatten([o[1] for o in outs])
+        return updates, new_state
+
+    def axes(param_axes, abstract_params=None):
+        assert abstract_params is not None, "adafactor axes need abstract params"
+
+        def one(ax, p):
+            if _factored(p):
+                return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + (ax[-1],)}
+            return {"v": ax}
+
+        return jax.tree_util.tree_map(one, param_axes, abstract_params,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+
+    return Optimizer(init, update, axes)
+
+
+def sgdm(lr_fn, momentum=0.9, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m2 = momentum * m + g
+            return (-lr * m2).astype(p.dtype), m2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m}
+
+    def axes(param_axes, abstract_params=None):
+        return {"m": param_axes}
+
+    return Optimizer(init, update, axes)
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    if name == "sgdm":
+        return sgdm(lr_fn, **kw)
+    raise ValueError(name)

@@ -1,0 +1,72 @@
+"""Small shared utilities: logging, pytree helpers, deterministic RNG."""
+from __future__ import annotations
+
+import logging
+import math
+import sys
+from typing import Any, Iterable
+
+import jax
+import numpy as np
+
+__all__ = [
+    "get_logger",
+    "tree_bytes",
+    "tree_num_params",
+    "human_bytes",
+    "human_count",
+    "cdiv",
+    "round_up",
+]
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    logger = logging.getLogger(name)
+    if not logger.handlers:
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(
+            logging.Formatter("[%(asctime)s %(name)s %(levelname)s] %(message)s", "%H:%M:%S")
+        )
+        logger.addHandler(handler)
+        logger.setLevel(logging.INFO)
+    return logger
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_num_params(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves if hasattr(l, "shape"))
+
+
+_UNITS = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"]
+
+
+def human_bytes(n: float) -> str:
+    if n <= 0:
+        return "0B"
+    k = min(int(math.log(n, 1024)), len(_UNITS) - 1)
+    return f"{n / 1024 ** k:.2f}{_UNITS[k]}"
+
+
+def human_count(n: float) -> str:
+    for unit, div in (("T", 1e12), ("B", 1e9), ("M", 1e6), ("K", 1e3)):
+        if abs(n) >= div:
+            return f"{n / div:.2f}{unit}"
+    return str(int(n))
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

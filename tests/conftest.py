@@ -1,0 +1,35 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+# NOTE: no XLA_FLAGS here — smoke tests must see the real single device.
+# Multi-device tests go through run_with_devices (fresh subprocess).
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 420) -> str:
+    """Run `code` in a subprocess with n forced host devices. The code should
+    print results; raises on nonzero exit. Returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\nstdout:\n{proc.stdout}\n"
+            f"stderr:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,91 @@
+"""Attention + SSM layer math: chunked flash == naive; sliding window; decode
+== full-sequence; chunked linear attention == per-step recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import chunked_attention, decode_attention
+from repro.models.ssm import (
+    _chunked_linear_attention,
+    linear_attention_step,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _naive_attention(q, k, v, causal=True, window=0):
+    S, T = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / (q.shape[-1] ** 0.5)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= ki <= qi
+    if window:
+        m &= qi - ki < window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+@pytest.mark.parametrize("S,qc,kc", [(128, 32, 64), (256, 256, 256), (64, 16, 16)])
+@pytest.mark.parametrize("window", [0, 48])
+def test_chunked_attention_matches_naive(S, qc, kc, window):
+    B, H, D = 2, 3, 32
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, window=window, q_chunk=qc, kv_chunk=kc)
+    want = _naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-4)
+
+
+def test_decode_matches_full_attention_last_position():
+    B, S, H, D = 2, 48, 4, 16
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    full = _naive_attention(q, k, v, causal=True)
+    dec = decode_attention(q[:, -1:], k, v, S)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("mode", ["mamba", "rwkv"])
+def test_chunked_linear_attention_matches_step_recurrence(mode):
+    B, S, H, K, V = 1, 64, 2, 8, 8
+    q = jnp.asarray(RNG.standard_normal((B, S, H, K)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, K)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, V)) * 0.5, jnp.float32)
+    g = jnp.asarray(-np.abs(RNG.standard_normal((B, S, H, K))) * 0.3, jnp.float32)
+    if mode == "mamba":
+        g = g[..., :1]
+    bonus = jnp.asarray(RNG.standard_normal((H, K)) * 0.1, jnp.float32) if mode == "rwkv" else None
+    y_chunk, state_f = _chunked_linear_attention(q, k, v, g, chunk=16, mode=mode,
+                                                 bonus=bonus, return_state=True)
+    # per-step recurrence
+    state = jnp.zeros((B, H, K, V), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, state = linear_attention_step(q[:, t], k[:, t], v[:, t], g[:, t], state,
+                                         mode=mode, bonus=bonus)
+        ys.append(y)
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               atol=1e-4, rtol=1e-3)
+    # final states agree too
+    np.testing.assert_allclose(np.asarray(state_f), np.asarray(state),
+                               atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("mode", ["mamba", "rwkv"])
+def test_chunk_size_invariance(mode):
+    B, S, H, K = 1, 48, 2, 8
+    q = jnp.asarray(RNG.standard_normal((B, S, H, K)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, K)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, K)), jnp.float32)
+    g = jnp.full((B, S, H, K if mode == "rwkv" else 1), -0.2, jnp.float32)
+    a = _chunked_linear_attention(q, k, v, g, chunk=8, mode=mode)
+    b = _chunked_linear_attention(q, k, v, g, chunk=24, mode=mode)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3)

@@ -1,0 +1,68 @@
+"""Continuous-batching engine: interleaved requests must produce EXACTLY the
+tokens each request gets when decoded alone (slot isolation + per-slot
+positions), with occupancy > single-request batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.batching import ContinuousBatchingEngine, Request
+from repro.launch.serve import greedy_decode
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _solo(cfg, params, prompt, n):
+    return np.asarray(greedy_decode(cfg, params, jnp.asarray(prompt)[None], n,
+                                    max_len=32))[0].tolist()
+
+
+def test_interleaved_requests_match_solo(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 9, 4)]
+    refs = [_solo(cfg, params, p, 5) for p in prompts]
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=32)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new=5))
+    outs = {i: [] for i in range(3)}
+    for t in range(80):
+        if t == 2:
+            eng.submit(Request(uid=1, prompt=prompts[1], max_new=5))
+        if t == 5:
+            eng.submit(Request(uid=2, prompt=prompts[2], max_new=5))
+        for uid, tok in eng.tick():
+            outs[uid].append(tok)
+        if t > 5 and not eng.queue and all(a is None for a in eng.active):
+            break
+    for i in range(3):
+        assert outs[i] == refs[i], (i, outs[i], refs[i])
+    assert eng.stats.requests_completed == 3
+    assert eng.stats.mean_occupancy > 0.5
+
+
+def test_slot_reuse_does_not_leak_state(setup):
+    """A slot reused by a second request must not see the first request's
+    cache (positions reset; masking hides stale rows)."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    pa = rng.integers(1, cfg.vocab_size, 5).astype(np.int32)
+    pb = rng.integers(1, cfg.vocab_size, 5).astype(np.int32)
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=32)
+    eng.submit(Request(uid=0, prompt=pa, max_new=4))
+    eng.submit(Request(uid=1, prompt=pb, max_new=4))
+    outs = {0: [], 1: []}
+    for _ in range(40):
+        for uid, tok in eng.tick():
+            outs[uid].append(tok)
+        if not eng.queue and all(a is None for a in eng.active):
+            break
+    assert outs[0] == _solo(cfg, params, pa, 4)
+    assert outs[1] == _solo(cfg, params, pb, 4)  # unpolluted by request 0

@@ -1,0 +1,75 @@
+"""Assignment-table fidelity: every production config matches the assigned
+numbers exactly; every smoke config respects the reduction contract."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, get_smoke_config
+
+EXPECTED = {
+    "qwen2-vl-72b": dict(family="vlm", num_layers=80, d_model=8192, num_heads=64,
+                         num_kv_heads=8, d_ff=29568, vocab_size=152064),
+    "kimi-k2-1t-a32b": dict(family="moe", num_layers=61, d_model=7168, num_heads=64,
+                            num_kv_heads=8, d_ff=2048, vocab_size=163840,
+                            num_experts=384, moe_top_k=8),
+    "chatglm3-6b": dict(family="dense", num_layers=28, d_model=4096, num_heads=32,
+                        num_kv_heads=2, d_ff=13696, vocab_size=65024),
+    "seamless-m4t-large-v2": dict(family="audio", num_layers=24, d_model=1024,
+                                  num_heads=16, num_kv_heads=16, d_ff=8192,
+                                  vocab_size=256206, is_encoder_decoder=True),
+    "deepseek-v2-236b": dict(family="moe", num_layers=60, d_model=5120,
+                             num_heads=128, num_kv_heads=128, d_ff=1536,
+                             vocab_size=102400, num_experts=160, moe_top_k=6,
+                             use_mla=True, kv_lora_rank=512),
+    "qwen1.5-32b": dict(family="dense", num_layers=64, d_model=5120, num_heads=40,
+                        num_kv_heads=40, d_ff=27392, vocab_size=152064,
+                        qkv_bias=True),
+    "llama3.2-1b": dict(family="dense", num_layers=16, d_model=2048, num_heads=32,
+                        num_kv_heads=8, d_ff=8192, vocab_size=128256),
+    "rwkv6-3b": dict(family="ssm", num_layers=32, d_model=2560, d_ff=8960,
+                     vocab_size=65536, ssm_kind="rwkv6"),
+    "llama3.2-3b": dict(family="dense", num_layers=28, d_model=3072, num_heads=24,
+                        num_kv_heads=8, d_ff=8192, vocab_size=128256),
+    "zamba2-1.2b": dict(family="hybrid", num_layers=38, d_model=2048, num_heads=32,
+                        num_kv_heads=32, d_ff=8192, vocab_size=32000,
+                        ssm_state=64, ssm_kind="mamba2"),
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_production_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    for key, val in EXPECTED[arch].items():
+        assert getattr(cfg, key) == val, (arch, key, getattr(cfg, key), val)
+    assert cfg.source  # citation present
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_config_reduction_contract(arch):
+    cfg = get_smoke_config(arch)
+    full = get_config(arch)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    assert cfg.family == full.family
+    assert cfg.ssm_kind == full.ssm_kind
+    assert cfg.use_mla == full.use_mla
+    assert cfg.is_encoder_decoder == full.is_encoder_decoder
+
+
+def test_shapes_table():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_param_counts_in_expected_range():
+    # analytic totals should land near the model names
+    assert 60e9 < get_config("qwen2-vl-72b").num_params() < 85e9
+    assert 0.8e12 < get_config("kimi-k2-1t-a32b").num_params() < 1.3e12
+    assert 25e9 < get_config("kimi-k2-1t-a32b").num_active_params() < 40e9
+    assert 180e9 < get_config("deepseek-v2-236b").num_params() < 280e9
+    assert 1.0e9 < get_config("llama3.2-1b").num_params() < 1.7e9
+    assert 2.4e9 < get_config("rwkv6-3b").num_params() < 4.5e9

@@ -1,0 +1,115 @@
+"""Execution models (survey §6) + protocol state machines (§7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.execution import (
+    one_shot_aggregate,
+    p3_plan,
+    parallel_chunk_aggregate,
+    run_conventional,
+    run_factored,
+    run_operator_parallel,
+    sequential_chunk_aggregate,
+)
+from repro.core.graph import er_graph, powerlaw_graph
+from repro.core.partition import PARTITIONERS
+from repro.core.protocols import (
+    PROTOCOL_COSTS,
+    HistoricalState,
+    epoch_adaptive_refresh,
+    epoch_fixed_refresh,
+    variation_refresh,
+)
+from repro.core.training import boundary_mask_for
+
+
+def test_chunk_execution_equals_one_shot():
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    H = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    ref = one_shot_aggregate(A, H)
+    for n in (2, 4, 8):
+        np.testing.assert_allclose(np.asarray(sequential_chunk_aggregate(A, H, n)),
+                                   np.asarray(ref), atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(parallel_chunk_aggregate(A, H, n)),
+                                   np.asarray(ref), atol=1e-5, rtol=1e-4)
+
+
+def test_minibatch_execution_models_accounting():
+    import time
+
+    ids = [np.arange(4)] * 6
+
+    def sample(x):
+        time.sleep(0.002)
+        return x
+
+    def extract(mb):
+        time.sleep(0.002)
+        return mb
+
+    def train(mb, f):
+        time.sleep(0.002)
+
+    conv = run_conventional(ids, sample, extract, train)
+    fact = run_factored(ids, sample, extract, train)
+    op = run_operator_parallel(ids, sample, extract, train, lanes=3)
+    assert conv.wall >= conv.busy() * 0.9
+    assert fact.wall <= conv.wall * 1.05  # overlap can only help
+    assert op.wall <= conv.wall
+
+
+def test_p3_plan_saves_when_features_wide():
+    plan = p3_plan(num_batch_vertices=1000, num_batch_edges=5000,
+                   feature_dim=1024, hidden_dim=32, num_workers=8)
+    assert plan.saving > 0.5  # the P3 regime: D >> H
+    plan2 = p3_plan(1000, 5000, feature_dim=16, hidden_dim=64, num_workers=8)
+    assert plan2.saving < plan.saving  # narrow features: pull-push loses edge
+
+
+def test_protocol_costs_ordering():
+    g = powerlaw_graph(200, avg_degree=8, seed=1)
+    part = PARTITIONERS["metis_like"](g, 4)
+    b = PROTOCOL_COSTS["broadcast"](g, part, 32)
+    p = PROTOCOL_COSTS["p2p"](g, part, 32)
+    r = PROTOCOL_COSTS["remote_partial_agg"](g, part, 32)
+    assert p.bytes_per_layer <= b.bytes_per_layer  # P2P ships only boundaries
+    assert r.bytes_per_layer <= p.bytes_per_layer + 1  # partial agg <= raw rows
+
+
+@pytest.mark.parametrize("fn,kw", [
+    (epoch_fixed_refresh, {"staleness": 3}),
+    (epoch_adaptive_refresh, {"staleness": 3}),
+    (variation_refresh, {"eps": 1e9, "hard_bound": 3}),  # never drifts -> bound forces
+])
+def test_staleness_bound_invariant(fn, kw):
+    """Each model must keep per-partition age <= its bound — the survey's
+    convergence-critical property (Table 3)."""
+    V, D, K = 40, 8, 4
+    rng = np.random.default_rng(0)
+    assignment = jnp.asarray(rng.integers(0, K, V), jnp.int32)
+    bmask = jnp.asarray(rng.random(V) < 0.5)
+    state = HistoricalState.create(V, D, K)
+    bound = kw.get("staleness", kw.get("hard_bound"))
+    for step in range(12):
+        h = jnp.asarray(rng.standard_normal((V, D)), jnp.float32)
+        _, state = fn(state, h, jnp.asarray(step), assignment, bmask, **kw)
+        assert int(state.age.max()) <= bound, (fn.__name__, step, state.age)
+
+
+def test_variation_refresh_reacts_to_drift():
+    V, D, K = 24, 4, 2
+    assignment = jnp.asarray(np.arange(V) % K, jnp.int32)
+    bmask = jnp.ones(V, bool)
+    state = HistoricalState.create(V, D, K)
+    h0 = jnp.ones((V, D))
+    _, state = variation_refresh(state, h0, jnp.asarray(0), assignment, bmask, eps=0.01)
+    bytes_after_first = float(state.bytes_pushed)
+    # no drift -> no new push
+    _, state = variation_refresh(state, h0, jnp.asarray(1), assignment, bmask, eps=0.01)
+    assert float(state.bytes_pushed) == bytes_after_first
+    # big drift -> push
+    _, state = variation_refresh(state, h0 * 10, jnp.asarray(2), assignment, bmask, eps=0.01)
+    assert float(state.bytes_pushed) > bytes_after_first

@@ -1,0 +1,78 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ell_spmm import ell_spmm_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sddmm import sddmm_pallas
+from repro.kernels.wkv_chunk import wkv_chunk_pallas
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("V,K,D", [(128, 8, 64), (256, 16, 128), (128, 32, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("normalize", [True, False])
+def test_ell_spmm(V, K, D, dtype, normalize):
+    ids = jnp.asarray(RNG.integers(0, V, (V, K)), jnp.int32)
+    mask = jnp.asarray(RNG.random((V, K)) < 0.6, jnp.float32)
+    H = jnp.asarray(RNG.standard_normal((V, D)), dtype)
+    got = ell_spmm_pallas(ids, mask, H, normalize=normalize, interpret=True)
+    want = ref.ell_spmm_ref(ids, mask, H, normalize=normalize)
+    tol = 1e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("V,K,D", [(128, 8, 32), (256, 12, 64)])
+def test_sddmm(V, K, D):
+    ids = jnp.asarray(RNG.integers(0, V, (V, K)), jnp.int32)
+    mask = jnp.asarray(RNG.random((V, K)) < 0.5, jnp.float32)
+    Hw = jnp.asarray(RNG.standard_normal((V, D)), jnp.float32)
+    a_src = jnp.asarray(RNG.standard_normal(D), jnp.float32)
+    a_dst = jnp.asarray(RNG.standard_normal(D), jnp.float32)
+    got = sddmm_pallas(ids, mask, Hw, a_src, a_dst, interpret=True)
+    want = ref.sddmm_ref(ids, mask, Hw, a_src, a_dst)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,S,D", [(1, 2, 128, 64), (2, 4, 256, 64), (1, 1, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, S, D, causal, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, H, S, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, D)), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,S,K,chunk", [(1, 2, 64, 16, 16), (2, 3, 128, 32, 32),
+                                           (1, 1, 128, 64, 64)])
+def test_wkv_chunk(B, H, S, K, chunk):
+    r = jnp.asarray(RNG.standard_normal((B, H, S, K)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, K)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, K)) * 0.5, jnp.float32)
+    g = jnp.asarray(-np.exp(RNG.standard_normal((B, H, S, K)) * 0.5 - 1.0), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, K)) * 0.1, jnp.float32)
+    got = wkv_chunk_pallas(r, k, v, g, u, chunk=chunk, interpret=True)
+    want = ref.wkv_chunk_ref(r, k, v, jnp.clip(g, -1.2, 0.0), u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-3)
+
+
+def test_wkv_chunk_invariance():
+    """Same result for different chunk sizes (the chunking is exact)."""
+    B, H, S, K = 1, 2, 96, 16
+    r = jnp.asarray(RNG.standard_normal((B, H, S, K)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, K)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, K)) * 0.5, jnp.float32)
+    g = jnp.asarray(np.full((B, H, S, K), -0.3), jnp.float32)
+    u = jnp.zeros((H, K), jnp.float32)
+    a = wkv_chunk_pallas(r, k, v, g, u, chunk=16, interpret=True)
+    b = wkv_chunk_pallas(r, k, v, g, u, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3)

@@ -1,0 +1,120 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.execution import parallel_chunk_aggregate, sequential_chunk_aggregate
+from repro.core.graph import er_graph
+from repro.core.partition.edge_cut import hash_partition, ldg_partition
+from repro.core.protocols.async_hist import HistoricalState, epoch_adaptive_refresh
+from repro.kernels import ref
+from repro.models.layers import chunked_attention
+from repro.utils import cdiv, round_up
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(st.integers(1, 1000), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_cdiv_round_up(a, b):
+    assert cdiv(a, b) * b >= a
+    assert round_up(a, b) % b == 0
+    assert 0 <= round_up(a, b) - a < b
+
+
+@given(st.integers(20, 120), st.integers(2, 6), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_partition_invariants(n, k, seed):
+    g = er_graph(n, avg_degree=4, seed=seed % 17)
+    for part in (hash_partition(g, k, seed=seed), ldg_partition(g, k, seed=seed)):
+        assert part.assignment.shape == (n,)
+        assert set(np.unique(part.assignment)) <= set(range(k))
+        sizes = np.bincount(part.assignment, minlength=k)
+        assert sizes.max() <= np.ceil(1.5 * n / k) + 1  # slack bound
+
+
+@given(st.integers(1, 4), st.integers(2, 5), st.integers(1, 3), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_chunk_aggregation_equivalence(nc_pow, rows_pow, d_pow, seed):
+    rng = np.random.default_rng(seed)
+    n_chunks = 2 ** nc_pow
+    rows = 2 ** rows_pow
+    cols = n_chunks * (seed % 3 + 1)
+    A = jnp.asarray(rng.standard_normal((rows, cols)), jnp.float32)
+    H = jnp.asarray(rng.standard_normal((cols, 2 ** d_pow)), jnp.float32)
+    ref_out = np.asarray(A @ H)
+    np.testing.assert_allclose(np.asarray(sequential_chunk_aggregate(A, H, n_chunks)),
+                               ref_out, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(parallel_chunk_aggregate(A, H, n_chunks)),
+                               ref_out, atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(1, 2), st.integers(1, 3), st.sampled_from([16, 32, 64]),
+       st.sampled_from([8, 16]), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_chunked_attention_softmax_rows(B, H, S, D, seed):
+    """Output rows are convex combinations of V rows: max(|out|) <= max(|v|)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    out = chunked_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
+
+
+@given(st.integers(8, 40), st.integers(2, 5), st.integers(2, 5), st.integers(0, 100))
+@settings(**SETTINGS)
+def test_staleness_age_never_exceeds_bound(V, K, bound, seed):
+    rng = np.random.default_rng(seed)
+    assignment = jnp.asarray(rng.integers(0, K, V), jnp.int32)
+    bmask = jnp.asarray(rng.random(V) < 0.7)
+    state = HistoricalState.create(V, 4, K)
+    for step in range(2 * bound + 3):
+        h = jnp.asarray(rng.standard_normal((V, 4)), jnp.float32)
+        _, state = epoch_adaptive_refresh(state, h, jnp.asarray(step), assignment,
+                                          bmask, staleness=bound)
+        assert int(state.age.max()) <= bound
+
+
+@given(st.integers(8, 64), st.integers(2, 8), st.integers(8, 32), st.integers(0, 500))
+@settings(**SETTINGS)
+def test_ell_spmm_oracle_matches_dense(V, K, D, seed):
+    """ELL aggregation == dense adjacency product (the format invariant)."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, V, (V, K)).astype(np.int32)
+    mask = (rng.random((V, K)) < 0.5).astype(np.float32)
+    H = rng.standard_normal((V, D)).astype(np.float32)
+    y = np.asarray(ref.ell_spmm_ref(jnp.asarray(ids), jnp.asarray(mask),
+                                    jnp.asarray(H), normalize=False))
+    A = np.zeros((V, V), np.float32)
+    for v in range(V):
+        for j in range(K):
+            if mask[v, j]:
+                A[v, ids[v, j]] += 1.0
+    np.testing.assert_allclose(y, A @ H, atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(2, 16), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_router_weights_normalized(T, seed):
+    """MoE router top-k weights are a convex combination (sum to 1)."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models.layers import ParamBuilder
+    from repro.models.moe import _router, moe_params
+
+    cfg = get_smoke_config("kimi-k2-1t-a32b")
+    p = moe_params(ParamBuilder("init", jax.random.PRNGKey(seed)), cfg)
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((T, cfg.d_model)),
+                    jnp.float32)
+    w, ids, aux = _router(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), np.ones(T), atol=1e-3)
+    assert int(ids.max()) < cfg.num_experts
+    # E * sum(f*p) ~ 1 for balanced routing; >= 1 only in expectation, so
+    # allow small-T fluctuation below it
+    assert float(aux) >= 0.9

@@ -1,0 +1,130 @@
+"""Samplers, distributed sampling protocols, and cache policies (survey §5)."""
+import numpy as np
+import pytest
+
+from repro.core.graph import powerlaw_graph
+from repro.core.partition import PARTITIONERS
+from repro.core.sampling import (
+    FIFOCache,
+    analysis_cache,
+    csp_sample,
+    importance_cache,
+    layer_wise_sample,
+    node_wise_sample,
+    presampling_cache,
+    proximity_ordering,
+    pull_based_sample,
+    simulate_hit_ratio,
+    skewed_weighted_sample,
+    static_degree_cache,
+    subgraph_sample,
+)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return powerlaw_graph(300, avg_degree=10, seed=3)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+def test_node_wise_sample_structure(g, rng):
+    targets = np.arange(16)
+    mb = node_wise_sample(g, targets, (4, 4), rng)
+    assert len(mb.layer_adj) == 2
+    # rows of last block == targets
+    assert mb.layer_adj[-1].shape[0] == len(targets)
+    # block shapes chain: cols of layer l == rows count source frontier
+    for l in range(2):
+        assert mb.layer_adj[l].shape == (len(mb.layer_vertices[l + 1]),
+                                         len(mb.layer_vertices[l]))
+    # row normalization
+    for A in mb.layer_adj:
+        assert (A.sum(1) <= 1.0 + 1e-5).all()
+    assert mb.input_features.shape[0] == mb.num_input_vertices
+
+
+def test_fanout_bounds_frontier_growth(g, rng):
+    mb = node_wise_sample(g, np.arange(8), (3, 3), rng)
+    # frontier growth bounded by fanout+1 per hop
+    assert len(mb.layer_vertices[1]) <= 8 * (3 + 1)
+    assert len(mb.layer_vertices[0]) <= len(mb.layer_vertices[1]) * (3 + 1)
+
+
+def test_layer_wise_and_subgraph_samplers(g, rng):
+    mb = layer_wise_sample(g, np.arange(8), (32, 32), rng)
+    assert len(mb.layer_adj) == 2
+    mb2 = subgraph_sample(g, np.arange(4), walk_length=8, rng=rng)
+    assert mb2.layer_adj[0].shape[0] == mb2.layer_adj[0].shape[1]
+
+
+def test_csp_beats_pull_on_communication(g, rng):
+    """DSP's claim: pushing the sampling task moves less data than pulling
+    full neighbor lists (power-law graphs: deg >> fanout)."""
+    part = PARTITIONERS["hash"](g, 4)
+    targets = np.arange(64)
+    _, pull = pull_based_sample(g, part, 0, targets, fanout=3, rng=rng)
+    _, push = csp_sample(g, part, 0, targets, fanout=3, rng=rng)
+    assert push.total() < pull.total()
+
+
+def test_skewed_sampling_locality_increases_with_s(g, rng):
+    part = PARTITIONERS["hash"](g, 4)
+    targets = np.arange(64)
+    _, _, loc1 = skewed_weighted_sample(g, part, 0, targets, 4, s=1.0,
+                                        rng=np.random.default_rng(1))
+    _, _, loc4 = skewed_weighted_sample(g, part, 0, targets, 4, s=8.0,
+                                        rng=np.random.default_rng(1))
+    assert loc4 > loc1
+
+
+def _access_stream(g, n_batches=20, seed=0):
+    rng = np.random.default_rng(seed)
+    train = np.where(g.train_mask)[0]
+    for _ in range(n_batches):
+        batch = rng.choice(train, 16, replace=False)
+        mb = node_wise_sample(g, batch, (4, 4), rng)
+        yield mb.layer_vertices[0]
+
+
+def test_cache_policies_beat_random(g):
+    cap = 60
+    rng = np.random.default_rng(9)
+    random_ids = rng.choice(g.num_vertices, cap, replace=False)
+    hr_rand = simulate_hit_ratio(random_ids, _access_stream(g))
+    hr_deg = simulate_hit_ratio(static_degree_cache(g, cap), _access_stream(g))
+    hr_pre = simulate_hit_ratio(presampling_cache(g, cap), _access_stream(g))
+    hr_ana = simulate_hit_ratio(analysis_cache(g, cap), _access_stream(g))
+    assert hr_deg > hr_rand
+    assert hr_pre >= hr_deg - 0.05  # pre-sampling ~ at least degree-level
+    assert hr_ana > hr_rand
+
+
+def test_importance_cache_nonempty(g):
+    ids = importance_cache(g, 40)
+    assert len(ids) == 40 and len(set(ids.tolist())) == 40
+
+
+def test_fifo_with_proximity_ordering(g):
+    train = np.where(g.train_mask)[0]
+    order = proximity_ordering(g, train, seed=0)
+    assert sorted(order.tolist()) == sorted(train.tolist())
+    fifo = FIFOCache(capacity=80)
+    rng = np.random.default_rng(0)
+    stream = []
+    for i in range(0, len(order) - 16, 16):
+        mb = node_wise_sample(g, order[i : i + 16], (4, 4), rng)
+        stream.append(mb.layer_vertices[0])
+    hr_bfs = fifo.run(stream)
+    # random ordering for comparison
+    fifo2 = FIFOCache(capacity=80)
+    perm = np.random.default_rng(1).permutation(train)
+    stream2 = []
+    for i in range(0, len(perm) - 16, 16):
+        mb = node_wise_sample(g, perm[i : i + 16], (4, 4), rng)
+        stream2.append(mb.layer_vertices[0])
+    hr_rand = fifo2.run(stream2)
+    assert hr_bfs >= hr_rand - 0.05  # BGL claim: proximity ordering helps FIFO
