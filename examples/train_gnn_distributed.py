@@ -1,13 +1,19 @@
-"""End-to-end distributed GNN training driver (the paper's workload):
+"""End-to-end distributed GNN training driver (the paper's workload).
 
-- partitions a power-law graph with a selectable partitioner,
-- runs full-graph training whose aggregation executes under a selectable
-  distributed-SpMM execution model (survey Table 2) over a real device mesh,
-- reports loss/accuracy and the collective bytes of the chosen model.
+Two modes:
+
+* ``--engine`` (default): the DistGNNEngine — edge-cut partition plan +
+  Pallas-ELL local multiply + selectable exchange execution model
+  (broadcast | ring | p2p halo exchange) + sync/async-historical protocol,
+  all inside ONE jitted shard_map train step.  Reports loss/accuracy, the
+  collective bytes of the chosen model, and the oracle gap vs the
+  single-device reference.
+* ``--no-engine``: the legacy dense-block SpMM execution models (survey
+  Table 2) over a device mesh, kept as the survey-taxonomy reference.
 
 Run with forced host devices to see real collectives on CPU:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    PYTHONPATH=src python examples/train_gnn_distributed.py --exec spmm_1d --parts 8
+    PYTHONPATH=src python examples/train_gnn_distributed.py --exec p2p --protocol epoch_adaptive
 """
 import argparse
 
@@ -15,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import EXECUTION_MODELS, PROTOCOLS, DistGNNEngine, EngineConfig
 from repro.core.execution.spmm_models import SPMM_MODELS
 from repro.core.graph import sbm_graph
 from repro.core.models.gnn import accuracy, full_graph_forward, init_gnn_params, softmax_xent
@@ -22,19 +29,35 @@ from repro.core.partition import PARTITIONERS
 from repro.launch.hlo_analysis import collective_bytes
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--exec", default="spmm_1d", choices=list(SPMM_MODELS))
-    ap.add_argument("--parts", type=int, default=0, help="0 = all devices")
-    ap.add_argument("--partition", default="metis_like")
-    ap.add_argument("--epochs", type=int, default=40)
-    ap.add_argument("--vertices", type=int, default=512)
-    args = ap.parse_args()
-
+def run_engine(args, g):
+    cfg = EngineConfig(execution=args.exec, protocol=args.protocol,
+                       partitioner=args.partition, lr=args.lr)
     n_dev = len(jax.devices())
     k = args.parts or n_dev
     assert k <= n_dev, f"need {k} devices, have {n_dev} (set XLA_FLAGS)"
-    g = sbm_graph(args.vertices, num_blocks=8, p_in=0.05, p_out=0.003, seed=0)
+    mesh = jax.make_mesh((k,), ("w",))
+    eng = DistGNNEngine(g, mesh=mesh, cfg=cfg)
+    comp = eng.lower_step().compile()
+    coll, kinds = collective_bytes(comp.as_text())
+    print(f"engine: exec={args.exec} protocol={args.protocol} "
+          f"partition={args.partition} k={k} (nb={eng.nb}, halo cap="
+          f"{getattr(eng, 'cap', '-')}) collective bytes/step = "
+          f"{coll / 1e6:.2f} MB  {kinds}")
+    losses, logits = eng.train(args.epochs)
+    for e in range(0, args.epochs, max(args.epochs // 4, 1)):
+        print(f"epoch {e:3d} loss {losses[e]:.4f}")
+    print(f"final: train_acc={eng.accuracy(logits, 'train'):.3f} "
+          f"test_acc={eng.accuracy(logits, 'test'):.3f}")
+    if args.oracle_check:
+        ref_losses, _ = eng.train(args.epochs, reference=True)
+        gap = max(abs(a - b) for a, b in zip(losses, ref_losses))
+        print(f"oracle gap (max |loss_dist - loss_ref|) = {gap:.2e}")
+
+
+def run_legacy(args, g):
+    n_dev = len(jax.devices())
+    k = args.parts or n_dev
+    assert k <= n_dev, f"need {k} devices, have {n_dev} (set XLA_FLAGS)"
 
     # partition + relabel so device row-blocks align with partitions
     part = PARTITIONERS[args.partition](g, k)
@@ -82,6 +105,43 @@ def main():
             print(f"epoch {e:3d} loss {float(loss):.4f}")
     print(f"final: train_acc={float(accuracy(logits, y, train_m)):.3f} "
           f"test_acc={float(accuracy(logits, y, test_m)):.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="use the DistGNNEngine (ELL + halo exchange); "
+                    "--no-engine runs the legacy dense-block SpMM models")
+    ap.add_argument("--exec", default=None,
+                    help=f"engine: {EXECUTION_MODELS} (default p2p); "
+                    f"legacy: {list(SPMM_MODELS)} (default spmm_1d)")
+    ap.add_argument("--protocol", default="sync", choices=list(PROTOCOLS))
+    ap.add_argument("--parts", type=int, default=0, help="0 = all devices")
+    ap.add_argument("--partition", default="metis_like")
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--vertices", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=0.5)
+    ap.add_argument("--oracle-check", action="store_true",
+                    help="engine: also run the single-device reference and "
+                    "report the max loss gap")
+    args = ap.parse_args()
+
+    if args.exec is None:
+        args.exec = "p2p" if args.engine else "spmm_1d"
+    elif args.exec not in set(EXECUTION_MODELS) | set(SPMM_MODELS):
+        ap.error(f"--exec must be one of {EXECUTION_MODELS} (engine) or "
+                 f"{list(SPMM_MODELS)} (legacy), got {args.exec!r}")
+    if args.engine and args.exec in SPMM_MODELS:
+        args.engine = False  # legacy exec name given: run the legacy path
+    if not args.engine and args.exec not in SPMM_MODELS:
+        ap.error(f"--no-engine requires a legacy exec name {list(SPMM_MODELS)}, "
+                 f"got {args.exec!r}")
+    g = sbm_graph(args.vertices, num_blocks=8, p_in=0.05, p_out=0.003, seed=0)
+    if args.engine:
+        run_engine(args, g)
+    else:
+        run_legacy(args, g)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI entrypoints (see tests/README.md for the tier matrix).
+#
+#   scripts/ci.sh           tier-1: the full suite (the repo's contract)
+#   scripts/ci.sh --smoke   fast subset: kernels + a 4-device engine smoke
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--smoke" ]]; then
+    python -m pytest -x -q tests/test_kernels.py tests/test_exec_protocols.py
+    # 4-device engine smoke: one exec model x {sync, async} vs the oracle
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
+import jax
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+
+g = sbm_graph(96, num_blocks=4, p_in=0.08, p_out=0.01, seed=0)
+for proto in ("sync", "epoch_adaptive"):
+    eng = DistGNNEngine(g, cfg=EngineConfig(execution="p2p", protocol=proto,
+                                            hidden=16, lr=0.3))
+    ld, _ = eng.train(3)
+    lr_, _ = eng.train(3, reference=True)
+    err = max(abs(a - b) for a, b in zip(ld, lr_))
+    assert err < 1e-4, (proto, err)
+    print(f"smoke OK p2p/{proto}: oracle err {err:.2e}")
+EOF
+else
+    python -m pytest -x -q
+fi

@@ -1,0 +1,516 @@
+"""DistGNNEngine: the survey's four technique families composed into ONE
+jitted shard_map training step.
+
+  partition (§4)   an edge-cut partitioner assigns vertices to devices; the
+                   engine relabels vertices so device d owns the contiguous
+                   padded block [d*nb, (d+1)*nb) — the partition plan IS the
+                   device layout.
+  batch (§5)       full-graph partition batches: each device's block is its
+                   batch (PSGD-style ownership, loss masked to owned train
+                   vertices and globally psum-reduced).
+  execution (§6)   the local multiply is the Pallas ELL SpMM
+                   (repro.kernels.ell_spmm, differentiable via transpose
+                   scatter-add VJP); the neighbor exchange is a selectable
+                   execution model:
+                     broadcast — all_gather of the full H (CAGNET 1D),
+                     ring      — ppermute rotation with per-source-block
+                                 partial aggregation (SAR/chunk pipeline),
+                     p2p       — halo exchange: only the boundary rows each
+                                 destination actually needs cross the wire
+                                 (all_to_all on a static partition plan).
+  protocol (§7)    sync (fresh embeddings every layer) or async historical
+                   embeddings with a bounded-staleness model (epoch_fixed /
+                   epoch_adaptive / variation), applied block-locally so the
+                   SPMD step and the single-device oracle share the exact
+                   same refresh math (protocols.async_hist.block_refresh).
+
+Every configuration is oracle-checkable: `reference_step` runs the identical
+math on one device (vmapping the per-block protocol over the block axis), so
+multi-device runs must match it to float tolerance — the engine's contract,
+enforced by tests/test_engine_distributed.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import interpret_default, shard_map
+from repro.core.graph import Graph
+from repro.core.models.gnn import init_gnn_params
+from repro.core.partition.edge_cut import PARTITIONERS, Partition
+from repro.core.protocols.async_hist import block_refresh
+from repro.kernels.ell_spmm import ell_spmm
+
+EXECUTION_MODELS = ("broadcast", "ring", "p2p")
+PROTOCOLS = ("sync", "epoch_fixed", "epoch_adaptive", "variation")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    execution: str = "p2p"  # broadcast | ring | p2p
+    protocol: str = "sync"  # sync | epoch_fixed | epoch_adaptive | variation
+    partitioner: str = "metis_like"  # any key of PARTITIONERS
+    hidden: int = 32
+    num_layers: int = 2
+    lr: float = 0.5
+    staleness: int = 2
+    eps_v: float = 0.05
+    hard_bound: int = 4
+    seed: int = 0
+    use_pallas: bool = True  # False: pure-jnp gather (debug / tiny graphs)
+    interpret: Optional[bool] = None  # Pallas interpret mode; None = auto
+
+
+class DistGNNEngine:
+    """Builds the device layout + exchange plan from (graph, mesh, config) and
+    exposes a jitted distributed train step plus its single-device oracle."""
+
+    def __init__(self, g: Graph, mesh: Optional[Mesh] = None,
+                 cfg: Optional[EngineConfig] = None,
+                 partition: Optional[Partition] = None):
+        self.cfg = cfg = cfg or EngineConfig()
+        if cfg.execution not in EXECUTION_MODELS:
+            raise ValueError(f"execution must be one of {EXECUTION_MODELS}")
+        if cfg.protocol not in PROTOCOLS:
+            raise ValueError(f"protocol must be one of {PROTOCOLS}")
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), ("w",))
+        if len(mesh.axis_names) != 1:
+            raise ValueError("DistGNNEngine wants a 1D mesh (one axis over "
+                             f"all devices); got axes {mesh.axis_names}")
+        self.mesh = mesh
+        self.axis = mesh.axis_names[0]
+        self.k = int(np.prod(mesh.devices.shape))
+        self.g = g
+        self.interpret = (interpret_default() if cfg.interpret is None
+                          else cfg.interpret)
+        self.part = partition or PARTITIONERS[cfg.partitioner](g, self.k)
+        self._build_layout()
+        self._build_exchange_plan()
+        num_classes = int(g.labels.max()) + 1
+        self.dims = ([g.features.shape[1]]
+                     + [cfg.hidden] * (cfg.num_layers - 1) + [num_classes])
+        self._step = None
+        self._ref_step = None
+
+    # ------------------------------------------------------------------
+    # host-side plan building
+    # ------------------------------------------------------------------
+
+    def _build_layout(self):
+        """Relabel vertices so partition p owns global rows [p*nb, (p+1)*nb).
+        Pad slots are dead: no edges, zero features/weights."""
+        g, k = self.g, self.k
+        assign = self.part.assignment
+        sizes = np.bincount(assign, minlength=k)
+        self.nb = nb = max(int(sizes.max()), 1)
+        self.Vp = Vp = k * nb
+        old_by_part = [np.where(assign == p)[0] for p in range(k)]
+        new_of_old = np.full(g.num_vertices, -1, np.int64)
+        for p, olds in enumerate(old_by_part):
+            new_of_old[olds] = p * nb + np.arange(len(olds))
+        self.new_of_old = new_of_old
+        D = g.features.shape[1]
+        X = np.zeros((Vp, D), np.float32)
+        y = np.zeros((Vp,), np.int32)
+        train_w = np.zeros((Vp,), np.float32)
+        test_w = np.zeros((Vp,), np.float32)
+        olds = np.arange(g.num_vertices)
+        X[new_of_old[olds]] = g.features[olds]
+        y[new_of_old[olds]] = g.labels[olds]
+        if g.train_mask is not None:
+            train_w[new_of_old[olds]] = g.train_mask[olds].astype(np.float32)
+        if g.test_mask is not None:
+            test_w[new_of_old[olds]] = g.test_mask[olds].astype(np.float32)
+        # ELL adjacency in new ids; pad id = Vp (zero row in gather tables)
+        deg = g.degree()
+        self.K = K = max(int(deg.max()), 1)
+        ids = np.full((Vp, K), Vp, np.int64)
+        mask = np.zeros((Vp, K), np.float32)
+        for old_v in range(g.num_vertices):
+            v = new_of_old[old_v]
+            nbs = new_of_old[g.neighbors(old_v)]
+            ids[v, : len(nbs)] = nbs
+            mask[v, : len(nbs)] = 1.0
+        self.ids_global = ids
+        self.mask = jnp.asarray(mask)
+        degp = np.maximum(mask.sum(1, keepdims=True), 1.0).astype(np.float32)
+        self.deg = jnp.asarray(degp)
+        self.X = jnp.asarray(X)
+        self.y = jnp.asarray(y)
+        self.train_w = jnp.asarray(train_w)
+        self.test_w = jnp.asarray(test_w)
+        # boundary: rows read by at least one remote partition
+        owner = ids // nb  # partition of each neighbor (pad -> k)
+        bmask = np.zeros((Vp,), bool)
+        row_part = np.repeat(np.arange(self.k), nb)
+        remote = (mask > 0) & (owner != row_part[:, None])
+        src = ids[remote]
+        bmask[src[src < Vp]] = True
+        self.bmask = jnp.asarray(bmask)
+
+    def _build_exchange_plan(self):
+        """Execution-model-specific static arrays (the §7 protocol plan)."""
+        k, nb, Vp, K = self.k, self.nb, self.Vp, self.K
+        ids = self.ids_global
+        row_part = np.repeat(np.arange(k), nb)
+        if self.cfg.execution == "broadcast":
+            # gather table per device = all_gather(H) [Vp] + zero row at Vp
+            self.ids_exec = jnp.asarray(ids.astype(np.int32))
+            return
+        if self.cfg.execution == "ring":
+            # per (dst row, src block): neighbor ids local to the src block,
+            # padded with nb -> the zero row appended to the rotating block
+            ids_by_src = np.full((Vp, k, K), nb, np.int32)
+            src_part = np.where(ids < Vp, ids // nb, -1)
+            local_id = np.where(ids < Vp, ids % nb, 0)
+            for s in range(k):
+                sel = src_part == s  # [Vp, K]
+                ids_by_src[:, s][sel] = local_id[sel]
+            # reshape to [k(dev), nb, k(src), K] so P(ax) shards devices
+            self.ids_exec = jnp.asarray(
+                ids_by_src.reshape(k, nb, k, K).transpose(0, 2, 1, 3))
+            mask_np = np.asarray(self.mask)
+            mask_by_src = np.zeros((Vp, k, K), np.float32)
+            for s in range(k):
+                mask_by_src[:, s] = mask_np * (src_part == s)
+            self.mask_exec = jnp.asarray(
+                mask_by_src.reshape(k, nb, k, K).transpose(0, 2, 1, 3))
+            return
+        # p2p halo exchange plan: need[dst, src] = sorted local indices (within
+        # src block) of src rows that dst's aggregation reads
+        need_sets = [[np.zeros(0, np.int64) for _ in range(k)] for _ in range(k)]
+        src_part = np.where(ids < Vp, ids // nb, -1)
+        local_id = np.where(ids < Vp, ids % nb, 0)
+        for d in range(k):
+            rows = slice(d * nb, (d + 1) * nb)
+            for s in range(k):
+                if s == d:
+                    continue
+                sel = src_part[rows] == s
+                need_sets[d][s] = np.unique(local_id[rows][sel])
+        cap = max(1, max((len(x) for row in need_sets for x in row), default=1))
+        self.cap = cap
+        need = np.zeros((k, k, cap), np.int32)
+        for d in range(k):
+            for s in range(k):
+                need[d, s, : len(need_sets[d][s])] = need_sets[d][s]
+        # send_rows[src, dst, cap]: what each SOURCE ships per destination
+        self.send_rows = jnp.asarray(need.transpose(1, 0, 2).copy())
+        # remap ids into the local gather table:
+        #   [0, nb)            own block
+        #   [nb, nb + k*cap)   halo slot s*cap + position in need[d, s]
+        #   nb + k*cap         zero row (pads + absent)
+        ids_remap = np.full((Vp, K), nb + k * cap, np.int32)
+        for d in range(k):
+            rows = slice(d * nb, (d + 1) * nb)
+            pos_lut = {}  # (src, local_id) -> halo slot
+            for s in range(k):
+                for t, li in enumerate(need_sets[d][s]):
+                    pos_lut[(s, int(li))] = nb + s * cap + t
+            id_blk = ids[rows]
+            sp_blk = src_part[rows]
+            li_blk = local_id[rows]
+            out = ids_remap[rows]
+            for r in range(nb):
+                for c in range(K):
+                    if id_blk[r, c] >= Vp:
+                        continue
+                    s = sp_blk[r, c]
+                    out[r, c] = (li_blk[r, c] if s == d
+                                 else pos_lut[(s, int(li_blk[r, c]))])
+            ids_remap[rows] = out
+        self.ids_exec = jnp.asarray(ids_remap)
+
+    # ------------------------------------------------------------------
+    # shared layer math
+    # ------------------------------------------------------------------
+
+    def _aggregate(self, ids, mask, table, deg):
+        """agg[v] = (sum_k mask[v,k] * table[ids[v,k]]) / deg[v]; the local
+        multiply is the Pallas ELL kernel (or its jnp oracle)."""
+        if self.cfg.use_pallas:
+            out = ell_spmm(ids, mask, table, normalize=False,
+                           interpret=self.interpret)
+        else:
+            out = (mask[..., None] * jnp.take(table, ids, axis=0)).sum(1)
+        return out / deg
+
+    @staticmethod
+    def _layer(p_l, agg, h_self, last: bool):
+        z = (agg + h_self) @ p_l["w"] + p_l["b"]
+        return z if last else jax.nn.relu(z)
+
+    def _protocol_kwargs(self):
+        c = self.cfg
+        return dict(staleness=c.staleness, eps=c.eps_v, hard_bound=c.hard_bound)
+
+    # ------------------------------------------------------------------
+    # state
+    # ------------------------------------------------------------------
+
+    def init_state(self, key=None) -> Dict:
+        key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
+        params = init_gnn_params("gcn", self.dims, key)
+        L = len(self.dims) - 1
+        state = dict(
+            params=params,
+            step=jnp.zeros((), jnp.int32),
+            hist=tuple(jnp.zeros((self.Vp, d), jnp.float32)
+                       for d in self.dims[1:]),
+            age=jnp.zeros((L, self.k), jnp.int32),
+        )
+        return state
+
+    # ------------------------------------------------------------------
+    # distributed step
+    # ------------------------------------------------------------------
+
+    def _exchange_and_aggregate(self, h_local, consts_local):
+        """One layer's neighbor exchange + local ELL multiply, device-local
+        code under shard_map. h_local [nb, D] -> agg [nb, D]."""
+        ax, k, nb = self.axis, self.k, self.nb
+        ids, mask, deg = (consts_local["ids"], consts_local["mask"],
+                          consts_local["deg"])
+        if self.cfg.execution == "broadcast":
+            h_full = jax.lax.all_gather(h_local, ax, axis=0, tiled=True)
+            table = jnp.concatenate(
+                [h_full, jnp.zeros((1, h_local.shape[1]), h_local.dtype)], 0)
+            return self._aggregate(ids, mask, table, deg)
+        if self.cfg.execution == "ring":
+            me = jax.lax.axis_index(ax)
+
+            def ring_step(carry, r):
+                acc, h_cur = carry
+                owner = (me + r) % k
+                ids_r = jnp.take(ids, owner, axis=0)  # [nb, K]
+                mask_r = jnp.take(mask, owner, axis=0)
+                table = jnp.concatenate(
+                    [h_cur, jnp.zeros((1, h_cur.shape[1]), h_cur.dtype)], 0)
+                part = self._aggregate(ids_r, mask_r, table, deg)
+                h_nxt = jax.lax.ppermute(
+                    h_cur, ax, [(i, (i - 1) % k) for i in range(k)])
+                return (acc + part, h_nxt), None
+
+            acc0 = jnp.zeros((nb, h_local.shape[1]), h_local.dtype)
+            (acc, _), _ = jax.lax.scan(ring_step, (acc0, h_local),
+                                       jnp.arange(k))
+            return acc
+        # p2p halo exchange
+        send_rows = consts_local["send_rows"]  # [k, cap]
+        send = h_local[send_rows.reshape(-1)].reshape(
+            k, self.cap, h_local.shape[1])
+        recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0)
+        table = jnp.concatenate(
+            [h_local, recv.reshape(k * self.cap, h_local.shape[1]),
+             jnp.zeros((1, h_local.shape[1]), h_local.dtype)], 0)
+        return self._aggregate(ids, mask, table, deg)
+
+    def _forward_local(self, params, hist, age, step, consts_local):
+        """Full local forward with protocol mixing; returns (logits_local,
+        new_hist, new_age, rows_pushed)."""
+        c = self.cfg
+        ax = self.axis
+        H = consts_local["X"]
+        L = len(self.dims) - 1
+        me = jax.lax.axis_index(ax)
+        new_hist, new_age, pushed = [], [], jnp.zeros((), jnp.float32)
+        for l, p_l in enumerate(params["layers"]):
+            agg = self._exchange_and_aggregate(H, consts_local)
+            H = self._layer(p_l, agg, H, last=(l == L - 1))
+            if c.protocol != "sync":
+                h_used, h2, a2, rows = block_refresh(
+                    c.protocol, hist[l], H, age[l][0], step,
+                    consts_local["bmask"], me, **self._protocol_kwargs())
+                H = h_used
+                new_hist.append(h2)
+                new_age.append(a2[None])
+                pushed = pushed + rows.astype(jnp.float32)
+            else:
+                new_hist.append(hist[l])
+                new_age.append(age[l])
+        return H, tuple(new_hist), jnp.stack(new_age), pushed
+
+    def make_step(self):
+        """The jitted distributed train step: state -> (state, metrics)."""
+        if self._step is not None:
+            return self._step
+        ax = self.axis
+        c = self.cfg
+        L = len(self.dims) - 1
+
+        consts = dict(X=self.X, y=self.y, w=self.train_w, bmask=self.bmask,
+                      deg=self.deg, ids=self.ids_exec, mask=self.mask)
+        shard = dict(X=P(ax, None), y=P(ax), w=P(ax), bmask=P(ax),
+                     deg=P(ax, None), ids=P(ax, None), mask=P(ax, None))
+        if c.execution == "ring":
+            consts["mask"] = self.mask_exec
+            shard["ids"] = P(ax, None, None, None)
+            shard["mask"] = P(ax, None, None, None)
+        elif c.execution == "p2p":
+            consts["send_rows"] = self.send_rows
+            shard["send_rows"] = P(ax, None, None)
+        state_specs = dict(
+            params=P(), step=P(),
+            hist=tuple(P(ax, None) for _ in range(L)),
+            age=P(None, ax))
+
+        def local_step(state, consts_local):
+            params, step_i = state["params"], state["step"]
+            hist, age = state["hist"], state["age"]
+            # squeeze the device axis off ring/p2p plans
+            cl = dict(consts_local)
+            if c.execution in ("ring",):
+                cl["ids"] = cl["ids"][0]
+                cl["mask"] = cl["mask"][0]
+            if c.execution == "p2p":
+                cl["send_rows"] = cl["send_rows"][0]
+            age_l = [age[l] for l in range(L)]
+
+            # Differentiate the LOCAL loss numerator only: the psum-normalized
+            # loss is assembled outside the grad.  Transposing a psum under
+            # shard_map is version-dependent (0.4.x transposes psum->psum and
+            # double-counts by k; the check_vma rework transposes to identity);
+            # the collectives inside the forward (all_gather / all_to_all /
+            # ppermute) have stable, well-defined transposes on all supported
+            # versions, so grads of the local numerator are portable.
+            def num_fn(p):
+                logits, new_hist, new_age, pushed = self._forward_local(
+                    p, hist, age_l, step_i, cl)
+                lse = jax.scipy.special.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(
+                    logits, cl["y"][:, None], axis=-1)[:, 0]
+                num = ((lse - ll) * cl["w"]).sum()
+                return num, (logits, new_hist, new_age, pushed)
+
+            (num, (logits, new_hist, new_age, pushed)), grads = (
+                jax.value_and_grad(num_fn, has_aux=True)(params))
+            den = jnp.maximum(jax.lax.psum(cl["w"].sum(), ax), 1.0)
+            loss = jax.lax.psum(num, ax) / den
+            grads = jax.tree_util.tree_map(
+                lambda g_: jax.lax.psum(g_, ax) / den, grads)
+            params2 = jax.tree_util.tree_map(
+                lambda p_, g_: p_ - c.lr * g_, params, grads)
+            state2 = dict(params=params2, step=step_i + 1,
+                          hist=new_hist, age=new_age)
+            metrics = dict(loss=loss,
+                           rows_pushed=jax.lax.psum(pushed, ax))
+            return state2, metrics, logits
+
+        smapped = shard_map(
+            local_step, mesh=self.mesh,
+            in_specs=(state_specs, shard),
+            out_specs=(state_specs, dict(loss=P(), rows_pushed=P()),
+                       P(ax, None)),
+            check_vma=False)
+
+        @jax.jit
+        def step(state, consts_):
+            new_state, metrics, logits = smapped(state, consts_)
+            return new_state, metrics, logits
+
+        self._consts = consts
+        self._jit_step = step
+        self._step = lambda state: step(state, self._consts)
+        return self._step
+
+    def lower_step(self, state=None):
+        """Lower (without running) the distributed step — for dry-runs that
+        record memory/collective artifacts at scale."""
+        self.make_step()
+        state = state if state is not None else self.init_state()
+        return self._jit_step.lower(state, self._consts)
+
+    # ------------------------------------------------------------------
+    # single-device oracle
+    # ------------------------------------------------------------------
+
+    def make_reference_step(self):
+        """Identical math on one device: global ELL gather + the same
+        block_refresh vmapped over the k blocks."""
+        if self._ref_step is not None:
+            return self._ref_step
+        c = self.cfg
+        k, nb, Vp = self.k, self.nb, self.Vp
+        L = len(self.dims) - 1
+        ids_g = jnp.asarray(self.ids_global.astype(np.int32))
+        mask, deg = self.mask, self.deg
+        X, y, w, bmask = self.X, self.y, self.train_w, self.bmask
+
+        def forward(params, hist, age, step_i):
+            H = X
+            new_hist, new_age = [], []
+            pushed = jnp.zeros((), jnp.float32)
+            for l, p_l in enumerate(params["layers"]):
+                table = jnp.concatenate(
+                    [H, jnp.zeros((1, H.shape[1]), H.dtype)], 0)
+                gathered = (mask[..., None] * jnp.take(table, ids_g, axis=0)
+                            ).sum(1)
+                agg = gathered / deg
+                H = self._layer(p_l, agg, H, last=(l == L - 1))
+                if c.protocol != "sync":
+                    h_blocks = H.reshape(k, nb, -1)
+                    hist_blocks = hist[l].reshape(k, nb, -1)
+                    bm_blocks = bmask.reshape(k, nb)
+                    h_used, h2, a2, rows = jax.vmap(
+                        lambda hb, histb, ab, pidb, bmb: block_refresh(
+                            c.protocol, histb, hb, ab, step_i, bmb, pidb,
+                            **self._protocol_kwargs()))(
+                        h_blocks, hist_blocks, age[l], jnp.arange(k), bm_blocks)
+                    H = h_used.reshape(Vp, -1)
+                    new_hist.append(h2.reshape(Vp, -1))
+                    new_age.append(a2)
+                    pushed = pushed + rows.sum().astype(jnp.float32)
+                else:
+                    new_hist.append(hist[l])
+                    new_age.append(age[l])
+            return H, tuple(new_hist), jnp.stack(new_age), pushed
+
+        @jax.jit
+        def ref_step(state):
+            params, step_i = state["params"], state["step"]
+
+            def loss_fn(p):
+                logits, new_hist, new_age, pushed = forward(
+                    p, state["hist"], state["age"], step_i)
+                lse = jax.scipy.special.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+                loss = ((lse - ll) * w).sum() / jnp.maximum(w.sum(), 1.0)
+                return loss, (logits, new_hist, new_age, pushed)
+
+            (loss, (logits, new_hist, new_age, pushed)), grads = (
+                jax.value_and_grad(loss_fn, has_aux=True)(params))
+            params2 = jax.tree_util.tree_map(
+                lambda p_, g_: p_ - c.lr * g_, params, grads)
+            state2 = dict(params=params2, step=step_i + 1,
+                          hist=new_hist, age=new_age)
+            return state2, dict(loss=loss, rows_pushed=pushed), logits
+
+        self._ref_step = ref_step
+        return ref_step
+
+    # ------------------------------------------------------------------
+    # driver
+    # ------------------------------------------------------------------
+
+    def train(self, epochs: int, reference: bool = False
+              ) -> Tuple[List[float], jnp.ndarray]:
+        """Run `epochs` steps; returns (losses, final logits [Vp, C])."""
+        step = self.make_reference_step() if reference else self.make_step()
+        state = self.init_state()
+        losses: List[float] = []
+        logits = None
+        for _ in range(epochs):
+            state, metrics, logits = step(state)
+            losses.append(float(metrics["loss"]))
+        return losses, logits
+
+    def accuracy(self, logits, split: str = "test") -> float:
+        w = self.test_w if split == "test" else self.train_w
+        correct = (jnp.argmax(logits, -1) == self.y).astype(jnp.float32)
+        return float((correct * w).sum() / jnp.maximum(w.sum(), 1.0))

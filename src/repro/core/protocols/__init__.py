@@ -2,6 +2,7 @@ from repro.core.protocols.async_hist import (
     STALENESS_MODELS,
     HistoricalState,
     PipeGCNState,
+    block_refresh,
     epoch_adaptive_refresh,
     epoch_fixed_refresh,
     variation_refresh,

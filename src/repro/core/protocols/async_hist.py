@@ -78,10 +78,13 @@ def epoch_adaptive_refresh(state: HistoricalState, h_new: jnp.ndarray, step: jnp
 
 def variation_refresh(state: HistoricalState, h_new: jnp.ndarray, step: jnp.ndarray,
                       assignment: jnp.ndarray, boundary_mask: jnp.ndarray,
-                      eps: float, hard_bound: int = 16) -> Tuple[jnp.ndarray, HistoricalState]:
+                      eps: float, hard_bound: int = 4) -> Tuple[jnp.ndarray, HistoricalState]:
     """SANCUS skip-broadcast (variation-based): a partition pushes only when
     its embeddings drifted more than eps (relative Frobenius) from the last
-    pushed version; a hard epoch bound keeps staleness finite."""
+    pushed version; a hard epoch bound keeps staleness finite.  The default
+    bound is small (4): drift can sit just under eps for many epochs while the
+    stale boundary rows quietly stall convergence — a loose bound (16) loses
+    ~0.1 test accuracy on the SBM benchmark versus sync."""
     K = state.age.shape[0]
     diff = jnp.square(h_new - state.hist).sum(-1)  # [V]
     base = jnp.square(state.hist).sum(-1) + 1e-12
@@ -105,6 +108,51 @@ STALENESS_MODELS = {
     "epoch_adaptive": epoch_adaptive_refresh,
     "variation": variation_refresh,
 }
+
+
+def block_refresh(protocol: str, hist_b: jnp.ndarray, h_b: jnp.ndarray,
+                  age: jnp.ndarray, step: jnp.ndarray, bmask_b: jnp.ndarray,
+                  part_id: jnp.ndarray, *, staleness: int = 2,
+                  eps: float = 0.05, hard_bound: int = 4
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Block-local (one partition's rows) form of the staleness models, for the
+    SPMD engine: every refresh decision here depends only on this partition's
+    own rows, age and id, so the same function runs per-device inside
+    shard_map AND vmapped over blocks in the single-device oracle — which is
+    exactly what makes the engine oracle-checkable under asynchrony.
+
+    hist_b/h_b [nb, D]; age [] int32; bmask_b [nb] bool; part_id [] int32.
+    Returns (h_used_b, hist2_b, age2, rows_pushed).
+    """
+    if protocol == "epoch_fixed":
+        refreshed = (step % staleness) == 0
+        fresh_row = refreshed | (~bmask_b)
+        h_used = jnp.where(fresh_row[:, None], h_b, hist_b)
+        hist2 = jnp.where(refreshed, h_b, hist_b)  # full-block push
+        rows = jnp.where(refreshed, bmask_b.sum(), 0)
+    elif protocol == "epoch_adaptive":
+        refreshed = ((part_id % staleness) == (step % staleness)) | (
+            age >= staleness - 1)
+        fresh_row = refreshed | (~bmask_b)
+        h_used = jnp.where(fresh_row[:, None], h_b, hist_b)
+        row_refresh = refreshed & bmask_b
+        hist2 = jnp.where(row_refresh[:, None], h_b, hist_b)
+        rows = row_refresh.sum()
+    elif protocol == "variation":
+        w = bmask_b.astype(jnp.float32)
+        diff = jnp.square(h_b - hist_b).sum(-1)
+        base = jnp.square(hist_b).sum(-1) + 1e-12
+        drift = (diff / base * w).sum() / (w.sum() + 1e-9)
+        refreshed = (drift > eps) | (age >= hard_bound)
+        fresh_row = refreshed | (~bmask_b)
+        h_used = jnp.where(fresh_row[:, None], h_b, hist_b)
+        row_refresh = refreshed & bmask_b
+        hist2 = jnp.where(row_refresh[:, None], h_b, hist_b)
+        rows = row_refresh.sum()
+    else:
+        raise ValueError(f"unknown protocol {protocol!r}")
+    age2 = jnp.where(refreshed, 0, age + 1).astype(age.dtype)
+    return h_used, hist2, age2, rows
 
 
 @jax.tree_util.register_dataclass

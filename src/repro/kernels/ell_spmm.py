@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.utils import round_up
+
 
 def _ell_spmm_kernel(ids_ref, mask_ref, h_ref, out_ref, *, normalize: bool):
     ids = ids_ref[...]  # [Rb, K]
@@ -36,14 +38,25 @@ def _ell_spmm_kernel(ids_ref, mask_ref, h_ref, out_ref, *, normalize: bool):
 def ell_spmm_pallas(ids: jnp.ndarray, mask: jnp.ndarray, H: jnp.ndarray, *,
                     row_block: int = 128, feat_block: int = 128,
                     normalize: bool = True, interpret: bool = False) -> jnp.ndarray:
+    """Rows/features that don't tile evenly are zero-padded up to the block
+    size (pad rows carry mask 0 -> contribute nothing; the padded output is
+    sliced away), so awkward (e.g. prime) dimensions keep full-width blocks
+    instead of silently degrading the grid to 1-element programs."""
     V, K = ids.shape
     N, D = H.shape
     row_block = min(row_block, V)
     feat_block = min(feat_block, D)
-    assert V % row_block == 0 and D % feat_block == 0, (V, row_block, D, feat_block)
-    grid = (V // row_block, D // feat_block)
+    Vp, Dp = round_up(V, row_block), round_up(D, feat_block)
+    if Vp != V:
+        ids = jnp.concatenate(
+            [ids, jnp.zeros((Vp - V, K), ids.dtype)], axis=0)
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((Vp - V, K), mask.dtype)], axis=0)
+    if Dp != D:
+        H = jnp.concatenate([H, jnp.zeros((N, Dp - D), H.dtype)], axis=1)
+    grid = (Vp // row_block, Dp // feat_block)
     kernel = functools.partial(_ell_spmm_kernel, normalize=normalize)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -52,6 +65,61 @@ def ell_spmm_pallas(ids: jnp.ndarray, mask: jnp.ndarray, H: jnp.ndarray, *,
             pl.BlockSpec((N, feat_block), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((row_block, feat_block), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((V, D), H.dtype),
+        out_shape=jax.ShapeDtypeStruct((Vp, Dp), H.dtype),
         interpret=interpret,
     )(ids, mask.astype(jnp.float32), H)
+    return out[:V, :D] if (Vp, Dp) != (V, D) else out
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper
+# ---------------------------------------------------------------------------
+#
+# pallas_call carries no autodiff rule (neither compiled nor interpret mode on
+# the supported jax versions), but the aggregation's VJP w.r.t. H is just the
+# transpose SpMM — a masked scatter-add the XLA scatter handles fine.  ids and
+# mask are graph structure (non-differentiable).
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ell_spmm_vjp(normalize, interpret, ids, mask, H):
+    return ell_spmm_pallas(ids, mask, H, normalize=normalize,
+                           interpret=interpret)
+
+
+def _ell_spmm_fwd(normalize, interpret, ids, mask, H):
+    out = ell_spmm_pallas(ids, mask, H, normalize=normalize,
+                          interpret=interpret)
+    return out, (ids, mask, H.shape[0])
+
+
+def _ell_spmm_bwd(normalize, interpret, res, ct):
+    ids, mask, N = res
+    V, K = ids.shape
+    ctn = ct.astype(jnp.float32)
+    if normalize:
+        deg = jnp.maximum(mask.sum(1, keepdims=True), 1.0)
+        ctn = ctn / deg
+    contrib = (mask[..., None] * ctn[:, None, :]).reshape(V * K, ct.shape[-1])
+    dH = jnp.zeros((N, ct.shape[-1]), jnp.float32).at[
+        ids.reshape(-1)].add(contrib).astype(ct.dtype)
+    # ids are structure (int -> float0 zero cotangent); mask likewise carries
+    # no gradient (graph connectivity, not a learnable weight)
+    return (jnp.zeros(ids.shape, jax.dtypes.float0),
+            jnp.zeros_like(mask), dH)
+
+
+_ell_spmm_vjp.defvjp(_ell_spmm_fwd, _ell_spmm_bwd)
+
+
+def ell_spmm(ids: jnp.ndarray, mask: jnp.ndarray, H: jnp.ndarray, *,
+             normalize: bool = True, interpret: bool = False) -> jnp.ndarray:
+    """Differentiable ELL SpMM: Pallas forward, scatter-add transpose backward.
+
+    out[v] = sum_k mask[v,k] * H[ids[v,k]]  (/ max(deg[v], 1) if normalize)
+
+    ids/mask may be traced values (e.g. selected per ring step inside a scan);
+    only H carries gradient.
+    """
+    return _ell_spmm_vjp(normalize, interpret, ids,
+                         mask.astype(jnp.float32), H)

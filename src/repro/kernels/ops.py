@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.ell_spmm import ell_spmm_pallas
+from repro.kernels.ell_spmm import ell_spmm as ell_spmm_diff
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.sddmm import sddmm_pallas
 from repro.kernels.wkv_chunk import wkv_chunk_pallas
@@ -21,9 +21,11 @@ def _on_tpu() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("normalize", "force_pallas"))
 def ell_spmm(ids, mask, H, *, normalize: bool = True, force_pallas: bool = False):
+    # the differentiable wrapper (custom scatter-add VJP), so grads work
+    # through the package-level API on every backend
     if _on_tpu() or force_pallas:
-        return ell_spmm_pallas(ids, mask, H, normalize=normalize,
-                               interpret=not _on_tpu())
+        return ell_spmm_diff(ids, mask, H, normalize=normalize,
+                             interpret=not _on_tpu())
     return ref.ell_spmm_ref(ids, mask, H, normalize=normalize)
 
 

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import cost_analysis as compat_cost_analysis
+from repro.compat import peak_memory_in_bytes as compat_peak_memory
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, get_shape, supports_shape
 from repro.data.pipeline import batch_logical_axes, input_specs
 from repro.launch import flops as flops_lib
@@ -177,7 +179,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Optional[s
                                               extra_rules=extra_rules,
                                               opts_set=opts_set)
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = compat_cost_analysis(compiled)
         txt = compiled.as_text()
         coll_total, coll_by_kind = collective_bytes(txt)
         analytic = flops_lib.step_flops(cfg, shape, window=window)
@@ -202,7 +204,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Optional[s
                 "argument_bytes_per_device": ma.argument_size_in_bytes,
                 "output_bytes_per_device": ma.output_size_in_bytes,
                 "temp_bytes_per_device": ma.temp_size_in_bytes,
-                "peak_bytes_per_device": ma.peak_memory_in_bytes,
+                "peak_bytes_per_device": compat_peak_memory(ma),
                 "alias_bytes_per_device": ma.alias_size_in_bytes,
             },
             cost_analysis={k: ca[k] for k in ("flops", "bytes accessed") if k in ca},

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import cost_analysis as compat_cost_analysis
+from repro.compat import peak_memory_in_bytes as compat_peak_memory
 from repro.configs.gcn_paper import CONFIG as GNN_CFG
 from repro.launch.hlo_analysis import collective_bytes, roofline_terms
 from repro.launch.mesh import make_production_mesh
@@ -87,10 +89,7 @@ def gcn_p2p_step_fn(cfg, mesh, cap: int):
 
     from jax.sharding import PartitionSpec as P
 
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map
+    from repro.compat import shard_map
 
     row = P(axes)
     rep = P()
@@ -115,9 +114,15 @@ def gcn_p2p_step_fn(cfg, mesh, cap: int):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--protocol", choices=["broadcast", "p2p"], default="broadcast")
+    ap.add_argument("--protocol", choices=["broadcast", "p2p", "engine"],
+                    default="broadcast")
     ap.add_argument("--cut", type=float, default=0.1,
                     help="p2p: boundary fraction per destination pair")
+    ap.add_argument("--engine-exec", default="p2p",
+                    help="engine: broadcast | ring | p2p")
+    ap.add_argument("--engine-vertices", type=int, default=1 << 14,
+                    help="engine: synthetic graph size (the partition plan is "
+                    "built host-side from a concrete graph)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
     cfg = GNN_CFG
@@ -142,7 +147,26 @@ def main():
     in_sh = ({"w": [rep] * (len(dims) - 1), "b": [rep] * (len(dims) - 1)},
              row_sh, row_sh, row_sh, row_sh, row_sh)
     t0 = time.time()
-    if args.protocol == "p2p":
+    if args.protocol == "engine":
+        # The unified DistGNNEngine step (partition plan + Pallas-ELL local
+        # multiply + halo exchange + protocol), lowered on a 1D mesh over all
+        # production chips.  The plan needs a concrete graph, so this mode
+        # dry-runs a smaller synthetic instance end to end rather than
+        # abstract ShapeDtypeStructs.
+        from repro.core.engine import DistGNNEngine, EngineConfig
+        from repro.core.graph import er_graph
+
+        g = er_graph(args.engine_vertices, avg_degree=cfg.avg_degree,
+                     feature_dim=cfg.feature_dim,
+                     num_classes=cfg.num_classes, seed=0)
+        mesh1d = jax.make_mesh((chips,), ("w",))
+        eng = DistGNNEngine(g, mesh=mesh1d, cfg=EngineConfig(
+            execution=args.engine_exec, hidden=cfg.hidden_dim,
+            num_layers=cfg.num_layers))
+        compiled = eng.lower_step().compile()
+        V = eng.Vp
+        K = eng.K
+    elif args.protocol == "p2p":
         n_dev = chips
         v_l = V // n_dev
         cap = max(int(args.cut * v_l), 8)  # boundary rows shipped per dest pair
@@ -158,7 +182,7 @@ def main():
                                specs["y"], specs["train_w"])
         compiled = lowered.compile()
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compat_cost_analysis(compiled)
     coll, kinds = collective_bytes(compiled.as_text())
     mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
     # analytic: per layer 2*E*D (aggregation) + 2*V*D_in*D_out, x3 for train
@@ -176,7 +200,7 @@ def main():
                   memory=dict(argument_bytes_per_device=ma.argument_size_in_bytes,
                               temp_bytes_per_device=ma.temp_size_in_bytes,
                               output_bytes_per_device=ma.output_size_in_bytes,
-                              peak_bytes_per_device=ma.peak_memory_in_bytes,
+                              peak_bytes_per_device=compat_peak_memory(ma),
                               alias_bytes_per_device=ma.alias_size_in_bytes),
                   cost_analysis={k: ca[k] for k in ("flops", "bytes accessed") if k in ca},
                   collective_bytes_per_device=coll, collective_by_kind=kinds,

@@ -23,13 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # jax>=0.4.35 exposes shard_map at top level
-    from jax import shard_map as _shard_map_mod  # type: ignore
-
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
-
+from repro.compat import shard_map
 from repro.launch.sharding import active_mesh, active_rules, logical, spec_for
 from repro.models.layers import ParamBuilder, mlp_params, mlp_apply
 

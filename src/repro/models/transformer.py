@@ -38,10 +38,7 @@ from repro.models.layers import (
 )
 from repro.models.moe import moe_apply, moe_params
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)

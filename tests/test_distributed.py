@@ -103,11 +103,12 @@ def test_flash_decode_seq_sharded_cache_8dev():
         k = jnp.asarray(rng.standard_normal((B, T, H, D)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((B, T, H, D)), jnp.float32)
         want = decode_attention(q, k, v, 50)
-        fn = jax.shard_map(partial(flash_decode_sharded, axis="data"),
-                           mesh=mesh,
-                           in_specs=(P(), P(None, "data", None, None),
-                                     P(None, "data", None, None), P()),
-                           out_specs=P(), check_vma=False)
+        from repro.compat import shard_map
+        fn = shard_map(partial(flash_decode_sharded, axis="data"),
+                       mesh=mesh,
+                       in_specs=(P(), P(None, "data", None, None),
+                                 P(None, "data", None, None), P()),
+                       out_specs=P(), check_vma=False)
         got = fn(q, k, v, jnp.int32(50))
         err = float(jnp.abs(got - want).max())
         assert err < 1e-4, err

@@ -1,9 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Requires the optional ``hypothesis`` dependency (the ``property`` test extra);
+without it the whole module degrades to a skip instead of a collection error.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core.execution import parallel_chunk_aggregate, sequential_chunk_aggregate

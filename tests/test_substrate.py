@@ -128,7 +128,8 @@ def f(h):
         return c + jax.lax.psum(x, "x"), None
     out, _ = jax.lax.scan(body, h[0], h)
     return out
-fn = jax.shard_map(f, mesh=mesh, in_specs=P(None, "x"), out_specs=P("x"), check_vma=False)
+from repro.compat import shard_map
+fn = shard_map(f, mesh=mesh, in_specs=P(None, "x"), out_specs=P("x"), check_vma=False)
 comp = jax.jit(fn).lower(jax.ShapeDtypeStruct((6, 64), jnp.float32)).compile()
 print("<<<HLO>>>")
 print(comp.as_text())
@@ -170,8 +171,10 @@ def test_analytic_flops_vs_cost_analysis_single_layer():
     batch = {"tokens": jnp.ones((B, S), jnp.int32),
              "labels": jnp.zeros((B, S), jnp.int32),
              "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S))}
+    from repro.compat import cost_analysis
+
     comp = jax.jit(lambda p, b: T.loss_fn(cfg, p, b)).lower(params, batch).compile()
-    hlo_flops = comp.cost_analysis()["flops"]
+    hlo_flops = cost_analysis(comp)["flops"]
     analytic = flops_lib.forward_flops(cfg, B, S).total
     # forward-only analytic should be within ~2.5x of XLA's forward count
     # (XLA counts masks/softmax/etc., we count matmuls+attention)
