@@ -7,7 +7,11 @@ Two modes:
   (broadcast | ring | p2p halo exchange) + sync/async-historical protocol,
   all inside ONE jitted shard_map train step.  Reports loss/accuracy, the
   collective bytes of the chosen model, and the oracle gap vs the
-  single-device reference.
+  single-device reference.  ``--batching node_wise|layer_wise|subgraph``
+  switches to sampled mini-batches (survey §5): per-device targets from the
+  owned partition block, statically padded sampled blocks, a device-resident
+  feature cache (``--cache`` / ``--cache-capacity``), and the §6.1 stage
+  schedules (``--schedule``); reports feature-fetch bytes + cache hits.
 * ``--no-engine``: the legacy dense-block SpMM execution models (survey
   Table 2) over a device mesh, kept as the survey-taxonomy reference.
 
@@ -21,7 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import EXECUTION_MODELS, PROTOCOLS, DistGNNEngine, EngineConfig
+from repro.core.engine import (
+    BATCHING_MODES,
+    ENGINE_CACHE_POLICIES,
+    EXECUTION_MODELS,
+    PROTOCOLS,
+    DistGNNEngine,
+    EngineConfig,
+)
 from repro.core.execution.spmm_models import SPMM_MODELS
 from repro.core.graph import sbm_graph
 from repro.core.models.gnn import accuracy, full_graph_forward, init_gnn_params, softmax_xent
@@ -30,24 +41,51 @@ from repro.launch.hlo_analysis import collective_bytes
 
 
 def run_engine(args, g):
+    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    layer_sizes = tuple(int(x) for x in args.layer_sizes.split(","))
     cfg = EngineConfig(execution=args.exec, protocol=args.protocol,
-                       partitioner=args.partition, lr=args.lr)
+                       partitioner=args.partition, lr=args.lr,
+                       batching=args.batching, batch_size=args.batch_size,
+                       fanouts=fanouts, layer_sizes=layer_sizes,
+                       walk_length=args.walk_length,
+                       cache_policy=args.cache,
+                       cache_capacity=args.cache_capacity)
     n_dev = len(jax.devices())
     k = args.parts or n_dev
     assert k <= n_dev, f"need {k} devices, have {n_dev} (set XLA_FLAGS)"
     mesh = jax.make_mesh((k,), ("w",))
     eng = DistGNNEngine(g, mesh=mesh, cfg=cfg)
-    comp = eng.lower_step().compile()
-    coll, kinds = collective_bytes(comp.as_text())
+    minibatch = args.batching != "full_graph"
+    lowered = eng.lower_minibatch_step() if minibatch else eng.lower_step()
+    coll, kinds = collective_bytes(lowered.compile().as_text())
     print(f"engine: exec={args.exec} protocol={args.protocol} "
-          f"partition={args.partition} k={k} (nb={eng.nb}, halo cap="
-          f"{getattr(eng, 'cap', '-')}) collective bytes/step = "
-          f"{coll / 1e6:.2f} MB  {kinds}")
-    losses, logits = eng.train(args.epochs)
-    for e in range(0, args.epochs, max(args.epochs // 4, 1)):
-        print(f"epoch {e:3d} loss {losses[e]:.4f}")
-    print(f"final: train_acc={eng.accuracy(logits, 'train'):.3f} "
-          f"test_acc={eng.accuracy(logits, 'test'):.3f}")
+          f"batching={args.batching} partition={args.partition} k={k} "
+          f"(nb={eng.nb}, halo cap={getattr(eng, 'cap', '-')}"
+          + (f", frontier caps={eng.caps}" if minibatch else "")
+          + f") collective bytes/step = {coll / 1e6:.2f} MB  {kinds}")
+    if minibatch:
+        state, losses, times = eng.run_epoch_minibatch(
+            args.epochs, schedule=args.schedule)
+        s = eng.comm_stats
+        print(f"schedule={args.schedule}: wall={times.wall:.3f}s "
+              f"(sample={times.sample:.3f} extract={times.extract:.3f} "
+              f"train={times.train:.3f})")
+        print(f"feature fetch: {s.pull_bytes / 1e6:.3f} MB pulled, "
+              f"{s.cache_hit_bytes / 1e6:.3f} MB served by the "
+              f"{args.cache!r} cache "
+              f"({s.cache_hit_bytes / max(s.requested(), 1):.1%} hit bytes)")
+        batch = eng.sample_minibatch(args.epochs - 1)
+        _, _, logits = eng.make_minibatch_step()(state, batch)
+        acc = eng.minibatch_accuracy(logits, batch)
+        for e in range(0, args.epochs, max(args.epochs // 4, 1)):
+            print(f"epoch {e:3d} loss {losses[e]:.4f}")
+        print(f"final: batch train_acc={acc:.3f}")
+    else:
+        losses, logits = eng.train(args.epochs)
+        for e in range(0, args.epochs, max(args.epochs // 4, 1)):
+            print(f"epoch {e:3d} loss {losses[e]:.4f}")
+        print(f"final: train_acc={eng.accuracy(logits, 'train'):.3f} "
+              f"test_acc={eng.accuracy(logits, 'test'):.3f}")
     if args.oracle_check:
         ref_losses, _ = eng.train(args.epochs, reference=True)
         gap = max(abs(a - b) for a, b in zip(losses, ref_losses))
@@ -117,6 +155,26 @@ def main():
                     help=f"engine: {EXECUTION_MODELS} (default p2p); "
                     f"legacy: {list(SPMM_MODELS)} (default spmm_1d)")
     ap.add_argument("--protocol", default="sync", choices=list(PROTOCOLS))
+    ap.add_argument("--batching", default="full_graph",
+                    choices=list(BATCHING_MODES),
+                    help="engine §5 batch generation: full_graph partition "
+                    "batches or sampled mini-batches")
+    ap.add_argument("--batch-size", type=int, default=16,
+                    help="per-device mini-batch targets / walk roots")
+    ap.add_argument("--fanouts", default="4,4",
+                    help="node_wise: comma-separated per-layer fanouts")
+    ap.add_argument("--layer-sizes", default="32,32",
+                    help="layer_wise: comma-separated per-layer sample sizes")
+    ap.add_argument("--walk-length", type=int, default=4,
+                    help="subgraph: random-walk length")
+    ap.add_argument("--cache", default="none",
+                    choices=list(ENGINE_CACHE_POLICIES),
+                    help="device-resident feature cache policy")
+    ap.add_argument("--cache-capacity", type=int, default=0,
+                    help="remote feature rows cached per device")
+    ap.add_argument("--schedule", default="conventional",
+                    choices=["conventional", "factored", "operator_parallel"],
+                    help="mini-batch stage schedule (survey §6.1)")
     ap.add_argument("--parts", type=int, default=0, help="0 = all devices")
     ap.add_argument("--partition", default="metis_like")
     ap.add_argument("--epochs", type=int, default=40)
@@ -137,6 +195,8 @@ def main():
     if not args.engine and args.exec not in SPMM_MODELS:
         ap.error(f"--no-engine requires a legacy exec name {list(SPMM_MODELS)}, "
                  f"got {args.exec!r}")
+    if args.batching != "full_graph" and not args.engine:
+        ap.error("mini-batch --batching modes run on the engine path only")
     g = sbm_graph(args.vertices, num_blocks=8, p_in=0.05, p_out=0.003, seed=0)
     if args.engine:
         run_engine(args, g)

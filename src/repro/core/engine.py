@@ -5,9 +5,25 @@ jitted shard_map training step.
                    engine relabels vertices so device d owns the contiguous
                    padded block [d*nb, (d+1)*nb) — the partition plan IS the
                    device layout.
-  batch (§5)       full-graph partition batches: each device's block is its
-                   batch (PSGD-style ownership, loss masked to owned train
-                   vertices and globally psum-reduced).
+  batch (§5)       a selectable `batching` axis:
+                     full_graph — each device's partition block is its batch
+                                  (PSGD-style ownership, loss masked to owned
+                                  train vertices and globally psum-reduced);
+                     node_wise / layer_wise / subgraph — sampled mini-batches:
+                                  each device draws targets from its OWNED
+                                  partition block, expands them host-side with
+                                  the §5 samplers, and pads the layered blocks
+                                  to static caps derived from the fanout
+                                  config, so the jitted shard_map step
+                                  compiles ONCE per fanout config (not per
+                                  batch).  Input features for the sampled
+                                  frontier are fetched through the same
+                                  execution models as the full-graph path,
+                                  short-circuited by a device-resident
+                                  feature cache (sampling/cache.py policies);
+                                  hit/miss bytes are counted against
+                                  CommStats via the standalone
+                                  feature_fetch_bytes cost model.
   execution (§6)   the local multiply is the Pallas ELL SpMM
                    (repro.kernels.ell_spmm, differentiable via transpose
                    scatter-add VJP); the neighbor exchange is a selectable
@@ -27,7 +43,11 @@ jitted shard_map training step.
 Every configuration is oracle-checkable: `reference_step` runs the identical
 math on one device (vmapping the per-block protocol over the block axis), so
 multi-device runs must match it to float tolerance — the engine's contract,
-enforced by tests/test_engine_distributed.py.
+enforced by tests/test_engine_distributed.py.  The mini-batch path has the
+same contract: `reference_minibatch_step` consumes the exact same sampled,
+padded batches (host sampling is deterministic in (seed, step, device)), so
+every sampler x execution x cache combination must match it to <=1e-4 —
+enforced by tests/test_engine_minibatch.py.
 """
 from __future__ import annotations
 
@@ -41,13 +61,26 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import interpret_default, shard_map
 from repro.core.graph import Graph
-from repro.core.models.gnn import init_gnn_params
+from repro.core.models.gnn import init_gnn_params, padded_minibatch_forward
 from repro.core.partition.edge_cut import PARTITIONERS, Partition
 from repro.core.protocols.async_hist import block_refresh
+from repro.core.sampling.cache import CACHE_POLICIES, device_cache_ids
+from repro.core.sampling.distributed import CommStats, feature_fetch_bytes
+from repro.core.sampling.partition_batch import partition_targets
+from repro.core.sampling.samplers import (
+    MiniBatch,
+    frontier_caps,
+    layer_wise_sample,
+    node_wise_sample,
+    pad_minibatch,
+    subgraph_sample,
+)
 from repro.kernels.ell_spmm import ell_spmm
 
 EXECUTION_MODELS = ("broadcast", "ring", "p2p")
 PROTOCOLS = ("sync", "epoch_fixed", "epoch_adaptive", "variation")
+BATCHING_MODES = ("full_graph", "node_wise", "layer_wise", "subgraph")
+ENGINE_CACHE_POLICIES = ("none",) + tuple(CACHE_POLICIES)
 
 
 @dataclasses.dataclass
@@ -55,6 +88,13 @@ class EngineConfig:
     execution: str = "p2p"  # broadcast | ring | p2p
     protocol: str = "sync"  # sync | epoch_fixed | epoch_adaptive | variation
     partitioner: str = "metis_like"  # any key of PARTITIONERS
+    batching: str = "full_graph"  # full_graph | node_wise | layer_wise | subgraph
+    batch_size: int = 16  # per-device targets (node/layer-wise) or walk roots
+    fanouts: Tuple[int, ...] = (4, 4)  # node_wise; len == num_layers
+    layer_sizes: Tuple[int, ...] = (32, 32)  # layer_wise; len == num_layers
+    walk_length: int = 4  # subgraph random walk
+    cache_policy: str = "none"  # none | any key of sampling CACHE_POLICIES
+    cache_capacity: int = 0  # remote feature rows resident per device
     hidden: int = 32
     num_layers: int = 2
     lr: float = 0.5
@@ -78,6 +118,15 @@ class DistGNNEngine:
             raise ValueError(f"execution must be one of {EXECUTION_MODELS}")
         if cfg.protocol not in PROTOCOLS:
             raise ValueError(f"protocol must be one of {PROTOCOLS}")
+        if cfg.batching not in BATCHING_MODES:
+            raise ValueError(f"batching must be one of {BATCHING_MODES}")
+        if cfg.cache_policy not in ENGINE_CACHE_POLICIES:
+            raise ValueError(
+                f"cache_policy must be one of {ENGINE_CACHE_POLICIES}")
+        if cfg.batching != "full_graph" and cfg.protocol != "sync":
+            raise ValueError(
+                "mini-batch training supports protocol='sync' only: the "
+                "historical-embedding protocols are full-graph state")
         if mesh is None:
             mesh = jax.make_mesh((len(jax.devices()),), ("w",))
         if len(mesh.axis_names) != 1:
@@ -97,6 +146,11 @@ class DistGNNEngine:
                      + [cfg.hidden] * (cfg.num_layers - 1) + [num_classes])
         self._step = None
         self._ref_step = None
+        self._mb_step = None
+        self._mb_ref_step = None
+        self.comm_stats = CommStats()
+        if cfg.batching != "full_graph":
+            self._build_minibatch_plan()
 
     # ------------------------------------------------------------------
     # host-side plan building
@@ -495,15 +549,364 @@ class DistGNNEngine:
         return ref_step
 
     # ------------------------------------------------------------------
+    # mini-batch path (§5 batch generation wired into the jitted step)
+    # ------------------------------------------------------------------
+
+    def _build_minibatch_plan(self):
+        """Static mini-batch plan: frontier caps from the fanout config (ONE
+        jit compile per config), plus the per-device resident feature cache
+        (remote hot rows picked by a sampling/cache.py policy; exact, never
+        stale — input features are constant during training)."""
+        c, g, k = self.cfg, self.g, self.k
+        L = c.num_layers
+        self.caps = frontier_caps(
+            c.batching, L, c.batch_size, fanouts=c.fanouts,
+            layer_sizes=c.layer_sizes, walk_length=c.walk_length,
+            num_vertices=g.num_vertices)
+        self.fcap = self.caps[0]  # p2p halo slots per (dst, src) pair
+        D = g.features.shape[1]
+        self.Ccap = Ccap = max(int(c.cache_capacity), 1)
+        cache_tab = np.zeros((k, Ccap, D), np.float32)
+        self.cache_old_ids = []
+        self._cache_slot = []  # per device: old global id -> cache row
+        self._cache_set = []
+        for d in range(k):
+            ids_d = device_cache_ids(g, self.part.assignment, d,
+                                     c.cache_policy, c.cache_capacity)
+            self.cache_old_ids.append(ids_d)
+            cache_tab[d, : len(ids_d)] = g.features[ids_d]
+            self._cache_slot.append({int(v): j for j, v in enumerate(ids_d)})
+            self._cache_set.append(frozenset(int(v) for v in ids_d))
+        self._cache_table = jnp.asarray(cache_tab)
+
+    def _sample_host(self, step_idx: int):
+        """Host sampling stage: per device, draw targets from its OWNED
+        partition block and expand them with the configured §5 sampler.
+        Deterministic in (seed, step, device) so the oracle — and any rerun —
+        regenerates bitwise-identical batches."""
+        c = self.cfg
+        mbs = []
+        for d in range(self.k):
+            rng = np.random.default_rng([c.seed, 7919, step_idx, d])
+            targets = partition_targets(self.g, self.part, d, c.batch_size, rng)
+            if c.batching == "node_wise":
+                mb = node_wise_sample(self.g, targets, c.fanouts, rng)
+            elif c.batching == "layer_wise":
+                mb = layer_wise_sample(self.g, targets, c.layer_sizes, rng)
+            else:  # subgraph
+                mb = subgraph_sample(self.g, targets, c.walk_length, rng,
+                                     num_layers=c.num_layers)
+            mbs.append(mb)
+        return mbs
+
+    def _make_batch(self, mbs) -> Dict:
+        """Extract stage: pad each device's MiniBatch to the static caps,
+        relabel frontiers into the engine's new-id space, build the
+        execution-model fetch plan (cache hits short-circuit the exchange),
+        and account feature bytes against self.comm_stats."""
+        c, k, nb, Vp = self.cfg, self.k, self.nb, self.Vp
+        caps, fcap, Ccap = self.caps, self.fcap, self.Ccap
+        L = c.num_layers
+        D = self.g.features.shape[1]
+        frontier = np.full((k, caps[0]), Vp, np.int64)
+        y = np.zeros((k, caps[-1]), np.int32)
+        w = np.zeros((k, caps[-1]), np.float32)
+        adj = [np.zeros((k, caps[l + 1], caps[l]), np.float32)
+               for l in range(L)]
+        cache_ids = np.full((k, caps[0]), Ccap, np.int32)
+        if c.execution == "broadcast":
+            bc_ids = np.full((k, caps[0]), Vp, np.int64)
+        elif c.execution == "ring":
+            ring_ids = np.full((k, k, caps[0]), nb, np.int32)
+        else:
+            send_rows = np.zeros((k, k, fcap), np.int32)
+            tab_ids = np.full((k, caps[0]), nb + k * fcap, np.int32)
+        for d, mb in enumerate(mbs):
+            padded = pad_minibatch(mb, caps)
+            for l in range(L):
+                adj[l][d] = padded["adj"][l]
+            tgt, tmask = padded["tgt"], padded["tmask"]
+            safe_tgt = np.clip(tgt, 0, None)
+            y[d] = np.where(tgt >= 0, self.g.labels[safe_tgt], 0)
+            # loss only on OWNED train targets: node/layer-wise targets are
+            # owned draws already, but subgraph walks visit remote vertices —
+            # without this mask a boundary vertex reached by two devices'
+            # walks would be double-counted in the psum'd loss/grad
+            tw = tmask * np.where(
+                tgt >= 0, self.part.assignment[safe_tgt] == d, False)
+            if self.g.train_mask is not None:
+                tw = tw * np.where(
+                    tgt >= 0, self.g.train_mask[safe_tgt], False)
+            w[d] = tw
+            old = padded["frontier"]
+            slot = self._cache_slot[d]
+            # p2p: halo slot of each needed local src row, per source device
+            need = [dict() for _ in range(k)]
+            for j in range(caps[0]):
+                o = int(old[j])
+                if o < 0:
+                    continue
+                fn = int(self.new_of_old[o])
+                frontier[d, j] = fn
+                s = fn // nb
+                cslot = slot.get(o, -1)
+                if s != d and cslot >= 0:
+                    cache_ids[d, j] = cslot
+                    continue  # served by the resident cache
+                if c.execution == "broadcast":
+                    bc_ids[d, j] = fn
+                elif c.execution == "ring":
+                    ring_ids[d, s, j] = fn % nb
+                else:  # p2p
+                    if s == d:
+                        tab_ids[d, j] = fn % nb
+                    else:
+                        li = fn % nb
+                        pos = need[s].setdefault(li, len(need[s]))
+                        tab_ids[d, j] = nb + s * fcap + pos
+            if c.execution == "p2p":
+                for s in range(k):
+                    if s != d and need[s]:
+                        send_rows[s, d, : len(need[s])] = list(need[s])
+            feature_fetch_bytes(self.part, d, mb.layer_vertices[0], D,
+                                cached_ids=self._cache_set[d],
+                                stats=self.comm_stats)
+        batch = dict(
+            frontier=jnp.asarray(frontier.astype(np.int32)),
+            y=jnp.asarray(y), w=jnp.asarray(w),
+            adj=tuple(jnp.asarray(a) for a in adj),
+            cache_ids=jnp.asarray(cache_ids))
+        if c.execution == "broadcast":
+            batch["bc_ids"] = jnp.asarray(bc_ids.astype(np.int32))
+        elif c.execution == "ring":
+            batch["ring_ids"] = jnp.asarray(ring_ids)
+        else:
+            batch["send_rows"] = jnp.asarray(send_rows)
+            batch["tab_ids"] = jnp.asarray(tab_ids)
+        return batch
+
+    def sample_minibatch(self, step_idx: int) -> Dict:
+        """sample + extract: one static-shape device batch for `step_idx`."""
+        return self._make_batch(self._sample_host(step_idx))
+
+    def init_minibatch_state(self, key=None) -> Dict:
+        key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
+        state = dict(params=init_gnn_params("gcn", self.dims, key),
+                     step=jnp.zeros((), jnp.int32))
+        # Pre-place replicated, matching the step's output sharding — so
+        # feeding the state back in reuses the ONE compiled executable
+        # (the recompile-count contract in tests/test_engine_minibatch.py).
+        from jax.sharding import NamedSharding
+        return jax.device_put(state, NamedSharding(self.mesh, P()))
+
+    def _fetch_frontier(self, X_local, cache_local, bl):
+        """Device-local frontier feature fetch under shard_map: resident-cache
+        reads plus the execution-model exchange for the misses.  Every valid
+        frontier slot is covered by exactly one of the two (the other reads a
+        zero row), so the sum is exact."""
+        ax, k, nb, fcap = self.axis, self.k, self.nb, self.fcap
+        D = X_local.shape[1]
+        zero = jnp.zeros((1, D), X_local.dtype)
+        ctab = jnp.concatenate([cache_local, zero], 0)
+        F = jnp.take(ctab, bl["cache_ids"], axis=0)
+        if self.cfg.execution == "broadcast":
+            h_full = jax.lax.all_gather(X_local, ax, axis=0, tiled=True)
+            tab = jnp.concatenate([h_full, zero], 0)
+            return F + jnp.take(tab, bl["bc_ids"], axis=0)
+        if self.cfg.execution == "ring":
+            me = jax.lax.axis_index(ax)
+
+            def ring_step(carry, r):
+                acc, h_cur = carry
+                owner = (me + r) % k
+                ids_r = jnp.take(bl["ring_ids"], owner, axis=0)
+                tab = jnp.concatenate([h_cur, zero], 0)
+                acc = acc + jnp.take(tab, ids_r, axis=0)
+                h_nxt = jax.lax.ppermute(
+                    h_cur, ax, [(i, (i - 1) % k) for i in range(k)])
+                return (acc, h_nxt), None
+
+            acc0 = jnp.zeros((bl["cache_ids"].shape[0], D), X_local.dtype)
+            (acc, _), _ = jax.lax.scan(ring_step, (acc0, X_local),
+                                       jnp.arange(k))
+            return F + acc
+        # p2p: ship only the rows each destination's misses actually need
+        send = X_local[bl["send_rows"].reshape(-1)].reshape(k, fcap, D)
+        recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0)
+        tab = jnp.concatenate(
+            [X_local, recv.reshape(k * fcap, D), zero], 0)
+        return F + jnp.take(tab, bl["tab_ids"], axis=0)
+
+    def make_minibatch_step(self):
+        """The jitted distributed mini-batch step: (state, batch) ->
+        (state, metrics, target logits [k, cap_L, C]).  Batch arrays have
+        static shapes from the fanout caps, so this compiles exactly once."""
+        if self._mb_step is not None:
+            return self._mb_step
+        if self.cfg.batching == "full_graph":
+            raise ValueError("batching='full_graph' has no mini-batch step; "
+                             "use make_step()")
+        ax, c, k, L = self.axis, self.cfg, self.k, self.cfg.num_layers
+
+        consts = dict(X=self.X, cache=self._cache_table)
+        cshard = dict(X=P(ax, None), cache=P(ax, None, None))
+        bspec = dict(frontier=P(ax, None), y=P(ax, None), w=P(ax, None),
+                     adj=tuple(P(ax, None, None) for _ in range(L)),
+                     cache_ids=P(ax, None))
+        if c.execution == "broadcast":
+            bspec["bc_ids"] = P(ax, None)
+        elif c.execution == "ring":
+            bspec["ring_ids"] = P(ax, None, None)
+        else:
+            bspec["send_rows"] = P(ax, None, None)
+            bspec["tab_ids"] = P(ax, None)
+        state_spec = dict(params=P(), step=P())
+
+        def local_step(state, consts_local, batch_local):
+            params, step_i = state["params"], state["step"]
+            bl = {key: (tuple(a[0] for a in v) if isinstance(v, tuple)
+                        else v[0]) for key, v in batch_local.items()}
+            X_l = consts_local["X"]
+            cache_l = consts_local["cache"][0]
+            F = self._fetch_frontier(X_l, cache_l, bl)
+            # Differentiate the LOCAL loss numerator only (same rationale as
+            # the full-graph step); the fetch above is outside the grad, so
+            # the grad path is collective-free and portable.
+            def num_fn(p):
+                logits = padded_minibatch_forward(p, list(bl["adj"]), F)
+                lse = jax.scipy.special.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(
+                    logits, bl["y"][:, None], axis=-1)[:, 0]
+                return ((lse - ll) * bl["w"]).sum(), logits
+
+            (num, logits), grads = jax.value_and_grad(
+                num_fn, has_aux=True)(params)
+            den = jnp.maximum(jax.lax.psum(bl["w"].sum(), ax), 1.0)
+            loss = jax.lax.psum(num, ax) / den
+            grads = jax.tree_util.tree_map(
+                lambda g_: jax.lax.psum(g_, ax) / den, grads)
+            params2 = jax.tree_util.tree_map(
+                lambda p_, g_: p_ - c.lr * g_, params, grads)
+            state2 = dict(params=params2, step=step_i + 1)
+            return state2, dict(loss=loss), logits[None]
+
+        smapped = shard_map(
+            local_step, mesh=self.mesh,
+            in_specs=(state_spec, cshard, bspec),
+            out_specs=(state_spec, dict(loss=P()), P(ax, None, None)),
+            check_vma=False)
+
+        @jax.jit
+        def step(state, consts_, batch):
+            return smapped(state, consts_, batch)
+
+        self._mb_consts = consts
+        self._jit_mb_step = step
+        self._mb_step = lambda state, batch: step(state, self._mb_consts, batch)
+        return self._mb_step
+
+    def lower_minibatch_step(self, state=None, batch=None):
+        """Lower (without running) the mini-batch step — dry-runs at scale."""
+        self.make_minibatch_step()
+        state = state if state is not None else self.init_minibatch_state()
+        batch = batch if batch is not None else self.sample_minibatch(0)
+        return self._jit_mb_step.lower(state, self._mb_consts, batch)
+
+    def make_reference_minibatch_step(self):
+        """Single-device oracle: the identical padded batches, features read
+        straight from the global table, forward vmapped over the k device
+        blocks — multi-device runs must match to float tolerance."""
+        if self._mb_ref_step is not None:
+            return self._mb_ref_step
+        c = self.cfg
+        D = self.g.features.shape[1]
+        table = jnp.concatenate(
+            [self.X, jnp.zeros((1, D), self.X.dtype)], 0)
+
+        @jax.jit
+        def ref_step(state, batch):
+            params, step_i = state["params"], state["step"]
+            F = jnp.take(table, batch["frontier"], axis=0)  # [k, cap0, D]
+
+            def loss_fn(p):
+                logits = jax.vmap(
+                    lambda f, *adjs: padded_minibatch_forward(
+                        p, list(adjs), f))(F, *batch["adj"])
+                lse = jax.scipy.special.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(
+                    logits, batch["y"][..., None], axis=-1)[..., 0]
+                w = batch["w"]
+                loss = ((lse - ll) * w).sum() / jnp.maximum(w.sum(), 1.0)
+                return loss, logits
+
+            (loss, logits), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params2 = jax.tree_util.tree_map(
+                lambda p_, g_: p_ - c.lr * g_, params, grads)
+            return (dict(params=params2, step=step_i + 1),
+                    dict(loss=loss), logits)
+
+        self._mb_ref_step = ref_step
+        return ref_step
+
+    def run_epoch_minibatch(self, num_batches: int, schedule: str = "conventional",
+                            state=None, reference: bool = False):
+        """Drive the §6.1 mini-batch execution schedules (conventional /
+        factored / operator_parallel) with the engine's REAL stages: host
+        sampling, padded-batch extraction (+fetch-plan build), and the jitted
+        train step.  Returns (state, losses, StageTimes).  A fresh run
+        (state=None) resets self.comm_stats like train(); passing a state in
+        continues accumulating."""
+        from repro.core.execution.minibatch_pipeline import SCHEDULES
+        step = (self.make_reference_minibatch_step() if reference
+                else self.make_minibatch_step())
+        if state is None:
+            self.comm_stats = CommStats()
+        holder = dict(state=state if state is not None
+                      else self.init_minibatch_state())
+        losses: List[float] = []
+
+        def train_fn(mbs, batch):
+            holder["state"], metrics, _ = step(holder["state"], batch)
+            losses.append(float(metrics["loss"]))
+
+        times = SCHEDULES[schedule](
+            list(range(num_batches)),
+            lambda i: self._sample_host(int(i)),
+            self._make_batch, train_fn)
+        return holder["state"], losses, times
+
+    def minibatch_accuracy(self, logits, batch) -> float:
+        """Accuracy over the batch's weighted (owned train) targets."""
+        correct = (jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32)
+        w = batch["w"]
+        return float((correct * w).sum() / jnp.maximum(w.sum(), 1.0))
+
+    # ------------------------------------------------------------------
     # driver
     # ------------------------------------------------------------------
 
     def train(self, epochs: int, reference: bool = False
               ) -> Tuple[List[float], jnp.ndarray]:
-        """Run `epochs` steps; returns (losses, final logits [Vp, C])."""
+        """Run `epochs` steps; returns (losses, final logits) — logits are
+        [Vp, C] for full-graph batching, [k, cap_L, C] target logits for the
+        mini-batch modes.  Mini-batch runs reset and accumulate
+        self.comm_stats (feature fetch bytes, cache hits)."""
+        if self.cfg.batching != "full_graph":
+            step = (self.make_reference_minibatch_step() if reference
+                    else self.make_minibatch_step())
+            state = self.init_minibatch_state()
+            self.comm_stats = CommStats()
+            losses: List[float] = []
+            logits = None
+            for i in range(epochs):
+                batch = self.sample_minibatch(i)
+                state, metrics, logits = step(state, batch)
+                losses.append(float(metrics["loss"]))
+            return losses, logits
         step = self.make_reference_step() if reference else self.make_step()
         state = self.init_state()
-        losses: List[float] = []
+        losses = []
         logits = None
         for _ in range(epochs):
             state, metrics, logits = step(state)

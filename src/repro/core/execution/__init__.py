@@ -4,6 +4,7 @@ from repro.core.execution.chunk import (
     sequential_chunk_aggregate,
 )
 from repro.core.execution.minibatch_pipeline import (
+    SCHEDULES,
     PullPushPlan,
     StageTimes,
     p3_plan,

@@ -82,6 +82,16 @@ def run_operator_parallel(batch_ids: List[np.ndarray], sample_fn, extract_fn,
     return t
 
 
+# Schedule registry so drivers (e.g. DistGNNEngine.run_epoch_minibatch) can
+# select a §6.1 execution model by name; every entry shares the
+# (batch_ids, sample_fn, extract_fn, train_fn) -> StageTimes signature.
+SCHEDULES: Dict[str, Callable] = {
+    "conventional": run_conventional,
+    "factored": run_factored,
+    "operator_parallel": run_operator_parallel,
+}
+
+
 @dataclasses.dataclass
 class PullPushPlan:
     """P3: the first-hop aggregation runs model-parallel over column-sharded

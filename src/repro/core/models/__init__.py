@@ -4,5 +4,6 @@ from repro.core.models.gnn import (
     gnn_layer,
     init_gnn_params,
     minibatch_forward,
+    padded_minibatch_forward,
     softmax_xent,
 )

@@ -92,6 +92,21 @@ def minibatch_forward(model: str, params: Dict, layer_adj: List[jnp.ndarray],
     return H
 
 
+def padded_minibatch_forward(params: Dict, layer_adj: Sequence[jnp.ndarray],
+                             X: jnp.ndarray) -> jnp.ndarray:
+    """GCN forward over statically PADDED dense sampled blocks (the
+    DistGNNEngine mini-batch contract): self-loops are already folded into the
+    row-normalized blocks, so each layer is H <- A_l @ H @ W + b.  Pad rows and
+    cols of A_l are zero, so padded positions stay inert — they produce
+    constant relu(b) rows that no real row ever reads."""
+    H = X
+    L = len(params["layers"])
+    for l, p in enumerate(params["layers"]):
+        z = layer_adj[l] @ H @ p["w"] + p["b"]
+        H = z if l == L - 1 else jax.nn.relu(z)
+    return H
+
+
 def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     lse = jax.scipy.special.logsumexp(logits, axis=-1)

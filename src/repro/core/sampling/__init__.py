@@ -1,6 +1,8 @@
 from repro.core.sampling.cache import (
+    CACHE_POLICIES,
     FIFOCache,
     analysis_cache,
+    device_cache_ids,
     importance_cache,
     presampling_cache,
     proximity_ordering,
@@ -18,10 +20,13 @@ from repro.core.sampling.partition_batch import (
     LLCGSchedule,
     expanded_partition_minibatch,
     partition_minibatch,
+    partition_targets,
 )
 from repro.core.sampling.samplers import (
     MiniBatch,
+    frontier_caps,
     layer_wise_sample,
     node_wise_sample,
+    pad_minibatch,
     subgraph_sample,
 )

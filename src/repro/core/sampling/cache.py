@@ -81,6 +81,29 @@ def analysis_cache(g: Graph, capacity: int, *, fanouts=(5, 5)) -> np.ndarray:
     return np.argsort(-total)[:capacity]
 
 
+# Static (build-once) policies usable as a device-resident feature cache:
+# input features never change during training, so a static cache is exact —
+# hits are free reads, never stale.
+CACHE_POLICIES = {
+    "static_degree": static_degree_cache,
+    "importance": importance_cache,
+    "presampling": presampling_cache,
+    "analysis": analysis_cache,
+}
+
+
+def device_cache_ids(g: Graph, assignment: np.ndarray, worker: int,
+                     policy: str, capacity: int, **policy_kw) -> np.ndarray:
+    """Per-device resident feature cache: the policy's global hotness ranking
+    filtered to vertices REMOTE to `worker` (local features are already
+    resident), truncated to `capacity`."""
+    if policy in ("none", None) or capacity <= 0:
+        return np.zeros(0, np.int64)
+    ranked = CACHE_POLICIES[policy](g, g.num_vertices, **policy_kw)
+    remote = ranked[np.asarray(assignment)[ranked] != worker]
+    return remote[:capacity].astype(np.int64)
+
+
 @dataclasses.dataclass
 class FIFOCache:
     """BGL dynamic FIFO cache; feed access batches in (proximity-aware) order."""

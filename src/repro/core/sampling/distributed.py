@@ -25,9 +25,15 @@ FEAT_BYTES = 4
 class CommStats:
     pull_bytes: int = 0  # neighbor lists / features moved to the requester
     push_bytes: int = 0  # sampling requests + results (CSP)
+    cache_hit_bytes: int = 0  # feature bytes served by a local cache instead
 
     def total(self) -> int:
+        """Bytes that actually cross the wire (cache hits excluded)."""
         return self.pull_bytes + self.push_bytes
+
+    def requested(self) -> int:
+        """Bytes the computation asked for, whether cached or fetched."""
+        return self.pull_bytes + self.push_bytes + self.cache_hit_bytes
 
 
 def pull_based_sample(g: Graph, part: Partition, worker: int, targets: np.ndarray,
@@ -91,10 +97,23 @@ def skewed_weighted_sample(g: Graph, part: Partition, worker: int,
 
 
 def feature_fetch_bytes(part: Partition, worker: int, vertices: np.ndarray,
-                        feature_dim: int, cached: set = frozenset()) -> int:
-    """Bytes to fetch input features for a batch, minus cache hits."""
-    total = 0
+                        feature_dim: int, cached_ids=frozenset(),
+                        stats: CommStats = None) -> int:
+    """Bytes to fetch input features for a batch.  Remote vertices present in
+    `cached_ids` are cache hits: they cost nothing on the wire but are tracked
+    in `stats.cache_hit_bytes` when a CommStats accumulator is passed (so an
+    engine's reported bytes and this standalone cost model agree exactly).
+    Returns the miss (wire) bytes; local vertices are free."""
+    cached = (cached_ids if isinstance(cached_ids, (set, frozenset))
+              else set(int(v) for v in np.asarray(cached_ids).ravel()))
+    miss = hit = 0
     for v in np.asarray(vertices).ravel():
-        if part.assignment[v] != worker and int(v) not in cached:
-            total += feature_dim * FEAT_BYTES
-    return total
+        if part.assignment[v] != worker:
+            if int(v) in cached:
+                hit += feature_dim * FEAT_BYTES
+            else:
+                miss += feature_dim * FEAT_BYTES
+    if stats is not None:
+        stats.pull_bytes += miss
+        stats.cache_hit_bytes += hit
+    return miss

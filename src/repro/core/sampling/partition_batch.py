@@ -14,6 +14,26 @@ from repro.core.partition.edge_cut import Partition
 from repro.core.sampling.samplers import MiniBatch
 
 
+def partition_targets(g: Graph, part: Partition, worker: int, batch_size: int,
+                      rng: np.random.Generator, train_only: bool = True
+                      ) -> np.ndarray:
+    """Draw up to `batch_size` mini-batch target (or walk-root) vertices from
+    `worker`'s owned partition block — the same ownership rule as
+    `partition_minibatch`, but subsampled so samplers can expand them into
+    layered computation graphs.  Falls back to all owned vertices when the
+    block has no train vertices; returns fewer than `batch_size` ids when the
+    pool is smaller (callers pad to static shapes)."""
+    owned = np.where(part.assignment == worker)[0]
+    pool = owned
+    if train_only and g.train_mask is not None:
+        train = owned[g.train_mask[owned]]
+        if len(train):
+            pool = train
+    if len(pool) <= batch_size:
+        return np.sort(pool).astype(np.int64)
+    return np.sort(rng.choice(pool, size=batch_size, replace=False)).astype(np.int64)
+
+
 def partition_minibatch(g: Graph, part: Partition, worker: int,
                         num_layers: int = 2) -> MiniBatch:
     """PSGD-PA: ignore cross edges; train on the induced local subgraph."""

@@ -8,7 +8,7 @@ exactly the "computation graph generation" stage of the survey's pipeline.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -29,6 +29,35 @@ class MiniBatch:
 
     def accessed_vertices(self) -> np.ndarray:
         return np.unique(np.concatenate(self.layer_vertices))
+
+    def self_indices(self) -> List[np.ndarray]:
+        """out[l][i] = position of layer_vertices[l+1][i] within
+        layer_vertices[l] (valid because every sampler keeps its frontiers
+        nested: each layer's vertex set contains the next layer's)."""
+        out = []
+        for l in range(len(self.layer_vertices) - 1):
+            cols = self.layer_vertices[l]
+            pos = {int(v): j for j, v in enumerate(cols)}
+            out.append(np.asarray(
+                [pos[int(v)] for v in self.layer_vertices[l + 1]], np.int64))
+        return out
+
+    def relabel(self) -> "MiniBatch":
+        """Rewrite every frontier (and targets) as positions within the input
+        frontier `layer_vertices[0]` — the batch-local id space a device
+        computes in.  Round-trips: `lv0[relabeled.layer_vertices[l]] ==
+        self.layer_vertices[l]` for every layer."""
+        lv0 = self.layer_vertices[0]
+        pos = {int(v): j for j, v in enumerate(lv0)}
+        local = [np.asarray([pos[int(v)] for v in lv], np.int64)
+                 for lv in self.layer_vertices]
+        return MiniBatch(
+            targets=np.asarray([pos[int(v)] for v in self.targets], np.int64),
+            layer_vertices=local,
+            layer_adj=self.layer_adj,
+            input_features=self.input_features,
+            labels=self.labels,
+        )
 
 
 def _block_adj(g: Graph, rows: np.ndarray, cols: np.ndarray,
@@ -143,3 +172,72 @@ def subgraph_sample(g: Graph, roots: np.ndarray, walk_length: int,
         input_features=None if g.features is None else g.features[verts],
         labels=None if g.labels is None else g.labels[verts],
     )
+
+
+# ---------------------------------------------------------------------------
+# static padding (TPU/jit contract): every sampled batch of a given fanout
+# config pads to the same shapes, so a jitted train step compiles once per
+# config instead of once per batch.
+# ---------------------------------------------------------------------------
+
+
+def frontier_caps(batching: str, num_layers: int, batch_size: int, *,
+                  fanouts: Sequence[int] = (), layer_sizes: Sequence[int] = (),
+                  walk_length: int = 0, num_vertices: int = 0) -> List[int]:
+    """Worst-case frontier sizes caps[l] for layer_vertices[l] (0 = input
+    layer, num_layers = targets), clipped to the vertex count: node-wise
+    frontiers grow by at most x(fanout+1) per hop, layer-wise by +layer_size,
+    subgraph walks visit at most roots*(walk_length+1) vertices."""
+    L = num_layers
+    if batching == "node_wise":
+        if len(fanouts) != L:
+            raise ValueError(f"need {L} fanouts, got {fanouts}")
+        caps = [batch_size]
+        for f in fanouts:  # applied from the target layer down
+            caps.append(caps[-1] * (int(f) + 1))
+        caps = caps[::-1]  # index 0 = input layer
+    elif batching == "layer_wise":
+        if len(layer_sizes) != L:
+            raise ValueError(f"need {L} layer sizes, got {layer_sizes}")
+        caps = [batch_size]
+        for s in layer_sizes:
+            caps.append(caps[-1] + int(s))
+        caps = caps[::-1]
+    elif batching == "subgraph":
+        caps = [batch_size * (int(walk_length) + 1)] * (L + 1)
+    else:
+        raise ValueError(f"unknown batching mode {batching!r}")
+    if num_vertices:
+        caps = [min(c, num_vertices) for c in caps]
+    return caps
+
+
+def pad_minibatch(mb: MiniBatch, caps: Sequence[int]) -> Dict[str, np.ndarray]:
+    """Pad a sampled MiniBatch to the static `caps` shapes.  Pad frontier /
+    target slots carry vertex id -1 and mask 0; pad adjacency rows/cols are
+    zero, so padded positions stay inert through a forward pass.
+
+    Returns dict(frontier [caps[0]], fmask, tgt [caps[-1]], tmask,
+    adj = tuple of [caps[l+1], caps[l]] blocks)."""
+    L = len(mb.layer_adj)
+    if len(caps) != L + 1:
+        raise ValueError(f"need {L + 1} caps, got {len(caps)}")
+    for l, lv in enumerate(mb.layer_vertices):
+        if len(lv) > caps[l]:
+            raise ValueError(
+                f"layer {l} frontier {len(lv)} exceeds cap {caps[l]}")
+    frontier = np.full(caps[0], -1, np.int64)
+    frontier[: mb.num_input_vertices] = mb.layer_vertices[0]
+    fmask = np.zeros(caps[0], np.float32)
+    fmask[: mb.num_input_vertices] = 1.0
+    tgt = np.full(caps[-1], -1, np.int64)
+    tgt[: len(mb.targets)] = mb.targets
+    tmask = np.zeros(caps[-1], np.float32)
+    tmask[: len(mb.targets)] = 1.0
+    adj = []
+    for l, A in enumerate(mb.layer_adj):
+        P = np.zeros((caps[l + 1], caps[l]), np.float32)
+        P[: A.shape[0], : A.shape[1]] = A
+        adj.append(P)
+    return dict(frontier=frontier, fmask=fmask, tgt=tgt, tmask=tmask,
+                adj=tuple(adj))

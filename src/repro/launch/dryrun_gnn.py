@@ -123,6 +123,15 @@ def main():
     ap.add_argument("--engine-vertices", type=int, default=1 << 14,
                     help="engine: synthetic graph size (the partition plan is "
                     "built host-side from a concrete graph)")
+    ap.add_argument("--engine-batching", default="full_graph",
+                    help="engine: full_graph | node_wise | layer_wise | "
+                    "subgraph — mini-batch modes lower the sampled-batch "
+                    "step (static fanout caps + feature cache) instead")
+    ap.add_argument("--engine-batch-size", type=int, default=1024,
+                    help="engine mini-batch: per-device targets / walk roots")
+    ap.add_argument("--engine-cache-capacity", type=int, default=4096,
+                    help="engine mini-batch: cached remote feature rows "
+                    "per device (static_degree policy)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
     cfg = GNN_CFG
@@ -160,10 +169,18 @@ def main():
                      feature_dim=cfg.feature_dim,
                      num_classes=cfg.num_classes, seed=0)
         mesh1d = jax.make_mesh((chips,), ("w",))
-        eng = DistGNNEngine(g, mesh=mesh1d, cfg=EngineConfig(
+        minibatch = args.engine_batching != "full_graph"
+        ecfg = EngineConfig(
             execution=args.engine_exec, hidden=cfg.hidden_dim,
-            num_layers=cfg.num_layers))
-        compiled = eng.lower_step().compile()
+            num_layers=cfg.num_layers, batching=args.engine_batching,
+            batch_size=args.engine_batch_size,
+            fanouts=(4,) * cfg.num_layers,
+            layer_sizes=(2 * args.engine_batch_size,) * cfg.num_layers,
+            cache_policy="static_degree" if minibatch else "none",
+            cache_capacity=args.engine_cache_capacity if minibatch else 0)
+        eng = DistGNNEngine(g, mesh=mesh1d, cfg=ecfg)
+        compiled = (eng.lower_minibatch_step() if minibatch
+                    else eng.lower_step()).compile()
         V = eng.Vp
         K = eng.K
     elif args.protocol == "p2p":
@@ -209,6 +226,8 @@ def main():
                   roofline=rl.as_dict())
     os.makedirs(args.out, exist_ok=True)
     suffix = f"__{args.protocol}" if args.protocol != "broadcast" else ""
+    if args.protocol == "engine" and args.engine_batching != "full_graph":
+        suffix += f"_{args.engine_batching}"
     path = os.path.join(args.out, f"gcn-paper__fullgraph__{mesh_name}{suffix}.json")
     with open(path, "w") as f:
         json.dump(result, f, indent=1, default=float)

@@ -103,6 +103,39 @@ def test_cache_policies_beat_random(g):
     assert hr_ana > hr_rand
 
 
+def test_engine_cache_policies_beat_random_on_powerlaw():
+    """The two policies the DistGNNEngine exposes as its resident feature
+    cache (static_degree, presampling) must beat a random cache of the same
+    capacity on a power-law graph — on the degree-skewed workloads where
+    caching matters, across several random baselines."""
+    gpl = powerlaw_graph(400, avg_degree=12, seed=7)
+    cap = 50
+    hr_deg = simulate_hit_ratio(static_degree_cache(gpl, cap),
+                                _access_stream(gpl, seed=5))
+    hr_pre = simulate_hit_ratio(presampling_cache(gpl, cap),
+                                _access_stream(gpl, seed=5))
+    for rseed in range(3):
+        rand_ids = np.random.default_rng(rseed).choice(
+            gpl.num_vertices, cap, replace=False)
+        hr_rand = simulate_hit_ratio(rand_ids, _access_stream(gpl, seed=5))
+        assert hr_deg > hr_rand, (hr_deg, hr_rand, rseed)
+        assert hr_pre > hr_rand, (hr_pre, hr_rand, rseed)
+
+
+def test_fifo_eviction_order():
+    """BGL FIFO semantics: first-in is evicted first, a hit does NOT refresh
+    recency (FIFO, not LRU), and re-inserting after eviction misses."""
+    fifo = FIFOCache(capacity=2)
+    assert fifo.access(1) is False  # [1]
+    assert fifo.access(2) is False  # [1, 2]
+    assert fifo.access(1) is True   # hit; order unchanged (FIFO)
+    assert fifo.access(3) is False  # evicts 1 (first in) -> [2, 3]
+    assert fifo.access(2) is True   # 2 survived: the hit didn't reorder
+    assert fifo.access(1) is False  # 1 was evicted; re-inserting evicts 2
+    assert fifo.access(3) is True   # [1, 3] -> 3 still resident
+    assert fifo.access(2) is False  # 2 went out when 1 came back
+
+
 def test_importance_cache_nonempty(g):
     ids = importance_cache(g, 40)
     assert len(ids) == 40 and len(set(ids.tolist())) == 40

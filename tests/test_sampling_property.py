@@ -1,0 +1,146 @@
+"""Hypothesis property tests on the §5 sampler invariants the engine's
+mini-batch path relies on: sampled blocks only reference in-frontier
+vertices, fanout / layer-size bounds hold (so the static padding caps are
+true upper bounds), and MiniBatch relabeling round-trips to global ids.
+
+Requires the optional ``hypothesis`` dependency (the ``property`` test extra);
+without it the whole module degrades to a skip instead of a collection error.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.graph import er_graph, powerlaw_graph
+from repro.core.sampling import (
+    frontier_caps,
+    layer_wise_sample,
+    node_wise_sample,
+    pad_minibatch,
+    subgraph_sample,
+)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _check_blocks_in_frontier(g, mb):
+    """Every nonzero block entry must be a real edge (or the self loop), with
+    both endpoints inside the declared frontiers."""
+    for l, A in enumerate(mb.layer_adj):
+        rows = mb.layer_vertices[l + 1]
+        cols = mb.layer_vertices[l]
+        assert A.shape == (len(rows), len(cols))
+        for i, j in zip(*np.nonzero(A)):
+            src, dst = int(cols[j]), int(rows[i])
+            assert src == dst or src in set(g.neighbors(dst).tolist()), (
+                f"layer {l}: block references non-edge {src}->{dst}")
+
+
+@given(st.integers(40, 120), st.integers(1, 8), st.integers(1, 4),
+       st.integers(1, 4), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_node_wise_in_frontier_and_fanout_bounds(n, B, f1, f2, seed):
+    g = er_graph(n, avg_degree=5, seed=seed % 13)
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(n, size=min(B, n), replace=False)
+    mb = node_wise_sample(g, targets, (f1, f2), rng)
+    _check_blocks_in_frontier(g, mb)
+    # per-row sampled degree bounded by fanout (+1 self loop)
+    fanouts = (f1, f2)
+    for l, A in enumerate(mb.layer_adj):
+        # layer_adj[0] is the INPUT-side block, built with the LAST fanout
+        fan = fanouts[len(fanouts) - 1 - l]
+        assert (np.count_nonzero(A, axis=1) <= fan + 1).all()
+    # frontier sizes bounded by the static padding caps
+    caps = frontier_caps("node_wise", 2, len(targets), fanouts=fanouts,
+                         num_vertices=n)
+    for l, lv in enumerate(mb.layer_vertices):
+        assert len(lv) <= caps[l], (l, len(lv), caps)
+
+
+@given(st.integers(40, 120), st.integers(1, 8), st.integers(4, 32),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_layer_wise_sizes_respected(n, B, size, seed):
+    g = powerlaw_graph(n, avg_degree=6, seed=seed % 11)
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(n, size=min(B, n), replace=False)
+    sizes = (size, size)
+    mb = layer_wise_sample(g, targets, sizes, rng)
+    _check_blocks_in_frontier(g, mb)
+    # each expansion adds at most `size` new vertices to the frontier
+    L = len(sizes)
+    for j, s in enumerate(sizes, start=1):
+        grown, prev = mb.layer_vertices[L - j], mb.layer_vertices[L - j + 1]
+        assert len(grown) <= len(prev) + s
+        assert set(prev.tolist()) <= set(grown.tolist())  # nested frontiers
+    caps = frontier_caps("layer_wise", L, len(targets), layer_sizes=sizes,
+                         num_vertices=n)
+    for l, lv in enumerate(mb.layer_vertices):
+        assert len(lv) <= caps[l]
+
+
+@given(st.integers(40, 100), st.integers(1, 6), st.integers(0, 8),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_subgraph_walk_bounded(n, roots, walk, seed):
+    g = er_graph(n, avg_degree=5, seed=seed % 7)
+    rng = np.random.default_rng(seed)
+    r = rng.choice(n, size=min(roots, n), replace=False)
+    mb = subgraph_sample(g, r, walk_length=walk, rng=rng)
+    caps = frontier_caps("subgraph", 2, len(r), walk_length=walk,
+                         num_vertices=n)
+    for l, lv in enumerate(mb.layer_vertices):
+        assert len(lv) <= caps[l]
+    # induced subgraph: square blocks over one vertex set
+    assert mb.layer_adj[0].shape[0] == mb.layer_adj[0].shape[1]
+
+
+@given(st.integers(40, 120), st.integers(1, 8), st.integers(1, 4),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_minibatch_relabel_round_trips(n, B, fan, seed):
+    g = er_graph(n, avg_degree=5, seed=seed % 13)
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(n, size=min(B, n), replace=False)
+    mb = node_wise_sample(g, targets, (fan, fan), rng)
+    local = mb.relabel()
+    lv0 = mb.layer_vertices[0]
+    # batch-local ids -> global ids round-trips every frontier and the targets
+    for l in range(len(mb.layer_vertices)):
+        np.testing.assert_array_equal(
+            lv0[local.layer_vertices[l]], mb.layer_vertices[l])
+    np.testing.assert_array_equal(lv0[local.targets], mb.targets)
+    # self_indices: positions of layer l+1 vertices inside layer l
+    for l, idx in enumerate(mb.self_indices()):
+        np.testing.assert_array_equal(
+            mb.layer_vertices[l][idx], mb.layer_vertices[l + 1])
+
+
+@given(st.integers(40, 100), st.integers(1, 6), st.integers(1, 3),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_pad_minibatch_is_inert(n, B, fan, seed):
+    """Padding never drops data: real entries survive verbatim, pad slots are
+    zero-masked, and padded block rows/cols beyond the real shape are zero."""
+    g = er_graph(n, avg_degree=5, seed=seed % 13)
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(n, size=min(B, n), replace=False)
+    mb = node_wise_sample(g, targets, (fan, fan), rng)
+    caps = frontier_caps("node_wise", 2, len(targets), fanouts=(fan, fan),
+                         num_vertices=n)
+    padded = pad_minibatch(mb, caps)
+    nin = mb.num_input_vertices
+    np.testing.assert_array_equal(padded["frontier"][:nin],
+                                  mb.layer_vertices[0])
+    assert (padded["frontier"][nin:] == -1).all()
+    assert padded["fmask"].sum() == nin
+    assert padded["tmask"].sum() == len(mb.targets)
+    for l, A in enumerate(mb.layer_adj):
+        P = padded["adj"][l]
+        assert P.shape == (caps[l + 1], caps[l])
+        np.testing.assert_array_equal(P[: A.shape[0], : A.shape[1]], A)
+        assert P[A.shape[0]:, :].sum() == 0 and P[:, A.shape[1]:].sum() == 0
