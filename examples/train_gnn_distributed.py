@@ -12,6 +12,11 @@ Two modes:
   owned partition block, statically padded sampled blocks, a device-resident
   feature cache (``--cache`` / ``--cache-capacity``), and the §6.1 stage
   schedules (``--schedule``); reports feature-fetch bytes + cache hits.
+  ``--partition-family vertex_cut --vertex-cut random|cartesian2d|libra``
+  switches the §4 partition family: edges are partitioned, vertices
+  replicate, and the exchange becomes the replica-sync combine (partial
+  aggregations over owned edges, master-masked loss); reports the
+  replication factor and replica-sync bytes.
 * ``--no-engine``: the legacy dense-block SpMM execution models (survey
   Table 2) over a device mesh, kept as the survey-taxonomy reference.
 
@@ -44,7 +49,9 @@ def run_engine(args, g):
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     layer_sizes = tuple(int(x) for x in args.layer_sizes.split(","))
     cfg = EngineConfig(execution=args.exec, protocol=args.protocol,
-                       partitioner=args.partition, lr=args.lr,
+                       partition_family=args.partition_family,
+                       partitioner=args.partition,
+                       vertex_cut=args.vertex_cut, lr=args.lr,
                        batching=args.batching, batch_size=args.batch_size,
                        fanouts=fanouts, layer_sizes=layer_sizes,
                        walk_length=args.walk_length,
@@ -58,10 +65,14 @@ def run_engine(args, g):
     minibatch = args.batching != "full_graph"
     lowered = eng.lower_minibatch_step() if minibatch else eng.lower_step()
     coll, kinds = collective_bytes(lowered.compile().as_text())
+    cut = (f"vertex_cut={args.vertex_cut} "
+           f"(replication={eng.layout.replication_factor():.2f}, nv={eng.nv})"
+           if args.partition_family == "vertex_cut"
+           else f"partition={args.partition}")
     print(f"engine: exec={args.exec} protocol={args.protocol} "
-          f"batching={args.batching} partition={args.partition} k={k} "
+          f"batching={args.batching} {cut} k={k} "
           f"(nb={eng.nb}, halo cap={getattr(eng, 'cap', '-')}"
-          + (f", frontier caps={eng.caps}" if minibatch else "")
+          + (f", frontier caps={eng.caps} fcap={eng.fcap}" if minibatch else "")
           + f") collective bytes/step = {coll / 1e6:.2f} MB  {kinds}")
     if minibatch:
         state, losses, times = eng.run_epoch_minibatch(
@@ -84,6 +95,10 @@ def run_engine(args, g):
         losses, logits = eng.train(args.epochs)
         for e in range(0, args.epochs, max(args.epochs // 4, 1)):
             print(f"epoch {e:3d} loss {losses[e]:.4f}")
+        if args.partition_family == "vertex_cut":
+            s = eng.comm_stats
+            print(f"replica sync: {s.replica_sync_bytes / 1e6:.3f} MB over "
+                  f"{args.epochs} steps ({args.exec} combine)")
         print(f"final: train_acc={eng.accuracy(logits, 'train'):.3f} "
               f"test_acc={eng.accuracy(logits, 'test'):.3f}")
     if args.oracle_check:
@@ -177,6 +192,15 @@ def main():
                     help="mini-batch stage schedule (survey §6.1)")
     ap.add_argument("--parts", type=int, default=0, help="0 = all devices")
     ap.add_argument("--partition", default="metis_like")
+    ap.add_argument("--partition-family", default="edge_cut",
+                    choices=["edge_cut", "vertex_cut"],
+                    help="engine §4 partition family: edge-cut halo exchange "
+                    "or vertex-cut replica sync (replicated vertices, "
+                    "master-masked loss)")
+    ap.add_argument("--vertex-cut", default="cartesian2d",
+                    choices=["random", "cartesian2d", "libra"],
+                    help="vertex-cut partitioner (with "
+                    "--partition-family vertex_cut)")
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--vertices", type=int, default=512)
     ap.add_argument("--lr", type=float, default=0.5)
@@ -197,6 +221,12 @@ def main():
                  f"got {args.exec!r}")
     if args.batching != "full_graph" and not args.engine:
         ap.error("mini-batch --batching modes run on the engine path only")
+    if args.partition_family == "vertex_cut":
+        if not args.engine:
+            ap.error("--partition-family vertex_cut runs on the engine path only")
+        if args.batching != "full_graph":
+            ap.error("vertex_cut supports --batching full_graph only "
+                     "(vertex-cut mini-batch sampling is a ROADMAP follow-up)")
     g = sbm_graph(args.vertices, num_blocks=8, p_in=0.05, p_out=0.003, seed=0)
     if args.engine:
         run_engine(args, g)

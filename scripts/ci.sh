@@ -44,6 +44,27 @@ assert eng._jit_mb_step._cache_size() == 1, eng._jit_mb_step._cache_size()
 print(f"smoke OK node_wise minibatch p2p+cache: oracle err {err:.2e}, "
       f"1 compile, {eng.comm_stats.cache_hit_bytes} cache-hit bytes")
 EOF
+    # 4-device VERTEX-CUT engine smoke: cartesian2d 2x2 cut, sync protocol,
+    # replica-sync p2p GAS exchange vs the oracle + bytes accounting
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
+import jax
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+
+g = sbm_graph(96, num_blocks=4, p_in=0.08, p_out=0.01, seed=0)
+eng = DistGNNEngine(g, cfg=EngineConfig(
+    partition_family="vertex_cut", vertex_cut="cartesian2d",
+    execution="p2p", protocol="sync", hidden=16, lr=0.3))
+ld, _ = eng.train(3)
+lr_, _ = eng.train(3, reference=True)
+err = max(abs(a - b) for a, b in zip(ld, lr_))
+assert err < 1e-4, err
+assert eng._jit_step._cache_size() == 1, eng._jit_step._cache_size()
+assert eng.comm_stats.replica_sync_bytes > 0
+print(f"smoke OK vertex_cut cartesian2d 2x2 p2p/sync: oracle err {err:.2e}, "
+      f"1 compile, replication {eng.layout.replication_factor():.2f}, "
+      f"{eng.comm_stats.replica_sync_bytes} replica-sync bytes")
+EOF
 else
     python -m pytest -x -q
 fi

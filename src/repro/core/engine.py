@@ -1,10 +1,27 @@
 """DistGNNEngine: the survey's four technique families composed into ONE
 jitted shard_map training step.
 
-  partition (§4)   an edge-cut partitioner assigns vertices to devices; the
-                   engine relabels vertices so device d owns the contiguous
-                   padded block [d*nb, (d+1)*nb) — the partition plan IS the
-                   device layout.
+  partition (§4)   a selectable `partition_family` axis:
+                     edge_cut   — a partitioner assigns VERTICES to devices;
+                                  the engine relabels vertices so device d
+                                  owns the contiguous padded block
+                                  [d*nb, (d+1)*nb) — the partition plan IS
+                                  the device layout.  Neighbor values cross
+                                  the wire (halo exchange).
+                     vertex_cut — a cut assigns EDGES to devices; vertices
+                                  replicate (partition/vertex_layout.py turns
+                                  the cut into per-device owned-edge ELL
+                                  blocks + replica slot tables).  Each device
+                                  computes PARTIAL aggregations over its
+                                  owned edges; partials are combined across
+                                  replicas by the replica-sync exchange
+                                  (execution/replica_sync.py) — broadcast /
+                                  ring / master-based two-phase p2p GAS —
+                                  and the loss (hence the weight-gradient
+                                  psum) is masked to each vertex's MASTER
+                                  replica so nothing double-counts.  The
+                                  wire volume is bounded by the replication
+                                  factor, the §4.2 lever for skewed graphs.
   batch (§5)       a selectable `batching` axis:
                      full_graph — each device's partition block is its batch
                                   (PSGD-style ownership, loss masked to owned
@@ -60,13 +77,24 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import interpret_default, shard_map
+from repro.core.execution.replica_sync import (
+    build_replica_sync_plan,
+    reference_combine,
+    replica_combine,
+)
 from repro.core.graph import Graph
 from repro.core.models.gnn import init_gnn_params, padded_minibatch_forward
+from repro.core.partition.cost_models import FEAT_BYTES
 from repro.core.partition.edge_cut import PARTITIONERS, Partition
+from repro.core.partition.vertex_cut import VERTEX_CUTS
+from repro.core.partition.vertex_layout import build_vertex_layout
 from repro.core.protocols.async_hist import block_refresh
 from repro.core.sampling.cache import CACHE_POLICIES, device_cache_ids
 from repro.core.sampling.distributed import CommStats, feature_fetch_bytes
-from repro.core.sampling.partition_batch import partition_targets
+from repro.core.sampling.partition_batch import (
+    p2p_frontier_halo_cap,
+    partition_targets,
+)
 from repro.core.sampling.samplers import (
     MiniBatch,
     frontier_caps,
@@ -80,6 +108,7 @@ from repro.kernels.ell_spmm import ell_spmm
 EXECUTION_MODELS = ("broadcast", "ring", "p2p")
 PROTOCOLS = ("sync", "epoch_fixed", "epoch_adaptive", "variation")
 BATCHING_MODES = ("full_graph", "node_wise", "layer_wise", "subgraph")
+PARTITION_FAMILIES = ("edge_cut", "vertex_cut")
 ENGINE_CACHE_POLICIES = ("none",) + tuple(CACHE_POLICIES)
 
 
@@ -87,7 +116,9 @@ ENGINE_CACHE_POLICIES = ("none",) + tuple(CACHE_POLICIES)
 class EngineConfig:
     execution: str = "p2p"  # broadcast | ring | p2p
     protocol: str = "sync"  # sync | epoch_fixed | epoch_adaptive | variation
-    partitioner: str = "metis_like"  # any key of PARTITIONERS
+    partition_family: str = "edge_cut"  # edge_cut | vertex_cut
+    partitioner: str = "metis_like"  # edge_cut: any key of PARTITIONERS
+    vertex_cut: str = "cartesian2d"  # vertex_cut: any key of VERTEX_CUTS
     batching: str = "full_graph"  # full_graph | node_wise | layer_wise | subgraph
     batch_size: int = 16  # per-device targets (node/layer-wise) or walk roots
     fanouts: Tuple[int, ...] = (4, 4)  # node_wise; len == num_layers
@@ -127,6 +158,21 @@ class DistGNNEngine:
             raise ValueError(
                 "mini-batch training supports protocol='sync' only: the "
                 "historical-embedding protocols are full-graph state")
+        if cfg.partition_family not in PARTITION_FAMILIES:
+            raise ValueError(
+                f"partition_family must be one of {PARTITION_FAMILIES}")
+        if cfg.partition_family == "vertex_cut":
+            if cfg.vertex_cut not in VERTEX_CUTS:
+                raise ValueError(
+                    f"vertex_cut must be one of {tuple(VERTEX_CUTS)}")
+            if cfg.batching != "full_graph":
+                raise ValueError(
+                    "vertex_cut supports batching='full_graph' only "
+                    "(vertex-cut mini-batch sampling is a ROADMAP follow-up)")
+            if partition is not None:
+                raise ValueError(
+                    "partition= is an edge-cut Partition; vertex_cut builds "
+                    "its own cut from cfg.vertex_cut")
         if mesh is None:
             mesh = jax.make_mesh((len(jax.devices()),), ("w",))
         if len(mesh.axis_names) != 1:
@@ -138,12 +184,21 @@ class DistGNNEngine:
         self.g = g
         self.interpret = (interpret_default() if cfg.interpret is None
                           else cfg.interpret)
-        self.part = partition or PARTITIONERS[cfg.partitioner](g, self.k)
-        self._build_layout()
-        self._build_exchange_plan()
+        if cfg.partition_family == "vertex_cut":
+            self._build_vertex_cut_layout()
+        else:
+            self.part = partition or PARTITIONERS[cfg.partitioner](g, self.k)
+            self._build_layout()
+            self._build_exchange_plan()
         num_classes = int(g.labels.max()) + 1
         self.dims = ([g.features.shape[1]]
                      + [cfg.hidden] * (cfg.num_layers - 1) + [num_classes])
+        if cfg.partition_family == "vertex_cut":
+            # wire bytes of one distributed step: every layer's replica sync
+            # ships `rows_per_layer` rows at that layer's input width — the
+            # same accounting as cost_models.replica_sync_bytes_per_step
+            self._vc_bytes_per_step = (self._vc_rows_per_layer
+                                       * int(sum(self.dims[:-1])) * FEAT_BYTES)
         self._step = None
         self._ref_step = None
         self._mb_step = None
@@ -281,19 +336,59 @@ class DistGNNEngine:
             ids_remap[rows] = out
         self.ids_exec = jnp.asarray(ids_remap)
 
+    def _build_vertex_cut_layout(self):
+        """Vertex-cut family: build the cut, the static replica layout, and
+        the replica-sync exchange plan.  The flattened replica space
+        [Vp = k*nv] plays the role the padded vertex space [k*nb] plays for
+        edge-cut, so state/loss/metrics code is family-agnostic."""
+        c, g, k = self.cfg, self.g, self.k
+        self.vcut = VERTEX_CUTS[c.vertex_cut](g, k, seed=c.seed)
+        lay = self.layout = build_vertex_layout(g, self.vcut, k)
+        self.nb = self.nv = nv = lay.nv  # nb: per-device padded rows (slots)
+        self.Vp = Vp = k * nv
+        self.K = lay.Kc
+        D = g.features.shape[1]
+        self.X = jnp.asarray(lay.X.reshape(Vp, D))
+        self.y = jnp.asarray(lay.y.reshape(Vp))
+        self.train_w = jnp.asarray(lay.train_w.reshape(Vp))
+        self.test_w = jnp.asarray(lay.test_w.reshape(Vp))
+        self.deg = jnp.asarray(lay.deg.reshape(Vp, 1))
+        self.bmask = jnp.asarray(lay.bmask.reshape(Vp))
+        self.mask = jnp.asarray(lay.mask_owned.reshape(Vp, lay.Kc))
+        self.ids_exec = jnp.asarray(lay.ids_owned.reshape(Vp, lay.Kc))
+        # reference-step ELL in the flattened replica space: local slot ->
+        # global flat slot d*nv + slot; pads -> Vp (the appended zero row),
+        # the same pad convention as the edge-cut ids_global table
+        flat_off = (np.arange(k) * nv)[:, None, None]
+        self.ids_global = np.where(lay.mask_owned > 0,
+                                   lay.ids_owned + flat_off, Vp
+                                   ).reshape(Vp, lay.Kc).astype(np.int64)
+        plan = build_replica_sync_plan(lay, self.vcut.masters, c.execution)
+        plan.pop("execution")
+        self._vc_rows_per_layer = plan.pop("rows_per_layer")
+        self._vc_plan = {}
+        slot_tables = ("rep_ids", "rep_mask", "gather_ids", "gather_mask",
+                       "scatter_ids")  # [k, nv, ...] -> flatten like X/y/...
+        for key, a in plan.items():
+            if key in slot_tables:
+                a = a.reshape((Vp,) + a.shape[2:])
+            self._vc_plan[key] = jnp.asarray(a)
+
     # ------------------------------------------------------------------
     # shared layer math
     # ------------------------------------------------------------------
 
-    def _aggregate(self, ids, mask, table, deg):
-        """agg[v] = (sum_k mask[v,k] * table[ids[v,k]]) / deg[v]; the local
-        multiply is the Pallas ELL kernel (or its jnp oracle)."""
+    def _ell(self, ids, mask, table):
+        """sum_k mask[v,k] * table[ids[v,k]] — the Pallas ELL kernel (or its
+        jnp oracle): the local multiply AND the replica-combine reduction."""
         if self.cfg.use_pallas:
-            out = ell_spmm(ids, mask, table, normalize=False,
-                           interpret=self.interpret)
-        else:
-            out = (mask[..., None] * jnp.take(table, ids, axis=0)).sum(1)
-        return out / deg
+            return ell_spmm(ids, mask, table, normalize=False,
+                            interpret=self.interpret)
+        return (mask[..., None] * jnp.take(table, ids, axis=0)).sum(1)
+
+    def _aggregate(self, ids, mask, table, deg):
+        """agg[v] = (sum_k mask[v,k] * table[ids[v,k]]) / deg[v]"""
+        return self._ell(ids, mask, table) / deg
 
     @staticmethod
     def _layer(p_l, agg, h_self, last: bool):
@@ -319,7 +414,20 @@ class DistGNNEngine:
                        for d in self.dims[1:]),
             age=jnp.zeros((L, self.k), jnp.int32),
         )
-        return state
+        # Pre-place with the step's output shardings so feeding the state
+        # back in reuses the ONE compiled executable (same contract as
+        # init_minibatch_state; enforced by the vertex-cut recompile guard).
+        from jax.sharding import NamedSharding
+        ax = self.axis
+        rep = NamedSharding(self.mesh, P())
+        shardings = dict(
+            params=jax.tree_util.tree_map(lambda _: rep, params),
+            step=rep,
+            hist=tuple(NamedSharding(self.mesh, P(ax))  # == P(ax, None), but
+                       for _ in range(L)),  # spelled how the step emits it
+            age=NamedSharding(self.mesh, P(None, ax)),
+        )
+        return jax.device_put(state, shardings)
 
     # ------------------------------------------------------------------
     # distributed step
@@ -331,6 +439,15 @@ class DistGNNEngine:
         ax, k, nb = self.axis, self.k, self.nb
         ids, mask, deg = (consts_local["ids"], consts_local["mask"],
                           consts_local["deg"])
+        if self.cfg.partition_family == "vertex_cut":
+            # partial aggregation over OWNED edges (replica-slot space), then
+            # replica-sync combine, then global-degree normalize
+            table = jnp.concatenate(
+                [h_local, jnp.zeros((1, h_local.shape[1]), h_local.dtype)], 0)
+            partial = self._ell(ids, mask, table)
+            agg = replica_combine(self.cfg.execution, partial, consts_local,
+                                  axis=ax, k=k, ell_fn=self._ell)
+            return agg / deg
         if self.cfg.execution == "broadcast":
             h_full = jax.lax.all_gather(h_local, ax, axis=0, tiled=True)
             table = jnp.concatenate(
@@ -402,7 +519,11 @@ class DistGNNEngine:
                       deg=self.deg, ids=self.ids_exec, mask=self.mask)
         shard = dict(X=P(ax, None), y=P(ax), w=P(ax), bmask=P(ax),
                      deg=P(ax, None), ids=P(ax, None), mask=P(ax, None))
-        if c.execution == "ring":
+        if c.partition_family == "vertex_cut":
+            for key, a in self._vc_plan.items():
+                consts[key] = a
+                shard[key] = P(*((ax,) + (None,) * (a.ndim - 1)))
+        elif c.execution == "ring":
             consts["mask"] = self.mask_exec
             shard["ids"] = P(ax, None, None, None)
             shard["mask"] = P(ax, None, None, None)
@@ -419,10 +540,14 @@ class DistGNNEngine:
             hist, age = state["hist"], state["age"]
             # squeeze the device axis off ring/p2p plans
             cl = dict(consts_local)
-            if c.execution in ("ring",):
+            if c.partition_family == "vertex_cut":
+                for key in ("send1", "send2", "ring_ids"):
+                    if key in cl:
+                        cl[key] = cl[key][0]
+            elif c.execution == "ring":
                 cl["ids"] = cl["ids"][0]
                 cl["mask"] = cl["mask"][0]
-            if c.execution == "p2p":
+            elif c.execution == "p2p":
                 cl["send_rows"] = cl["send_rows"][0]
             age_l = [age[l] for l in range(L)]
 
@@ -485,8 +610,9 @@ class DistGNNEngine:
     # ------------------------------------------------------------------
 
     def make_reference_step(self):
-        """Identical math on one device: global ELL gather + the same
-        block_refresh vmapped over the k blocks."""
+        """Identical math on one device: global ELL gather (for vertex_cut:
+        per-replica partials + a scatter-add combine over the global vertex
+        space) + the same block_refresh vmapped over the k blocks."""
         if self._ref_step is not None:
             return self._ref_step
         c = self.cfg
@@ -495,6 +621,10 @@ class DistGNNEngine:
         ids_g = jnp.asarray(self.ids_global.astype(np.int32))
         mask, deg = self.mask, self.deg
         X, y, w, bmask = self.X, self.y, self.train_w, self.bmask
+        if c.partition_family == "vertex_cut":
+            vert_ids_ref = jnp.asarray(
+                self.layout.vert_ids.astype(np.int32))  # [k, nv], pad = V
+            Vg = self.g.num_vertices
 
         def forward(params, hist, age, step_i):
             H = X
@@ -505,6 +635,10 @@ class DistGNNEngine:
                     [H, jnp.zeros((1, H.shape[1]), H.dtype)], 0)
                 gathered = (mask[..., None] * jnp.take(table, ids_g, axis=0)
                             ).sum(1)
+                if c.partition_family == "vertex_cut":
+                    gathered = reference_combine(
+                        gathered.reshape(k, nb, -1), vert_ids_ref, Vg
+                    ).reshape(Vp, -1)
                 agg = gathered / deg
                 H = self._layer(p_l, agg, H, last=(l == L - 1))
                 if c.protocol != "sync":
@@ -563,7 +697,15 @@ class DistGNNEngine:
             c.batching, L, c.batch_size, fanouts=c.fanouts,
             layer_sizes=c.layer_sizes, walk_length=c.walk_length,
             num_vertices=g.num_vertices)
-        self.fcap = self.caps[0]  # p2p halo slots per (dst, src) pair
+        # p2p halo slots per (dst, src) pair: bounded by the MEASURED halo —
+        # the largest single-owner share of any destination's hops-hop
+        # in-neighborhood — instead of the worst case caps[0] (every frontier
+        # row remote from one owner), which blows the all_to_all buffer up by
+        # orders of magnitude at scale (ROADMAP follow-up from PR 2)
+        self.fcap = self.caps[0]
+        if c.execution == "p2p":
+            hops = c.walk_length if c.batching == "subgraph" else c.num_layers
+            self.fcap = p2p_frontier_halo_cap(g, self.part, hops, self.caps[0])
         D = g.features.shape[1]
         self.Ccap = Ccap = max(int(c.cache_capacity), 1)
         cache_tab = np.zeros((k, Ccap, D), np.float32)
@@ -667,6 +809,9 @@ class DistGNNEngine:
             if c.execution == "p2p":
                 for s in range(k):
                     if s != d and need[s]:
+                        assert len(need[s]) <= fcap, (
+                            f"p2p halo cap overflow: device {d} needs "
+                            f"{len(need[s])} rows from {s}, fcap={fcap}")
                         send_rows[s, d, : len(need[s])] = list(need[s])
             feature_fetch_bytes(self.part, d, mb.layer_vertices[0], D,
                                 cached_ids=self._cache_set[d],
@@ -906,11 +1051,15 @@ class DistGNNEngine:
             return losses, logits
         step = self.make_reference_step() if reference else self.make_step()
         state = self.init_state()
+        if self.cfg.partition_family == "vertex_cut" and not reference:
+            self.comm_stats = CommStats()
         losses = []
         logits = None
         for _ in range(epochs):
             state, metrics, logits = step(state)
             losses.append(float(metrics["loss"]))
+            if self.cfg.partition_family == "vertex_cut" and not reference:
+                self.comm_stats.replica_sync_bytes += self._vc_bytes_per_step
         return losses, logits
 
     def accuracy(self, logits, split: str = "test") -> float:

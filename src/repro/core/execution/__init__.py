@@ -3,6 +3,12 @@ from repro.core.execution.chunk import (
     parallel_chunk_aggregate,
     sequential_chunk_aggregate,
 )
+from repro.core.execution.replica_sync import (
+    REPLICA_EXECUTIONS,
+    build_replica_sync_plan,
+    reference_combine,
+    replica_combine,
+)
 from repro.core.execution.minibatch_pipeline import (
     SCHEDULES,
     PullPushPlan,

@@ -1,0 +1,227 @@
+"""Replica-sync exchange for vertex-cut execution (survey §4.2 + §7): the
+Gather-ApplyEdge-Scatter dataflow over replicated vertices.
+
+Each device computes PARTIAL aggregations over its owned edges (a local ELL
+multiply in replica-slot space); this module combines those partials across
+every replica of a vertex so all replicas see the full neighbor sum.  Three
+collective families mirror the engine's edge-cut exchange axis:
+
+  broadcast  all_gather every device's partial block; each device sums its
+             slots' replicas out of the gathered table (CAGNET-style).
+  ring       ppermute the partial blocks around the ring; each device
+             accumulates the visiting block's contribution to its own slots.
+  p2p        master-based two-phase GAS: replicas ship partials to each
+             vertex's MASTER (all_to_all #1), the master combines, then
+             scatters the finished aggregate back to the replicas
+             (all_to_all #2) — only 2·Σ(r(v)−1) rows cross the wire per
+             layer, the replication-factor-bounded volume that makes
+             vertex-cut win on skewed graphs.
+
+All plans are static numpy tables built once from a VertexCutLayout; the
+device-side `replica_combine` is pure traced code (collectives + gathers)
+with well-defined transposes, so gradients flow through the exchange and the
+master-masked loss gives exact weight gradients after the engine's psum.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition.vertex_layout import VertexCutLayout
+
+REPLICA_EXECUTIONS = ("broadcast", "ring", "p2p")
+
+
+def _vertex_replica_tables(lay: VertexCutLayout):
+    """Per-vertex replica tables: rep_flat[v, r] = flat slot (d*nv + slot) of
+    v's r-th replica (pad k*nv), rep_part[v, r] = its device (pad -1).
+    Replicas are ordered by device id — deterministic."""
+    k, nv = lay.k, lay.nv
+    V = lay.slot_of.shape[1]
+    parts, verts = np.nonzero(lay.slot_of >= 0)
+    order = np.argsort(verts, kind="stable")
+    v_s, p_s = verts[order], parts[order]
+    flat = p_s * nv + lay.slot_of[p_s, v_s]
+    newv = np.r_[0, (np.diff(v_s) != 0).astype(np.int64)]
+    first = np.r_[0, np.flatnonzero(np.diff(v_s)) + 1]
+    pos = np.arange(len(v_s)) - first[np.cumsum(newv)]
+    rep_flat = np.full((V, lay.Rm), k * nv, np.int64)
+    rep_part = np.full((V, lay.Rm), -1, np.int64)
+    rep_flat[v_s, pos] = flat
+    rep_part[v_s, pos] = p_s
+    return rep_flat, rep_part
+
+
+def build_replica_sync_plan(lay: VertexCutLayout, masters: np.ndarray,
+                            execution: str) -> Dict:
+    """Static exchange plan for one collective family.  Every returned dict
+    carries ``rows_per_layer``: the TRUE number of replica rows that cross
+    the wire per GNN layer (padding excluded) — the engine's CommStats
+    accounting and the standalone cost model must both reproduce it."""
+    if execution not in REPLICA_EXECUTIONS:
+        raise ValueError(f"execution must be one of {REPLICA_EXECUTIONS}")
+    k, nv, Rm = lay.k, lay.nv, lay.Rm
+    V = lay.slot_of.shape[1]
+    vert_ids = lay.vert_ids
+    rep_flat, rep_part = _vertex_replica_tables(lay)
+    if execution == "broadcast":
+        pad_row = np.full((1, Rm), k * nv, np.int64)
+        rep_ids = np.concatenate([rep_flat, pad_row], 0)[vert_ids]
+        return dict(execution=execution,
+                    rep_ids=rep_ids.astype(np.int32),
+                    rep_mask=(rep_ids < k * nv).astype(np.float32),
+                    rows_per_layer=k * (k - 1) * nv)
+    if execution == "ring":
+        slot_ext = np.concatenate(
+            [lay.slot_of, np.full((k, 1), -1, np.int64)], 1)  # col V = pad
+        tmp = slot_ext[:, vert_ids.reshape(-1)].reshape(k, k, nv)
+        ring_ids = np.where(tmp < 0, nv, tmp).transpose(1, 0, 2)
+        return dict(execution=execution,
+                    ring_ids=ring_ids.astype(np.int32),
+                    rows_per_layer=k * (k - 1) * nv)
+    # p2p: master-based two-phase GAS
+    m_of = masters.astype(np.int64)
+    # phase 1 (gather): src s ships partial rows of its non-master replicas
+    # to each vertex's master.  pos1[s, v] = position of v in need1[s][m(v)].
+    need1 = [[np.zeros(0, np.int64) for _ in range(k)] for _ in range(k)]
+    pos1 = np.full((k, V), -1, np.int64)
+    rows1 = 0
+    for s in range(k):
+        pres = vert_ids[s] < V
+        vs = vert_ids[s][pres]
+        sl = np.flatnonzero(pres)
+        m = m_of[vs]
+        rem = m != s
+        for mm in np.unique(m[rem]):
+            sel = rem & (m == mm)
+            need1[s][mm] = sl[sel]
+            pos1[s, vs[sel]] = np.arange(int(sel.sum()))
+            rows1 += int(sel.sum())
+    c1 = max(1, max((len(x) for row in need1 for x in row), default=1))
+    send1 = np.zeros((k, k, c1), np.int32)
+    for s in range(k):
+        for d in range(k):
+            send1[s, d, : len(need1[s][d])] = need1[s][d]
+    pad1 = nv + k * c1
+    gather_ids = np.full((k, nv, Rm), pad1, np.int32)
+    gather_mask = np.zeros((k, nv, Rm), np.float32)
+    for d in range(k):
+        pres = vert_ids[d] < V
+        vs = vert_ids[d][pres]
+        slots = np.flatnonzero(pres)
+        own = m_of[vs] == d
+        mv, msl = vs[own], slots[own]
+        for r in range(Rm):
+            s = rep_part[mv, r]
+            valid = s >= 0
+            ssafe = np.clip(s, 0, k - 1)
+            idx = np.where(s == d, msl, nv + ssafe * c1 + pos1[ssafe, mv])
+            gather_ids[d, msl[valid], r] = idx[valid]
+            gather_mask[d, msl[valid], r] = 1.0
+    # phase 2 (scatter): each master ships the finished aggregate back to the
+    # other replicas.  pos2[dst, v] = position of v in need2[m(v)][dst].
+    need2 = [[np.zeros(0, np.int64) for _ in range(k)] for _ in range(k)]
+    pos2 = np.full((k, V), -1, np.int64)
+    rows2 = 0
+    for m in range(k):
+        pres = vert_ids[m] < V
+        vs = vert_ids[m][pres]
+        slots = np.flatnonzero(pres)
+        own = m_of[vs] == m
+        mv, msl = vs[own], slots[own]
+        dsts, slts, vss = [], [], []
+        for r in range(Rm):
+            s = rep_part[mv, r]
+            valid = (s >= 0) & (s != m)
+            dsts.append(s[valid])
+            slts.append(msl[valid])
+            vss.append(mv[valid])
+        dsts = np.concatenate(dsts) if dsts else np.zeros(0, np.int64)
+        slts = np.concatenate(slts) if slts else np.zeros(0, np.int64)
+        vss = np.concatenate(vss) if vss else np.zeros(0, np.int64)
+        order = np.lexsort((slts, dsts))
+        dsts, slts, vss = dsts[order], slts[order], vss[order]
+        for dd in np.unique(dsts):
+            sel = dsts == dd
+            need2[m][dd] = slts[sel]
+            pos2[dd, vss[sel]] = np.arange(int(sel.sum()))
+            rows2 += int(sel.sum())
+    c2 = max(1, max((len(x) for row in need2 for x in row), default=1))
+    send2 = np.zeros((k, k, c2), np.int32)
+    for m in range(k):
+        for d in range(k):
+            send2[m, d, : len(need2[m][d])] = need2[m][d]
+    pad2 = nv + k * c2
+    scatter_ids = np.full((k, nv), pad2, np.int32)
+    for d in range(k):
+        pres = vert_ids[d] < V
+        vs = vert_ids[d][pres]
+        slots = np.flatnonzero(pres)
+        m = m_of[vs]
+        own = m == d
+        scatter_ids[d, slots[own]] = slots[own]
+        rem = ~own
+        scatter_ids[d, slots[rem]] = (nv + m[rem] * c2
+                                      + pos2[d, vs[rem]]).astype(np.int32)
+    return dict(execution=execution, send1=send1, gather_ids=gather_ids,
+                gather_mask=gather_mask, send2=send2,
+                scatter_ids=scatter_ids, rows_per_layer=rows1 + rows2)
+
+
+def replica_combine(execution: str, partial: jnp.ndarray, plan: Dict, *,
+                    axis: str, k: int, ell_fn: Callable) -> jnp.ndarray:
+    """Device-local (under shard_map) replica combine: partial [nv, D] ->
+    full per-slot neighbor sums [nv, D].  ``plan`` holds this device's slice
+    of the static tables; ``ell_fn(ids, mask, table)`` is the masked-gather
+    reduction (the engine passes its Pallas ELL kernel)."""
+    D = partial.shape[1]
+    zero = jnp.zeros((1, D), partial.dtype)
+    if execution == "broadcast":
+        full = jax.lax.all_gather(partial, axis, axis=0, tiled=True)
+        table = jnp.concatenate([full, zero], 0)
+        return ell_fn(plan["rep_ids"], plan["rep_mask"], table)
+    if execution == "ring":
+        me = jax.lax.axis_index(axis)
+
+        def ring_step(carry, r):
+            acc, h_cur = carry
+            # permute FIRST, then accumulate: exactly k-1 ppermute rounds,
+            # matching the plan's rows_per_layer = k*(k-1)*nv wire accounting
+            h_cur = jax.lax.ppermute(
+                h_cur, axis, [(i, (i - 1) % k) for i in range(k)])
+            owner = (me + r) % k
+            ids_r = jnp.take(plan["ring_ids"], owner, axis=0)  # [nv]
+            table = jnp.concatenate([h_cur, zero], 0)
+            acc = acc + jnp.take(table, ids_r, axis=0)
+            return (acc, h_cur), None
+
+        table0 = jnp.concatenate([partial, zero], 0)
+        acc0 = jnp.take(table0, jnp.take(plan["ring_ids"], me, axis=0), axis=0)
+        (acc, _), _ = jax.lax.scan(ring_step, (acc0, partial),
+                                   jnp.arange(1, k))
+        return acc
+    # p2p: gather partials at masters, combine, scatter aggregates back
+    c1 = plan["send1"].shape[-1]
+    c2 = plan["send2"].shape[-1]
+    send = partial[plan["send1"].reshape(-1)].reshape(k, c1, D)
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    table = jnp.concatenate([partial, recv.reshape(k * c1, D), zero], 0)
+    agg_m = ell_fn(plan["gather_ids"], plan["gather_mask"], table)
+    send_b = agg_m[plan["send2"].reshape(-1)].reshape(k, c2, D)
+    recv_b = jax.lax.all_to_all(send_b, axis, split_axis=0, concat_axis=0)
+    table2 = jnp.concatenate([agg_m, recv_b.reshape(k * c2, D), zero], 0)
+    return jnp.take(table2, plan["scatter_ids"], axis=0)
+
+
+def reference_combine(partial: jnp.ndarray, vert_ids: jnp.ndarray,
+                      num_vertices: int) -> jnp.ndarray:
+    """Single-device oracle combine: scatter-add every replica's partial into
+    the global vertex space and gather back per slot — the same sum any of
+    the three collectives computes, without a wire.  partial [k, nv, D]."""
+    D = partial.shape[-1]
+    G = jnp.zeros((num_vertices + 1, D), partial.dtype).at[
+        vert_ids.reshape(-1)].add(partial.reshape(-1, D))
+    return jnp.take(G, vert_ids, axis=0)  # pad slots read G[V] = 0

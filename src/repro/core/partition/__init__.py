@@ -3,8 +3,10 @@ from repro.core.partition.cost_models import (
     RocCostModel,
     bgl_score,
     bytegnn_score,
+    edge_cut_halo_bytes_per_step,
     flexgraph_cost,
     pagraph_score,
+    replica_sync_bytes_per_step,
 )
 from repro.core.partition.edge_cut import (
     PARTITIONERS,
@@ -25,8 +27,15 @@ from repro.core.partition.feature_partition import (
     twod_partition,
 )
 from repro.core.partition.vertex_cut import (
+    VERTEX_CUTS,
     VertexCut,
     cartesian_2d_vertex_cut,
+    edge_endpoints,
+    grid_for,
     libra_vertex_cut,
     random_vertex_cut,
+)
+from repro.core.partition.vertex_layout import (
+    VertexCutLayout,
+    build_vertex_layout,
 )

@@ -58,6 +58,88 @@ def bytegnn_score(cross_edges: np.ndarray, part_sizes: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Partition-family communication models (§4.2): edge-cut halo volume vs
+# vertex-cut replica-sync volume, per training step.  These are the standalone
+# models the DistGNNEngine's CommStats accounting is cross-checked against.
+# ---------------------------------------------------------------------------
+
+FEAT_BYTES = 4
+
+
+def replica_sync_bytes_per_step(rep_counts: np.ndarray, k: int, nv: int,
+                                execution: str, dims: Sequence[int],
+                                feat_bytes: int = FEAT_BYTES) -> int:
+    """Replication-factor-aware wire bytes of one vertex-cut train step.
+
+    ``rep_counts`` [V] = replicas per vertex (incl. the forced master — see
+    VertexCutLayout); ``dims`` = the GNN layer dims ([D_in, hidden..., C]):
+    every layer's exchange ships rows of that layer's INPUT width, so one
+    replica row crosses the wire at sum(dims[:-1]) floats per step.
+
+      broadcast / ring  every device ships its whole nv-slot partial block to
+                        the other k-1 devices per layer;
+      p2p               master-based GAS: each non-master replica sends one
+                        partial row and receives one aggregate row per layer
+                        -> 2 * Σ_v (r(v) - 1) rows, bounded by the
+                        replication factor rather than the halo size.
+    """
+    if execution in ("broadcast", "ring"):
+        rows = k * (k - 1) * nv
+    elif execution == "p2p":
+        rows = 2 * int(np.maximum(np.asarray(rep_counts) - 1, 0).sum())
+    else:
+        raise ValueError(f"unknown execution {execution!r}")
+    return rows * int(sum(dims[:-1])) * feat_bytes
+
+
+def edge_cut_halo_bytes_per_step(g: Graph, part, dims: Sequence[int],
+                                 feat_bytes: int = FEAT_BYTES) -> int:
+    """Edge-cut p2p halo volume of one train step: every layer ships each
+    partition's remote in-neighbor set (`Partition.boundary_vertices`) once,
+    at that layer's input width."""
+    return part.communication_volume(g) * int(sum(dims[:-1])) * feat_bytes
+
+
+def edge_cut_halo_device_bytes(g: Graph, part, dims: Sequence[int],
+                               feat_bytes: int = FEAT_BYTES) -> np.ndarray:
+    """[k] per-device halo bytes per step, counting BOTH directions (a row's
+    owner sends it, its consumer receives it) — the max of this array is the
+    critical-path (straggler) comm volume that sets the step time.  On skewed
+    graphs a hub's owner ships its row to up to k-1 consumers, which is
+    exactly the bottleneck vertex-cut's bounded replication removes."""
+    from repro.core.partition.vertex_cut import edge_endpoints
+
+    src, dst = edge_endpoints(g)
+    a = part.assignment.astype(np.int64)
+    k = part.num_parts
+    pairs = np.unique(src * k + a[dst])  # distinct (vertex, consumer) pairs
+    pv, pc = pairs // k, pairs % k
+    rem = a[pv] != pc
+    send = np.bincount(a[pv][rem], minlength=k)
+    recv = np.bincount(pc[rem], minlength=k)
+    return (send + recv) * int(sum(dims[:-1])) * feat_bytes
+
+
+def replica_sync_device_bytes(layout, masters: np.ndarray,
+                              dims: Sequence[int],
+                              feat_bytes: int = FEAT_BYTES) -> np.ndarray:
+    """[k] per-device replica-sync bytes per step (p2p GAS accounting),
+    counting both directions like `edge_cut_halo_device_bytes`: a non-master
+    replica slot sends one partial and receives one aggregate per layer; a
+    master does the mirror image for every other replica of the vertices it
+    masters.  Bounded per device by the replication factor — no hub-owner
+    straggler."""
+    V = layout.slot_of.shape[1]
+    nonmaster = ((layout.vert_ids < V)
+                 & (layout.master_mask < 0.5)).sum(1).astype(np.int64)
+    rm1 = np.maximum(layout.rep_count - 1, 0)
+    master_traffic = np.bincount(np.asarray(masters, np.int64), weights=rm1,
+                                 minlength=layout.k).astype(np.int64)
+    return (2 * (nonmaster + master_traffic)
+            * int(sum(dims[:-1])) * feat_bytes)
+
+
+# ---------------------------------------------------------------------------
 # Learning-based (ROC): t(l, G) = sum_i w_i x_i(G)
 # ---------------------------------------------------------------------------
 

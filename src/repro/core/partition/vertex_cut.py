@@ -1,14 +1,27 @@
 """Vertex-cut partitioning (survey §2, §4.2): edges are partitioned; vertices
-replicate. Includes the 2D Cartesian vertex-cut used by CAGNET/DeepGalois.
+replicate. Includes the 2D Cartesian vertex-cut used by CAGNET/DeepGalois and
+a balance-capped Libra/PowerGraph greedy.
+
+Edge order convention: edges are numbered in CSR order — ``for v in
+range(V): for u in g.neighbors(v)`` — i.e. edge ``e`` has destination
+``repeat(arange(V), deg)[e]`` and source ``g.indices[e]``.  Every function
+here (and the replica layout built on top in ``vertex_layout.py``) relies on
+that ordering.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 
 from repro.core.graph import Graph
+
+
+def edge_endpoints(g: Graph) -> Tuple[np.ndarray, np.ndarray]:
+    """(src, dst) arrays in CSR edge order (see module docstring)."""
+    dst = np.repeat(np.arange(g.num_vertices, dtype=np.int64), g.degree())
+    return g.indices.astype(np.int64), dst
 
 
 @dataclasses.dataclass
@@ -17,19 +30,42 @@ class VertexCut:
     num_parts: int
     masters: np.ndarray  # [V] master partition per vertex
 
+    def replica_counts(self, g: Graph, include_masters: bool = False
+                       ) -> np.ndarray:
+        """[V] number of partitions in which each vertex appears (as an
+        endpoint of an owned edge; with ``include_masters`` also counting the
+        forced master replica the execution layout materializes)."""
+        V = g.num_vertices
+        src, dst = edge_endpoints(g)
+        owner = self.edge_owner.astype(np.int64)
+        keys = [owner * V + dst, owner * V + src]
+        if include_masters:
+            keys.append(self.masters.astype(np.int64) * V
+                        + np.arange(V, dtype=np.int64))
+        uniq = np.unique(np.concatenate(keys)) if len(owner) or include_masters \
+            else np.zeros(0, np.int64)
+        return np.bincount(uniq % V, minlength=V)
+
     def replication_factor(self, g: Graph) -> float:
         """Mean number of partitions in which a vertex appears."""
-        V = g.num_vertices
-        present = np.zeros((self.num_parts, V), bool)
-        e = 0
-        for v in range(V):
-            for u in g.neighbors(v):
-                p = self.edge_owner[e]
-                present[p, v] = True
-                present[p, u] = True
-                e += 1
-        appears = present.sum(0)
+        appears = self.replica_counts(g)
         return float(appears[appears > 0].mean()) if (appears > 0).any() else 0.0
+
+
+def _replication_factor_loop(vc: VertexCut, g: Graph) -> float:
+    """O(V·deg) Python-loop reference for ``replication_factor`` — kept as the
+    oracle the vectorized version is cross-checked against in tests."""
+    V = g.num_vertices
+    present = np.zeros((vc.num_parts, V), bool)
+    e = 0
+    for v in range(V):
+        for u in g.neighbors(v):
+            p = vc.edge_owner[e]
+            present[p, v] = True
+            present[p, u] = True
+            e += 1
+    appears = present.sum(0)
+    return float(appears[appears > 0].mean()) if (appears > 0).any() else 0.0
 
 
 def random_vertex_cut(g: Graph, k: int, seed: int = 0) -> VertexCut:
@@ -41,42 +77,86 @@ def random_vertex_cut(g: Graph, k: int, seed: int = 0) -> VertexCut:
 
 def cartesian_2d_vertex_cut(g: Graph, rows: int, cols: int, seed: int = 0) -> VertexCut:
     """2D Cartesian: edge (u->v) owned by grid block (row(u), col(v)) — each
-    vertex replicates across at most rows+cols-1 partitions (Hoang et al.)."""
+    vertex replicates across at most rows+cols-1 partitions (Hoang et al.);
+    the master block (row(v), col(v)) sits in that same row/col cross."""
     rng = np.random.default_rng(seed)
     row_of = rng.integers(0, rows, g.num_vertices)
     col_of = rng.integers(0, cols, g.num_vertices)
-    owner = np.zeros(g.num_edges, np.int32)
-    e = 0
-    for v in range(g.num_vertices):
-        for u in g.neighbors(v):
-            owner[e] = row_of[u] * cols + col_of[v]
-            e += 1
+    src, dst = edge_endpoints(g)
+    owner = (row_of[src] * cols + col_of[dst]).astype(np.int32)
     masters = (row_of * cols + col_of).astype(np.int32)
     return VertexCut(owner, rows * cols, masters)
 
 
-def libra_vertex_cut(g: Graph, k: int, seed: int = 0) -> VertexCut:
-    """Degree-aware greedy vertex-cut (Libra/PowerGraph-style): assign each
-    edge to the least-loaded partition among those already holding one of its
-    endpoints (reduces replication of low-degree vertices)."""
+def libra_vertex_cut(g: Graph, k: int, seed: int = 0,
+                     slack: float = 1.15) -> VertexCut:
+    """Degree-aware greedy vertex-cut (Libra/PowerGraph/HDRF-style).  Per
+    edge, in order: a partition already holding BOTH endpoints (no new
+    replica), else one holding the LOWER-degree endpoint (HDRF rule:
+    replicate the hub, keep the tail vertex local), else one holding either,
+    else the globally least-loaded — always min-load within the chosen tier.
+    Candidates at or above the balance cap ``slack * E / k`` are skipped,
+    which bounds the owned-edge load: max_load <= slack * E / k + 1 (the
+    fallback is the globally least-loaded partition, whose load is <= mean
+    <= cap)."""
+    V = g.num_vertices
+    deg = g.degree() + g.out_degree()  # total degree: the HDRF tie-break
     loads = np.zeros(k, np.int64)
-    holds: List[set] = [set() for _ in range(k)]
+    holds = np.zeros((k, V), bool)
+    cap = max(slack * g.num_edges / k, 1.0)
     owner = np.zeros(g.num_edges, np.int32)
+    big = np.iinfo(np.int64).max
     e = 0
-    for v in range(g.num_vertices):
+    for v in range(V):
         for u in g.neighbors(v):
-            cands = [i for i in range(k) if (u in holds[i]) or (v in holds[i])]
-            if cands:
-                i = min(cands, key=lambda i: loads[i])
+            under = loads < cap
+            hu, hv = holds[:, u] & under, holds[:, v] & under
+            both = hu & hv
+            if both.any():
+                cand = both
             else:
-                i = int(np.argmin(loads))
+                lo = hu if deg[u] <= deg[v] else hv  # replicate the hub
+                cand = lo if lo.any() else (hu | hv)
+            if cand.any():
+                i = int(np.where(cand, loads, big).argmin())
+            else:
+                i = int(loads.argmin())
             owner[e] = i
-            holds[i].add(int(u))
-            holds[i].add(int(v))
+            holds[i, u] = True
+            holds[i, v] = True
             loads[i] += 1
             e += 1
-    masters = np.zeros(g.num_vertices, np.int32)
-    for v in range(g.num_vertices):
-        cands = [i for i in range(k) if v in holds[i]]
-        masters[v] = cands[0] if cands else v % k
+    # masters: spread the replica-sync bottleneck — a master receives r(v)-1
+    # partials and sends r(v)-1 aggregates per layer, so hubs mastered on one
+    # partition would recreate the edge-cut hub-owner straggler.  Greedy:
+    # highest-replication vertices first, each to its least-traffic-loaded
+    # holding partition.
+    r = holds.sum(0)
+    masters = np.empty(V, np.int32)
+    traffic = np.zeros(k, np.int64)
+    for v in np.argsort(-r, kind="stable"):
+        hs = np.flatnonzero(holds[:, v])
+        if len(hs) == 0:
+            masters[v] = v % k
+            continue
+        i = hs[np.argmin(traffic[hs])]
+        masters[v] = i
+        traffic[i] += max(int(r[v]) - 1, 0)
     return VertexCut(owner, k, masters)
+
+
+def grid_for(k: int) -> Tuple[int, int]:
+    """rows x cols = k with rows the largest divisor <= sqrt(k) — the 2D
+    Cartesian grid the engine uses when only a device count is given."""
+    r = max(int(np.sqrt(k)), 1)
+    while k % r:
+        r -= 1
+    return r, k // r
+
+
+VERTEX_CUTS: Dict[str, Callable] = {
+    "random": random_vertex_cut,
+    "cartesian2d": lambda g, k, seed=0: cartesian_2d_vertex_cut(
+        g, *grid_for(k), seed=seed),
+    "libra": libra_vertex_cut,
+}

@@ -1,0 +1,115 @@
+"""Static padded device layout for vertex-cut execution (survey §4.2): the
+dual of the engine's edge-cut layout.  Edges are partitioned; every endpoint
+of a device's owned edges (plus each vertex's master replica) becomes a
+replica SLOT on that device, and the owned edges become a device-local ELL
+block whose columns index those slots.
+
+The layout is fully static: ``k`` devices each hold ``nv`` padded slots, so
+the flattened replica space ``[k * nv]`` plays exactly the role the padded
+vertex space ``[k * nb]`` plays for edge-cut — state (historical embeddings),
+labels/weights and the jitted shard_map step all shard its leading axis.
+
+Key invariants (relied on by ``execution/replica_sync.py`` and the engine):
+  * every vertex is present on its master partition (forced, even if the
+    master owns none of its edges) — so the loss over master slots covers
+    every train vertex exactly once, and the p2p scatter phase always has a
+    combining site;
+  * slots are sorted by global vertex id per device — layout is a pure
+    function of (graph, cut), so reruns are bitwise deterministic;
+  * pad slots (``vert_ids == V``) have no owned edges, zero features and
+    zero weights, and are never referenced by any gather table.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.partition.vertex_cut import VertexCut, edge_endpoints
+
+
+@dataclasses.dataclass
+class VertexCutLayout:
+    k: int    # devices / partitions
+    nv: int   # padded replica slots per device
+    Kc: int   # ELL width: max owned in-edges of any (device, dst slot)
+    Rm: int   # max replicas of any vertex (incl. the forced master)
+    vert_ids: np.ndarray    # [k, nv] int64 global vertex per slot, pad = V
+    slot_of: np.ndarray     # [k, V] int64 slot of vertex on device, -1 absent
+    master_mask: np.ndarray  # [k, nv] f32 — 1 on the master replica slot
+    rep_count: np.ndarray   # [V] replicas per vertex (incl. forced master)
+    ids_owned: np.ndarray   # [k, nv, Kc] int32 local src slot, pad = nv
+    mask_owned: np.ndarray  # [k, nv, Kc] f32
+    deg: np.ndarray         # [k, nv, 1] f32 GLOBAL in-degree (>= 1)
+    bmask: np.ndarray       # [k, nv] bool — replicated (rep_count > 1) slots
+    X: np.ndarray           # [k, nv, D] f32 replica features
+    y: np.ndarray           # [k, nv] int32
+    train_w: np.ndarray     # [k, nv] f32 — master & train only
+    test_w: np.ndarray      # [k, nv] f32 — master & test only
+
+    def replication_factor(self) -> float:
+        appears = self.rep_count
+        return float(appears[appears > 0].mean()) if (appears > 0).any() else 0.0
+
+
+def build_vertex_layout(g: Graph, vc: VertexCut, k: int) -> VertexCutLayout:
+    """Turn a VertexCut into the static padded device layout above."""
+    V = g.num_vertices
+    src, dst = edge_endpoints(g)
+    owner = vc.edge_owner.astype(np.int64)
+    masters = vc.masters.astype(np.int64)
+    # presence set: endpoints of owned edges ∪ forced master replicas
+    keys = np.unique(np.concatenate([
+        owner * V + dst, owner * V + src,
+        masters * V + np.arange(V, dtype=np.int64)]))
+    part_of, vid = keys // V, keys % V
+    rep_count = np.bincount(vid, minlength=V)
+    sizes = np.bincount(part_of, minlength=k)
+    nv = max(int(sizes.max()), 1)
+    vert_ids = np.full((k, nv), V, np.int64)
+    slot_of = np.full((k, V), -1, np.int64)
+    for d in range(k):
+        vs = vid[part_of == d]  # sorted ascending (keys are sorted)
+        vert_ids[d, : len(vs)] = vs
+        slot_of[d, vs] = np.arange(len(vs))
+    # owned-edge ELL: row = dst slot, col = src slot, both on the owner device
+    dslot = slot_of[owner, dst]
+    sslot = slot_of[owner, src]
+    cnt = np.zeros((k, nv), np.int64)
+    np.add.at(cnt, (owner, dslot), 1)
+    Kc = max(int(cnt.max()), 1)
+    ids_owned = np.full((k, nv, Kc), nv, np.int32)
+    mask_owned = np.zeros((k, nv, Kc), np.float32)
+    if len(owner):
+        grp = owner * nv + dslot
+        order = np.argsort(grp, kind="stable")
+        gs = grp[order]
+        run_id = np.cumsum(np.r_[0, (np.diff(gs) != 0).astype(np.int64)])
+        first = np.r_[0, np.flatnonzero(np.diff(gs)) + 1]
+        pos = np.arange(len(gs)) - first[run_id]
+        ids_owned[owner[order], dslot[order], pos] = sslot[order]
+        mask_owned[owner[order], dslot[order], pos] = 1.0
+    # per-slot tables (global degree so combine-then-normalize matches the
+    # full-graph math; pad slots get degree 1 / zero everything)
+    deg_g = np.maximum(g.degree(), 1).astype(np.float32)
+    present = vert_ids < V
+    safe = np.minimum(vert_ids, V - 1)
+    deg = np.where(present, deg_g[safe], 1.0)[..., None].astype(np.float32)
+    master_mask = (present & (masters[safe] == np.arange(k)[:, None])
+                   ).astype(np.float32)
+    bmask = present & (rep_count[safe] > 1)
+    D = g.features.shape[1]
+    X = np.where(present[..., None], g.features[safe], 0.0).astype(np.float32)
+    y = np.where(present, g.labels[safe], 0).astype(np.int32)
+    train = (g.train_mask[safe] if g.train_mask is not None
+             else np.zeros((k, nv), bool))
+    test = (g.test_mask[safe] if g.test_mask is not None
+            else np.zeros((k, nv), bool))
+    train_w = (master_mask * np.where(present, train, False)).astype(np.float32)
+    test_w = (master_mask * np.where(present, test, False)).astype(np.float32)
+    return VertexCutLayout(
+        k=k, nv=nv, Kc=Kc, Rm=max(int(rep_count.max()), 1),
+        vert_ids=vert_ids, slot_of=slot_of, master_mask=master_mask,
+        rep_count=rep_count, ids_owned=ids_owned, mask_owned=mask_owned,
+        deg=deg, bmask=bmask, X=X, y=y, train_w=train_w, test_w=test_w)

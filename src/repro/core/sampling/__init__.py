@@ -19,6 +19,7 @@ from repro.core.sampling.distributed import (
 from repro.core.sampling.partition_batch import (
     LLCGSchedule,
     expanded_partition_minibatch,
+    p2p_frontier_halo_cap,
     partition_minibatch,
     partition_targets,
 )

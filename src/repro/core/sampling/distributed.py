@@ -26,14 +26,15 @@ class CommStats:
     pull_bytes: int = 0  # neighbor lists / features moved to the requester
     push_bytes: int = 0  # sampling requests + results (CSP)
     cache_hit_bytes: int = 0  # feature bytes served by a local cache instead
+    replica_sync_bytes: int = 0  # vertex-cut partial/aggregate rows exchanged
 
     def total(self) -> int:
         """Bytes that actually cross the wire (cache hits excluded)."""
-        return self.pull_bytes + self.push_bytes
+        return self.pull_bytes + self.push_bytes + self.replica_sync_bytes
 
     def requested(self) -> int:
         """Bytes the computation asked for, whether cached or fetched."""
-        return self.pull_bytes + self.push_bytes + self.cache_hit_bytes
+        return self.total() + self.cache_hit_bytes
 
 
 def pull_based_sample(g: Graph, part: Partition, worker: int, targets: np.ndarray,

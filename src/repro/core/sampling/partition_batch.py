@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.partition.edge_cut import Partition
+from repro.core.partition.vertex_cut import edge_endpoints
 from repro.core.sampling.samplers import MiniBatch
 
 
@@ -32,6 +33,39 @@ def partition_targets(g: Graph, part: Partition, worker: int, batch_size: int,
     if len(pool) <= batch_size:
         return np.sort(pool).astype(np.int64)
     return np.sort(rng.choice(pool, size=batch_size, replace=False)).astype(np.int64)
+
+
+def p2p_frontier_halo_cap(g: Graph, part: Partition, hops: int,
+                          cap0: int) -> int:
+    """Tight static cap on the p2p mini-batch halo: the most rows any single
+    source partition can ever ship to one destination's sampled frontier.
+
+    Every sampler expands targets drawn from the destination's OWNED block by
+    at most `hops` in-neighbor hops (node/layer-wise: num_layers; subgraph:
+    walk_length), so the frontier rows remote-from-one-owner are bounded by
+    that owner's share of the destination's `hops`-hop in-neighborhood — the
+    measured edge-cut halo — never by the worst case `cap0` (every frontier
+    row remote from one owner).  Always a TRUE upper bound: shrinking the
+    all_to_all buffer by it can never overflow a sampled batch."""
+    V = g.num_vertices
+    e_src, e_dst = edge_endpoints(g)
+    assign = part.assignment
+    best = 1
+    for d in range(part.num_parts):
+        cur = assign == d
+        reached = cur.copy()
+        for _ in range(hops):
+            nxt = np.zeros(V, bool)
+            nxt[e_src[cur[e_dst]]] = True
+            cur = nxt & ~reached
+            reached |= nxt
+            if not cur.any():
+                break
+        remote = reached & (assign != d)
+        if remote.any():
+            counts = np.bincount(assign[remote], minlength=part.num_parts)
+            best = max(best, int(counts.max()))
+    return max(1, min(int(cap0), best))
 
 
 def partition_minibatch(g: Graph, part: Partition, worker: int,

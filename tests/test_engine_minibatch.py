@@ -189,6 +189,59 @@ def test_minibatch_rejects_bad_config():
         DistGNNEngine(g, cfg=EngineConfig(batching="node_wise", fanouts=(3,)))
 
 
+def test_p2p_fcap_tight_at_256_parts():
+    """ROADMAP follow-up from PR 2: the p2p halo cap derives from the
+    MEASURED hops-hop halo instead of the worst case caps[0], so the 256-part
+    all_to_all buffer shrinks >10x on the power-law config (host-side plan
+    math only — no devices needed)."""
+    import numpy as np
+
+    from repro.core.graph import powerlaw_graph
+    from repro.core.partition.edge_cut import hash_partition
+    from repro.core.sampling.partition_batch import p2p_frontier_halo_cap
+    from repro.core.sampling.samplers import frontier_caps
+
+    g = powerlaw_graph(4096, avg_degree=8, seed=0)
+    part = hash_partition(g, 256)
+    caps = frontier_caps("node_wise", 2, 1024, fanouts=(4, 4),
+                         num_vertices=g.num_vertices)
+    fcap = p2p_frontier_halo_cap(g, part, 2, caps[0])
+    assert caps[0] / fcap > 10, (caps[0], fcap)
+    # the cap stays a TRUE upper bound: it can never be smaller than the
+    # largest single-owner 2-hop halo share, which bounds any sampled batch
+    owned = np.bincount(part.assignment, minlength=256)
+    assert fcap <= owned.max()
+
+
+def test_p2p_fcap_is_safe_upper_bound_4dev():
+    """Engine-level: the tightened fcap never overflows across many sampled
+    batches (the overflow assert in _make_batch stays silent) and the
+    exchange still matches the oracle."""
+    out = run_with_devices("""
+        import jax
+        from repro.core.engine import DistGNNEngine, EngineConfig
+        from repro.core.graph import powerlaw_graph
+
+        g = powerlaw_graph(120, avg_degree=8, seed=2)
+        for batching, kw in (("node_wise", dict(fanouts=(4, 4))),
+                             ("subgraph", dict(walk_length=4))):
+            eng = DistGNNEngine(g, cfg=EngineConfig(
+                execution="p2p", batching=batching, batch_size=12,
+                hidden=16, lr=0.3, **kw))
+            assert eng.fcap <= eng.caps[0]
+            for i in range(6):
+                eng.sample_minibatch(i)  # would assert on overflow
+            ld, _ = eng.train(3)
+            lr_, _ = eng.train(3, reference=True)
+            err = max(abs(a - b) for a, b in zip(ld, lr_))
+            assert err <= 1e-4, (batching, err)
+            print(f"{batching}: fcap={eng.fcap} caps0={eng.caps[0]} "
+                  f"err={err:.2e}")
+        print("FCAP_SAFE_OK")
+    """, n_devices=4)
+    assert "FCAP_SAFE_OK" in out
+
+
 def test_minibatch_single_device_paths_agree():
     """On one device the distributed mini-batch step IS the oracle."""
     import jax

@@ -57,6 +57,47 @@ def test_vertex_cut_replication(plaw):
     assert 1.0 <= r_2d <= 3.0  # bounded by rows+cols-1
 
 
+def test_replication_factor_vectorized_matches_loop(plaw, sbm):
+    """The numpy replication factor must equal the O(V*deg) Python-loop
+    oracle it replaced."""
+    from repro.core.partition.vertex_cut import _replication_factor_loop
+
+    for g in (plaw, sbm):
+        for vc in (random_vertex_cut(g, 4), cartesian_2d_vertex_cut(g, 2, 2),
+                   libra_vertex_cut(g, 4)):
+            assert vc.replication_factor(g) == pytest.approx(
+                _replication_factor_loop(vc, g), abs=1e-12)
+
+
+def test_libra_owned_edge_balance(plaw, sbm):
+    """Libra's balance cap bounds the owned-edge load:
+    max_load <= slack * E / k + 1 (the greedy only considers candidates
+    below the cap; the fallback is the globally least-loaded partition)."""
+    slack = 1.15
+    for g, k in ((plaw, 4), (plaw, 8), (sbm, 8)):
+        vc = libra_vertex_cut(g, k, slack=slack)
+        loads = np.bincount(vc.edge_owner, minlength=k)
+        assert loads.sum() == g.num_edges
+        assert loads.max() <= slack * g.num_edges / k + 1, (k, loads)
+
+
+def test_vertex_cut_masters_hold_their_vertices(plaw):
+    """Libra masters must be partitions that actually hold the vertex (the
+    layout forces master presence, so a foreign master would silently add
+    replicas); master load is spread, not first-holder-concentrated."""
+    vc = libra_vertex_cut(plaw, 4)
+    counts = vc.replica_counts(plaw)
+    present = np.zeros((4, plaw.num_vertices), bool)
+    e = 0
+    for v in range(plaw.num_vertices):
+        for u in plaw.neighbors(v):
+            present[vc.edge_owner[e], v] = True
+            present[vc.edge_owner[e], u] = True
+            e += 1
+    held = present[vc.masters, np.arange(plaw.num_vertices)]
+    assert held[counts > 0].all()
+
+
 def test_range_partition_contiguous(sbm):
     part = PARTITIONERS["range"](sbm, 4)
     # contiguity: assignment must be non-decreasing

@@ -1,0 +1,95 @@
+"""Hypothesis property tests on the vertex-cut partitioner invariants the
+engine's replica layout relies on: the Libra owned-edge balance bound, the
+2D-Cartesian per-vertex replication bound (<= rows + cols - 1, masters
+included), determinism in seed, and layout well-formedness (every vertex
+present exactly once per holding device, always on its master).
+
+Requires the optional ``hypothesis`` dependency (the ``property`` test
+extra); without it the module degrades to a skip instead of a collection
+error — same gating as test_sampling_property.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.graph import er_graph, powerlaw_graph
+from repro.core.partition.vertex_cut import (
+    VERTEX_CUTS,
+    cartesian_2d_vertex_cut,
+    libra_vertex_cut,
+)
+from repro.core.partition.vertex_layout import build_vertex_layout
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(st.integers(20, 120), st.integers(2, 8), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_libra_balance_invariant(n, k, seed):
+    """max owned-edge load <= slack * E / k + 1, on arbitrary graphs."""
+    g = powerlaw_graph(n, avg_degree=6, seed=seed % 17)
+    vc = libra_vertex_cut(g, k, seed=seed)
+    loads = np.bincount(vc.edge_owner, minlength=k)
+    assert loads.sum() == g.num_edges
+    assert loads.max() <= 1.15 * g.num_edges / k + 1
+
+
+@given(st.integers(20, 100), st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_cartesian_2d_replication_bound(n, rows, cols, seed):
+    """Per-VERTEX replication <= rows + cols - 1: v's edges live only in
+    grid row row(v) (as source) and grid column col(v) (as destination), and
+    the master block (row(v), col(v)) sits in that cross."""
+    g = er_graph(n, avg_degree=5, seed=seed % 13)
+    vc = cartesian_2d_vertex_cut(g, rows, cols, seed=seed)
+    counts = vc.replica_counts(g, include_masters=True)
+    assert counts.max() <= rows + cols - 1
+    assert (counts >= 1).all()  # the forced master covers isolated vertices
+
+
+@given(st.integers(20, 100), st.integers(2, 8), st.integers(0, 10_000),
+       st.sampled_from(sorted(VERTEX_CUTS)))
+@settings(**SETTINGS)
+def test_vertex_cut_deterministic_in_seed(n, k, seed, name):
+    """Same (graph, k, seed) -> identical cut; the engine's bitwise
+    determinism contract starts here."""
+    g = er_graph(n, avg_degree=5, seed=seed % 13)
+    a = VERTEX_CUTS[name](g, k, seed=seed)
+    b = VERTEX_CUTS[name](g, k, seed=seed)
+    np.testing.assert_array_equal(a.edge_owner, b.edge_owner)
+    np.testing.assert_array_equal(a.masters, b.masters)
+
+
+@given(st.integers(20, 80), st.integers(2, 6), st.integers(0, 10_000),
+       st.sampled_from(sorted(VERTEX_CUTS)))
+@settings(**SETTINGS)
+def test_vertex_layout_well_formed(n, k, seed, name):
+    """The static layout invariants the replica-sync plans assume: slot
+    tables consistent, every vertex present on its master, owned-edge ELL
+    masks match the cut's per-partition edge counts, and pad slots inert."""
+    g = powerlaw_graph(n, avg_degree=6, seed=seed % 17)
+    vc = VERTEX_CUTS[name](g, k, seed=seed)
+    lay = build_vertex_layout(g, vc, k)
+    V = g.num_vertices
+    for d in range(k):
+        vs = lay.vert_ids[d][lay.vert_ids[d] < V]
+        assert len(np.unique(vs)) == len(vs)  # one slot per vertex
+        np.testing.assert_array_equal(
+            lay.slot_of[d, vs], np.flatnonzero(lay.vert_ids[d] < V))
+    # every vertex present on its master, exactly one master slot
+    assert (lay.slot_of[vc.masters, np.arange(V)] >= 0).all()
+    assert lay.master_mask.sum() == V
+    # owned-edge ELL rows sum to the cut's edge loads; pad slots carry none
+    loads = np.bincount(vc.edge_owner, minlength=k)
+    np.testing.assert_array_equal(lay.mask_owned.sum((1, 2)), loads)
+    pad = lay.vert_ids == V
+    assert lay.mask_owned[pad].sum() == 0
+    assert lay.train_w[pad].sum() == 0 and lay.X[pad].sum() == 0
+    # replica counts consistent with presence
+    np.testing.assert_array_equal(
+        lay.rep_count, (lay.slot_of >= 0).sum(0))
