@@ -2,9 +2,18 @@
 
 Each function returns (rows, derived_summary): rows are printable dicts; the
 summary is one line for the CSV contract in run.py.
+
+``python benchmarks/bench_gnn.py --json`` seeds the step-pipeline perf
+trajectory: it writes BENCH_step_pipeline.json (blocking vs pipelined epoch
+wall-clock, chunked vs monolithic exchange peak bytes + step time, measured
+on forced-host 4/8-device subprocesses) and asserts pipelined <= blocking.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 from typing import Dict, List, Tuple
 
@@ -135,3 +144,172 @@ def bench_staleness() -> Tuple[List[Dict], str]:
                          mbytes_pushed=round(r.bytes_pushed / 1e6, 3)))
     gap = max(abs(r["test_acc"] - rows[0]["test_acc"]) for r in rows[1:])
     return rows, f"max_acc_gap_vs_sync={gap:.4f}"
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4: the pipelined hot path — blocking vs pipelined epoch wall-clock
+# and chunked vs monolithic exchange, measured for real on forced-host
+# devices (fresh subprocesses so the parent keeps its single device).
+# ---------------------------------------------------------------------------
+
+_PIPELINE_PROBE = r"""
+import json, os, time
+import jax
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.execution.minibatch_pipeline import pipelined_wall_model
+from repro.core.execution.pipeline_exchange import gathered_table_peak_bytes
+from repro.core.graph import sbm_graph
+
+n_dev = len(jax.devices())
+g = sbm_graph(256, num_blocks=8, p_in=0.06, p_out=0.01, seed=0)
+
+# -- blocking vs pipelined mini-batch epoch (the double-buffered sampler) --
+cfg = EngineConfig(execution="broadcast", batching="node_wise", batch_size=16,
+                   fanouts=(4, 4), hidden=32, lr=0.3, exchange_chunks=4,
+                   prefetch_depth=2)
+eng = DistGNNEngine(g, cfg=cfg)
+# warm the one jit compile, the host caches, and both schedule paths
+eng.run_epoch_minibatch(2)
+eng.run_epoch_minibatch(2, schedule="pipelined")
+NB, TRIALS = 12, 3
+trials, losses = [], []
+for _ in range(TRIALS):  # interleaved: both arms see the same machine load
+    _, lb, tb = eng.run_epoch_minibatch(NB, schedule="conventional")
+    _, lp, tp = eng.run_epoch_minibatch(NB, schedule="pipelined")
+    assert lp == lb, "pipelined epoch must be bitwise-identical to blocking"
+    trials.append((tb, tp))
+blocking = min((b for b, _ in trials), key=lambda t: t.wall)
+pipelined = min((p for _, p in trials), key=lambda t: t.wall)
+model = pipelined_wall_model(pipelined, NB)
+
+# The prefetch lanes really ran concurrently: the measured wall must sit
+# below the serial sum of the run's OWN measured stage times.  This is the
+# machine-independent overlap evidence; the blocking-vs-pipelined wall
+# comparison additionally needs a spare core beyond the forced host devices
+# (an oversubscribed host serializes the lanes through contention and can
+# make the pipelined wall slower than blocking — recorded either way).
+assert pipelined.wall <= 0.95 * pipelined.busy(), (
+    "no measured overlap", pipelined.wall, pipelined.busy())
+capacity_limited = (os.cpu_count() or 1) < n_dev + 1
+if not capacity_limited:
+    assert pipelined.wall <= blocking.wall, (
+        "pipelined epoch slower than blocking on a host with spare cores",
+        pipelined.wall, blocking.wall)
+
+# -- chunked vs monolithic full-graph broadcast exchange ------------------
+steps = {}
+for chunks in (1, 4):
+    e = DistGNNEngine(g, cfg=EngineConfig(execution="broadcast", hidden=32,
+                                          lr=0.3, exchange_chunks=chunks))
+    step = e.make_step()
+    state = e.init_state()
+    state, m, _ = step(state)
+    jax.block_until_ready(m["loss"])  # compile + first step
+    t0 = time.perf_counter()
+    for _ in range(5):
+        state, m, _ = step(state)
+    jax.block_until_ready(m["loss"])
+    steps[chunks] = dict(
+        step_seconds=(time.perf_counter() - t0) / 5,
+        gathered_table_peak_bytes=gathered_table_peak_bytes(
+            e.Vp, max(e.dims[:-1]), chunks))
+
+print("BENCH_JSON " + json.dumps(dict(
+    devices=n_dev, num_batches=NB, host_cores=os.cpu_count(),
+    overlap_capacity_limited=capacity_limited,
+    blocking_epoch_seconds=blocking.wall,
+    pipelined_epoch_seconds=pipelined.wall,
+    pipelined_busy_seconds=pipelined.busy(),
+    pipelined_overlap_ratio=pipelined.wall / max(pipelined.busy(), 1e-9),
+    pipelined_lane_seconds=dict(sample=pipelined.sample,
+                                extract=pipelined.extract,
+                                train=pipelined.train),
+    pipelined_wall_model_seconds=model,
+    exchange=dict(monolithic=steps[1], chunked_4=steps[4]))))
+"""
+
+
+def bench_step_pipeline(out_dir: str = "experiments/dryrun"
+                        ) -> Tuple[List[Dict], str]:
+    """ISSUE 4 perf trajectory: measure the pipelined epoch against the
+    blocking one (and the chunked exchange against the monolithic one) on
+    forced-host 4/8-device subprocesses; write BENCH_step_pipeline.json.
+
+    Asserted per device count: pipelined losses == blocking losses bitwise,
+    the pipelined wall sits below the serial sum of its own measured lanes
+    (real overlap), and — on hosts with at least one spare core beyond the
+    forced devices — pipelined wall <= blocking wall.  On an oversubscribed
+    host (cores <= devices) the XLA compute threads, the collective
+    spin-waits, and the sampler fight for the same cores, so the wall
+    comparison is recorded with ``overlap_capacity_limited: true`` instead
+    of asserted."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    result = dict(graph="sbm_256", devices={})
+    rows = []
+    for n_dev in (4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+        env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        proc = subprocess.run([sys.executable, "-c", _PIPELINE_PROBE],
+                              capture_output=True, text=True, timeout=900,
+                              env=env)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"pipeline probe failed on {n_dev} devices:\n"
+                f"{proc.stdout}\n{proc.stderr[-3000:]}")
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("BENCH_JSON ")][-1]
+        entry = json.loads(line[len("BENCH_JSON "):])
+        result["devices"][str(n_dev)] = entry
+        ex = entry["exchange"]
+        rows.append(dict(
+            devices=n_dev,
+            blocking_s=round(entry["blocking_epoch_seconds"], 4),
+            pipelined_s=round(entry["pipelined_epoch_seconds"], 4),
+            speedup=round(entry["blocking_epoch_seconds"]
+                          / max(entry["pipelined_epoch_seconds"], 1e-9), 3),
+            overlap_ratio=round(entry["pipelined_overlap_ratio"], 3),
+            capacity_limited=entry["overlap_capacity_limited"],
+            chunk_peak_reduction=round(
+                ex["monolithic"]["gathered_table_peak_bytes"]
+                / ex["chunked_4"]["gathered_table_peak_bytes"], 2),
+            chunked_step_s=round(ex["chunked_4"]["step_seconds"], 5),
+            monolithic_step_s=round(ex["monolithic"]["step_seconds"], 5)))
+    # write the artifact BEFORE asserting so a failed claim leaves evidence
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_step_pipeline.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=float)
+    for r in rows:
+        assert r["overlap_ratio"] <= 0.95, (
+            f"pipelined lanes did not overlap on {r['devices']} devices: {r}")
+        if not r["capacity_limited"]:
+            assert r["pipelined_s"] <= r["blocking_s"], (
+                f"pipelined epoch must not be slower than the blocking one "
+                f"on {r['devices']} devices: {r}")
+        assert r["chunk_peak_reduction"] >= 2, r
+    best = max(rows, key=lambda r: r["speedup"])
+    return rows, (f"pipelined_speedup@{best['devices']}dev={best['speedup']}"
+                  f" artifact={path}")
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="run the step-pipeline bench and write "
+                    "BENCH_step_pipeline.json")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    if not args.json:
+        ap.error("pass --json (the CSV benches run via benchmarks/run.py)")
+    rows, derived = bench_step_pipeline(args.out)
+    for r in rows:
+        print(r)
+    print(derived)
+
+
+if __name__ == "__main__":
+    main()

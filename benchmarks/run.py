@@ -28,6 +28,7 @@ def main() -> None:
         bench_partition,
         bench_protocol_costs,
         bench_staleness,
+        bench_step_pipeline,
     )
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.bench_spmm_comm import bench_spmm_comm
@@ -39,6 +40,7 @@ def main() -> None:
         "sampling": bench_distributed_sampling,  # §5.1 CSP / skewed
         "protocols": bench_protocol_costs,  # §7.1 comm volume
         "staleness": bench_staleness,  # §7.2 / Table 3
+        "step_pipeline": bench_step_pipeline,  # ISSUE 4: pipelined hot path
         "spmm_comm": bench_spmm_comm,  # §6.2.2 / Table 2 (CAGNET)
         "kernels": bench_kernels,  # Pallas kernel structural timing
         "roofline": lambda: roofline_table("experiments/dryrun"),  # deliverable g

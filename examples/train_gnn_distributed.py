@@ -56,7 +56,10 @@ def run_engine(args, g):
                        fanouts=fanouts, layer_sizes=layer_sizes,
                        walk_length=args.walk_length,
                        cache_policy=args.cache,
-                       cache_capacity=args.cache_capacity)
+                       cache_capacity=args.cache_capacity,
+                       exchange_chunks=args.exchange_chunks,
+                       p2p_buckets=args.p2p_buckets,
+                       prefetch_depth=args.prefetch_depth)
     n_dev = len(jax.devices())
     k = args.parts or n_dev
     assert k <= n_dev, f"need {k} devices, have {n_dev} (set XLA_FLAGS)"
@@ -188,8 +191,20 @@ def main():
     ap.add_argument("--cache-capacity", type=int, default=0,
                     help="remote feature rows cached per device")
     ap.add_argument("--schedule", default="conventional",
-                    choices=["conventional", "factored", "operator_parallel"],
-                    help="mini-batch stage schedule (survey §6.1)")
+                    choices=["conventional", "factored", "operator_parallel",
+                             "pipelined"],
+                    help="mini-batch stage schedule (survey §6.1); "
+                    "'pipelined' runs the REAL double-buffered sampler "
+                    "(prefetch thread + async step dispatch)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="pipelined schedule: batches sampled ahead of the "
+                    "device step (bounded queue depth)")
+    ap.add_argument("--exchange-chunks", type=int, default=1,
+                    help="feature-dim chunks overlapping the broadcast/p2p "
+                    "collectives with the ELL multiply (1 = monolithic)")
+    ap.add_argument("--p2p-buckets", type=int, default=1,
+                    help="power-of-two installments splitting the p2p "
+                    "all_to_all send caps (smaller lowered buffers)")
     ap.add_argument("--parts", type=int, default=0, help="0 = all devices")
     ap.add_argument("--partition", default="metis_like")
     ap.add_argument("--partition-family", default="edge_cut",

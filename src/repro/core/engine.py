@@ -50,7 +50,20 @@ jitted shard_map training step.
                                  partial aggregation (SAR/chunk pipeline),
                      p2p       — halo exchange: only the boundary rows each
                                  destination actually needs cross the wire
-                                 (all_to_all on a static partition plan).
+                                 (all_to_all on a static partition plan,
+                                 optionally split into power-of-two BUCKETED
+                                 installments so the lowered send buffers
+                                 stay small — cfg.p2p_buckets).
+                   The exchange is PIPELINED two ways (§6-§7 overlap,
+                   execution/pipeline_exchange.py): ``exchange_chunks`` > 1
+                   feature-chunks the broadcast/p2p collectives so chunk
+                   c+1's collective flies while chunk c feeds the ELL
+                   multiply (peak gathered-table bytes O(V*D/chunks)), and
+                   ``run_epoch_minibatch(schedule="pipelined")`` overlaps
+                   host sampling/extraction with the device step through a
+                   background prefetch worker (sampling/prefetch.py) —
+                   bitwise-identical to the blocking path, faster on the
+                   wall.
   protocol (§7)    sync (fresh embeddings every layer) or async historical
                    embeddings with a bounded-staleness model (epoch_fixed /
                    epoch_adaptive / variation), applied block-locally so the
@@ -77,6 +90,14 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import interpret_default, shard_map
+from repro.core.execution.pipeline_exchange import (
+    bucketed_all_to_all,
+    bucketed_cap_widths,
+    bucketed_send_table,
+    chunked_overlap,
+    halo_slot,
+    zero_pad_row,
+)
 from repro.core.execution.replica_sync import (
     build_replica_sync_plan,
     reference_combine,
@@ -126,6 +147,14 @@ class EngineConfig:
     walk_length: int = 4  # subgraph random walk
     cache_policy: str = "none"  # none | any key of sampling CACHE_POLICIES
     cache_capacity: int = 0  # remote feature rows resident per device
+    exchange_chunks: int = 1  # feature-dim chunks: overlap collective c+1
+    #   with the ELL multiply of chunk c (1 = monolithic exchange)
+    p2p_buckets: int = 1  # power-of-two installments splitting the p2p
+    #   all_to_all send caps (1 = single max-pairwise-need buffer); applies
+    #   to the full-graph halo plan and the replica-sync plan — the
+    #   mini-batch frontier fetch keeps a single fcap buffer (its bucket
+    #   occupancy would vary per batch; ROADMAP follow-up)
+    prefetch_depth: int = 2  # batches the pipelined epoch samples ahead
     hidden: int = 32
     num_layers: int = 2
     lr: float = 0.5
@@ -158,6 +187,12 @@ class DistGNNEngine:
             raise ValueError(
                 "mini-batch training supports protocol='sync' only: the "
                 "historical-embedding protocols are full-graph state")
+        if cfg.exchange_chunks < 1:
+            raise ValueError("exchange_chunks must be >= 1")
+        if cfg.p2p_buckets < 1:
+            raise ValueError("p2p_buckets must be >= 1")
+        if cfg.prefetch_depth < 1:
+            raise ValueError("prefetch_depth must be >= 1")
         if cfg.partition_family not in PARTITION_FAMILIES:
             raise ValueError(
                 f"partition_family must be one of {PARTITION_FAMILIES}")
@@ -273,9 +308,11 @@ class DistGNNEngine:
             self.ids_exec = jnp.asarray(ids.astype(np.int32))
             return
         if self.cfg.execution == "ring":
-            # per (dst row, src block): neighbor ids local to the src block,
-            # padded with nb -> the zero row appended to the rotating block
-            ids_by_src = np.full((Vp, k, K), nb, np.int32)
+            # per (dst row, src block): neighbor ids local to the src block.
+            # Pad slots carry id 0 with mask 0 — the masked ELL reduction
+            # zeroes them, so the scan needs NO per-round zero-row
+            # concatenate onto the rotating block.
+            ids_by_src = np.zeros((Vp, k, K), np.int32)
             src_part = np.where(ids < Vp, ids // nb, -1)
             local_id = np.where(ids < Vp, ids % nb, 0)
             for s in range(k):
@@ -305,23 +342,29 @@ class DistGNNEngine:
                 need_sets[d][s] = np.unique(local_id[rows][sel])
         cap = max(1, max((len(x) for row in need_sets for x in row), default=1))
         self.cap = cap
-        need = np.zeros((k, k, cap), np.int32)
-        for d in range(k):
-            for s in range(k):
-                need[d, s, : len(need_sets[d][s])] = need_sets[d][s]
-        # send_rows[src, dst, cap]: what each SOURCE ships per destination
-        self.send_rows = jnp.asarray(need.transpose(1, 0, 2).copy())
+        # power-of-two bucketed installment caps (1 bucket = the classic
+        # max-pairwise-need buffer): each lowered all_to_all operand holds
+        # k*w rows instead of k*cap, shipping the same rows over B rounds
+        widths = bucketed_cap_widths(cap, self.cfg.p2p_buckets)
+        self.p2p_widths = widths
+        B, w = len(widths), widths[0]
+        # send_rows[src, B, dst, w]: what each SOURCE ships per installment
+        # and destination (need_sets is dst-major; the builder wants
+        # src-major need[s][d])
+        self.send_rows = jnp.asarray(bucketed_send_table(
+            [[need_sets[d][s] for d in range(k)] for s in range(k)],
+            k, widths))
         # remap ids into the local gather table:
         #   [0, nb)            own block
-        #   [nb, nb + k*cap)   halo slot s*cap + position in need[d, s]
-        #   nb + k*cap         zero row (pads + absent)
-        ids_remap = np.full((Vp, K), nb + k * cap, np.int32)
+        #   [nb, nb + B*k*w)   halo slot (installment-major; see halo_slot)
+        #   nb + B*k*w         zero row (pads + absent)
+        ids_remap = np.full((Vp, K), nb + B * k * w, np.int32)
         for d in range(k):
             rows = slice(d * nb, (d + 1) * nb)
             pos_lut = {}  # (src, local_id) -> halo slot
             for s in range(k):
                 for t, li in enumerate(need_sets[d][s]):
-                    pos_lut[(s, int(li))] = nb + s * cap + t
+                    pos_lut[(s, int(li))] = int(halo_slot(t, s, w, k, nb))
             id_blk = ids[rows]
             sp_blk = src_part[rows]
             li_blk = local_id[rows]
@@ -363,9 +406,11 @@ class DistGNNEngine:
         self.ids_global = np.where(lay.mask_owned > 0,
                                    lay.ids_owned + flat_off, Vp
                                    ).reshape(Vp, lay.Kc).astype(np.int64)
-        plan = build_replica_sync_plan(lay, self.vcut.masters, c.execution)
+        plan = build_replica_sync_plan(lay, self.vcut.masters, c.execution,
+                                       buckets=c.p2p_buckets)
         plan.pop("execution")
         self._vc_rows_per_layer = plan.pop("rows_per_layer")
+        self._vc_p2p_caps = plan.pop("caps", None)  # p2p: pre-bucketing c1/c2
         self._vc_plan = {}
         slot_tables = ("rep_ids", "rep_mask", "gather_ids", "gather_mask",
                        "scatter_ids")  # [k, nv, ...] -> flatten like X/y/...
@@ -385,10 +430,6 @@ class DistGNNEngine:
             return ell_spmm(ids, mask, table, normalize=False,
                             interpret=self.interpret)
         return (mask[..., None] * jnp.take(table, ids, axis=0)).sum(1)
-
-    def _aggregate(self, ids, mask, table, deg):
-        """agg[v] = (sum_k mask[v,k] * table[ids[v,k]]) / deg[v]"""
-        return self._ell(ids, mask, table) / deg
 
     @staticmethod
     def _layer(p_l, agg, h_self, last: bool):
@@ -435,24 +476,34 @@ class DistGNNEngine:
 
     def _exchange_and_aggregate(self, h_local, consts_local):
         """One layer's neighbor exchange + local ELL multiply, device-local
-        code under shard_map. h_local [nb, D] -> agg [nb, D]."""
+        code under shard_map. h_local [nb, D] -> agg [nb, D].
+
+        With ``exchange_chunks`` > 1 the broadcast/p2p exchanges are
+        feature-chunked (pipeline_exchange.chunked_overlap): the collective
+        for chunk c+1 is issued while the Pallas ELL multiply consumes chunk
+        c, so peak gathered-table bytes drop from O(V*D) to O(V*D/chunks)
+        and XLA's async collectives hide the wire behind the MXU."""
         ax, k, nb = self.axis, self.k, self.nb
+        C = self.cfg.exchange_chunks
         ids, mask, deg = (consts_local["ids"], consts_local["mask"],
                           consts_local["deg"])
         if self.cfg.partition_family == "vertex_cut":
             # partial aggregation over OWNED edges (replica-slot space), then
             # replica-sync combine, then global-degree normalize
-            table = jnp.concatenate(
-                [h_local, jnp.zeros((1, h_local.shape[1]), h_local.dtype)], 0)
+            table = jnp.concatenate([h_local, zero_pad_row(h_local)], 0)
             partial = self._ell(ids, mask, table)
             agg = replica_combine(self.cfg.execution, partial, consts_local,
-                                  axis=ax, k=k, ell_fn=self._ell)
+                                  axis=ax, k=k, ell_fn=self._ell,
+                                  num_chunks=C)
             return agg / deg
         if self.cfg.execution == "broadcast":
-            h_full = jax.lax.all_gather(h_local, ax, axis=0, tiled=True)
-            table = jnp.concatenate(
-                [h_full, jnp.zeros((1, h_local.shape[1]), h_local.dtype)], 0)
-            return self._aggregate(ids, mask, table, deg)
+            def exchange(hc):
+                h_full = jax.lax.all_gather(hc, ax, axis=0, tiled=True)
+                return jnp.concatenate([h_full, zero_pad_row(hc)], 0)
+
+            agg = chunked_overlap(h_local, C, exchange,
+                                  lambda table: self._ell(ids, mask, table))
+            return agg / deg
         if self.cfg.execution == "ring":
             me = jax.lax.axis_index(ax)
 
@@ -461,9 +512,9 @@ class DistGNNEngine:
                 owner = (me + r) % k
                 ids_r = jnp.take(ids, owner, axis=0)  # [nb, K]
                 mask_r = jnp.take(mask, owner, axis=0)
-                table = jnp.concatenate(
-                    [h_cur, jnp.zeros((1, h_cur.shape[1]), h_cur.dtype)], 0)
-                part = self._aggregate(ids_r, mask_r, table, deg)
+                # pad slots carry id 0 / mask 0: no zero-row concatenate in
+                # the scan, the masked reduction drops them
+                part = self._ell(ids_r, mask_r, h_cur)
                 h_nxt = jax.lax.ppermute(
                     h_cur, ax, [(i, (i - 1) % k) for i in range(k)])
                 return (acc + part, h_nxt), None
@@ -471,16 +522,19 @@ class DistGNNEngine:
             acc0 = jnp.zeros((nb, h_local.shape[1]), h_local.dtype)
             (acc, _), _ = jax.lax.scan(ring_step, (acc0, h_local),
                                        jnp.arange(k))
-            return acc
-        # p2p halo exchange
-        send_rows = consts_local["send_rows"]  # [k, cap]
-        send = h_local[send_rows.reshape(-1)].reshape(
-            k, self.cap, h_local.shape[1])
-        recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0)
-        table = jnp.concatenate(
-            [h_local, recv.reshape(k * self.cap, h_local.shape[1]),
-             jnp.zeros((1, h_local.shape[1]), h_local.dtype)], 0)
-        return self._aggregate(ids, mask, table, deg)
+            # normalize ONCE after the scan: deg is constant across rounds,
+            # so the old per-round division burned k-1 extra divides/layer
+            return acc / deg
+        # p2p halo exchange (bucketed installment all_to_alls)
+        send_rows = consts_local["send_rows"]  # [B, k, w]
+
+        def exchange(hc):
+            recv = bucketed_all_to_all(hc, send_rows, ax, k)
+            return jnp.concatenate([hc, recv, zero_pad_row(hc)], 0)
+
+        agg = chunked_overlap(h_local, C, exchange,
+                              lambda table: self._ell(ids, mask, table))
+        return agg / deg
 
     def _forward_local(self, params, hist, age, step, consts_local):
         """Full local forward with protocol mixing; returns (logits_local,
@@ -529,7 +583,7 @@ class DistGNNEngine:
             shard["mask"] = P(ax, None, None, None)
         elif c.execution == "p2p":
             consts["send_rows"] = self.send_rows
-            shard["send_rows"] = P(ax, None, None)
+            shard["send_rows"] = P(ax, None, None, None)
         state_specs = dict(
             params=P(), step=P(),
             hist=tuple(P(ax, None) for _ in range(L)),
@@ -848,39 +902,54 @@ class DistGNNEngine:
         """Device-local frontier feature fetch under shard_map: resident-cache
         reads plus the execution-model exchange for the misses.  Every valid
         frontier slot is covered by exactly one of the two (the other reads a
-        zero row), so the sum is exact."""
+        zero row), so the sum is exact.  The broadcast/p2p exchanges are
+        feature-chunked like `_exchange_and_aggregate` when
+        ``exchange_chunks`` > 1 (the frontier gather consumes chunk c while
+        chunk c+1's collective flies)."""
         ax, k, nb, fcap = self.axis, self.k, self.nb, self.fcap
+        C = self.cfg.exchange_chunks
         D = X_local.shape[1]
-        zero = jnp.zeros((1, D), X_local.dtype)
-        ctab = jnp.concatenate([cache_local, zero], 0)
+        ctab = jnp.concatenate([cache_local, zero_pad_row(cache_local)], 0)
         F = jnp.take(ctab, bl["cache_ids"], axis=0)
         if self.cfg.execution == "broadcast":
-            h_full = jax.lax.all_gather(X_local, ax, axis=0, tiled=True)
-            tab = jnp.concatenate([h_full, zero], 0)
-            return F + jnp.take(tab, bl["bc_ids"], axis=0)
+            def exchange(hc):
+                h_full = jax.lax.all_gather(hc, ax, axis=0, tiled=True)
+                return jnp.concatenate([h_full, zero_pad_row(hc)], 0)
+
+            return F + chunked_overlap(
+                X_local, C, exchange,
+                lambda tab: jnp.take(tab, bl["bc_ids"], axis=0))
         if self.cfg.execution == "ring":
             me = jax.lax.axis_index(ax)
+            # the zero pad row is concatenated ONCE and rotates with the
+            # block (every device appends zeros, so slot nb stays zero)
+            tab0 = jnp.concatenate([X_local, zero_pad_row(X_local)], 0)
 
             def ring_step(carry, r):
-                acc, h_cur = carry
+                acc, tab_cur = carry
                 owner = (me + r) % k
                 ids_r = jnp.take(bl["ring_ids"], owner, axis=0)
-                tab = jnp.concatenate([h_cur, zero], 0)
-                acc = acc + jnp.take(tab, ids_r, axis=0)
-                h_nxt = jax.lax.ppermute(
-                    h_cur, ax, [(i, (i - 1) % k) for i in range(k)])
-                return (acc, h_nxt), None
+                acc = acc + jnp.take(tab_cur, ids_r, axis=0)
+                tab_nxt = jax.lax.ppermute(
+                    tab_cur, ax, [(i, (i - 1) % k) for i in range(k)])
+                return (acc, tab_nxt), None
 
             acc0 = jnp.zeros((bl["cache_ids"].shape[0], D), X_local.dtype)
-            (acc, _), _ = jax.lax.scan(ring_step, (acc0, X_local),
+            (acc, _), _ = jax.lax.scan(ring_step, (acc0, tab0),
                                        jnp.arange(k))
             return F + acc
+
         # p2p: ship only the rows each destination's misses actually need
-        send = X_local[bl["send_rows"].reshape(-1)].reshape(k, fcap, D)
-        recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0)
-        tab = jnp.concatenate(
-            [X_local, recv.reshape(k * fcap, D), zero], 0)
-        return F + jnp.take(tab, bl["tab_ids"], axis=0)
+        def exchange(hc):
+            send = hc[bl["send_rows"].reshape(-1)].reshape(k, fcap,
+                                                           hc.shape[1])
+            recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0)
+            return jnp.concatenate(
+                [hc, recv.reshape(k * fcap, hc.shape[1]), zero_pad_row(hc)], 0)
+
+        return F + chunked_overlap(
+            X_local, C, exchange,
+            lambda tab: jnp.take(tab, bl["tab_ids"], axis=0))
 
     def make_minibatch_step(self):
         """The jitted distributed mini-batch step: (state, batch) ->
@@ -995,30 +1064,58 @@ class DistGNNEngine:
         return ref_step
 
     def run_epoch_minibatch(self, num_batches: int, schedule: str = "conventional",
-                            state=None, reference: bool = False):
+                            state=None, reference: bool = False,
+                            prefetch_depth: Optional[int] = None):
         """Drive the §6.1 mini-batch execution schedules (conventional /
-        factored / operator_parallel) with the engine's REAL stages: host
-        sampling, padded-batch extraction (+fetch-plan build), and the jitted
-        train step.  Returns (state, losses, StageTimes).  A fresh run
-        (state=None) resets self.comm_stats like train(); passing a state in
-        continues accumulating."""
-        from repro.core.execution.minibatch_pipeline import SCHEDULES
+        factored / operator_parallel / pipelined) with the engine's REAL
+        stages: host sampling, padded-batch extraction (+fetch-plan build),
+        and the jitted train step.  Returns (state, losses, StageTimes).
+
+        ``schedule="pipelined"`` runs the double-buffered sampler for real: a
+        background `PrefetchWorker` thread samples/extracts batch i+1
+        (bounded ``prefetch_depth`` ahead, default cfg.prefetch_depth) while
+        the trainer lane dispatches step i WITHOUT blocking on the device —
+        losses are synced once at epoch end, so the jitted step, the
+        host->device transfer, and host sampling genuinely overlap.  Batches
+        stay deterministic in (seed, step, device): the pipelined epoch is
+        bitwise-identical to the blocking schedules (state, losses, and
+        CommStats), just faster on the wall.
+
+        A fresh run (state=None) resets self.comm_stats like train();
+        passing a state in continues accumulating."""
+        from repro.core.execution.minibatch_pipeline import (
+            SCHEDULES,
+            run_pipelined,
+        )
         step = (self.make_reference_minibatch_step() if reference
                 else self.make_minibatch_step())
         if state is None:
             self.comm_stats = CommStats()
         holder = dict(state=state if state is not None
                       else self.init_minibatch_state())
-        losses: List[float] = []
+        pipelined = schedule == "pipelined"
+        losses: List = []
 
         def train_fn(mbs, batch):
             holder["state"], metrics, _ = step(holder["state"], batch)
-            losses.append(float(metrics["loss"]))
+            # pipelined lane: keep the dispatch async — float() here would
+            # block the trainer on the device step and kill the overlap
+            losses.append(metrics["loss"] if pipelined
+                          else float(metrics["loss"]))
 
-        times = SCHEDULES[schedule](
-            list(range(num_batches)),
-            lambda i: self._sample_host(int(i)),
-            self._make_batch, train_fn)
+        batch_ids = list(range(num_batches))
+        sample_fn = lambda i: self._sample_host(int(i))  # noqa: E731
+        if pipelined:
+            depth = (self.cfg.prefetch_depth if prefetch_depth is None
+                     else prefetch_depth)
+            times = run_pipelined(
+                batch_ids, sample_fn, self._make_batch, train_fn,
+                prefetch_depth=depth,
+                finalize_fn=lambda: jax.block_until_ready(holder["state"]))
+            losses = [float(l) for l in losses]
+        else:
+            times = SCHEDULES[schedule](
+                batch_ids, sample_fn, self._make_batch, train_fn)
         return holder["state"], losses, times
 
     def minibatch_accuracy(self, logits, batch) -> float:

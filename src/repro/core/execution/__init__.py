@@ -14,9 +14,18 @@ from repro.core.execution.minibatch_pipeline import (
     PullPushPlan,
     StageTimes,
     p3_plan,
+    pipelined_wall_model,
     run_conventional,
     run_factored,
     run_operator_parallel,
+    run_pipelined,
+)
+from repro.core.execution.pipeline_exchange import (
+    bucketed_all_to_all,
+    bucketed_cap_widths,
+    chunked_overlap,
+    feature_chunks,
+    gathered_table_peak_bytes,
 )
 from repro.core.execution.spmm_models import (
     SPMM_MODELS,

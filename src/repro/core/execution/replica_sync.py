@@ -30,6 +30,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.execution.pipeline_exchange import (
+    bucketed_all_to_all,
+    bucketed_cap_widths,
+    bucketed_send_table,
+    chunked_overlap,
+    halo_slot,
+    zero_pad_row,
+)
 from repro.core.partition.vertex_layout import VertexCutLayout
 
 REPLICA_EXECUTIONS = ("broadcast", "ring", "p2p")
@@ -56,11 +64,15 @@ def _vertex_replica_tables(lay: VertexCutLayout):
 
 
 def build_replica_sync_plan(lay: VertexCutLayout, masters: np.ndarray,
-                            execution: str) -> Dict:
+                            execution: str, buckets: int = 1) -> Dict:
     """Static exchange plan for one collective family.  Every returned dict
     carries ``rows_per_layer``: the TRUE number of replica rows that cross
     the wire per GNN layer (padding excluded) — the engine's CommStats
-    accounting and the standalone cost model must both reproduce it."""
+    accounting and the standalone cost model must both reproduce it.
+
+    ``buckets`` > 1 splits the p2p send caps (c1/c2, the max pairwise need)
+    into power-of-two installments so each lowered all_to_all operand is
+    ~``buckets``x smaller (PR 3 follow-up); the wire rows are unchanged."""
     if execution not in REPLICA_EXECUTIONS:
         raise ValueError(f"execution must be one of {REPLICA_EXECUTIONS}")
     k, nv, Rm = lay.k, lay.nv, lay.Rm
@@ -101,11 +113,9 @@ def build_replica_sync_plan(lay: VertexCutLayout, masters: np.ndarray,
             pos1[s, vs[sel]] = np.arange(int(sel.sum()))
             rows1 += int(sel.sum())
     c1 = max(1, max((len(x) for row in need1 for x in row), default=1))
-    send1 = np.zeros((k, k, c1), np.int32)
-    for s in range(k):
-        for d in range(k):
-            send1[s, d, : len(need1[s][d])] = need1[s][d]
-    pad1 = nv + k * c1
+    w1 = bucketed_cap_widths(c1, buckets)
+    send1 = bucketed_send_table(need1, k, w1)
+    pad1 = nv + len(w1) * k * w1[0]
     gather_ids = np.full((k, nv, Rm), pad1, np.int32)
     gather_mask = np.zeros((k, nv, Rm), np.float32)
     for d in range(k):
@@ -118,7 +128,8 @@ def build_replica_sync_plan(lay: VertexCutLayout, masters: np.ndarray,
             s = rep_part[mv, r]
             valid = s >= 0
             ssafe = np.clip(s, 0, k - 1)
-            idx = np.where(s == d, msl, nv + ssafe * c1 + pos1[ssafe, mv])
+            idx = np.where(s == d, msl,
+                           halo_slot(pos1[ssafe, mv], ssafe, w1[0], k, nv))
             gather_ids[d, msl[valid], r] = idx[valid]
             gather_mask[d, msl[valid], r] = 1.0
     # phase 2 (scatter): each master ships the finished aggregate back to the
@@ -150,11 +161,9 @@ def build_replica_sync_plan(lay: VertexCutLayout, masters: np.ndarray,
             pos2[dd, vss[sel]] = np.arange(int(sel.sum()))
             rows2 += int(sel.sum())
     c2 = max(1, max((len(x) for row in need2 for x in row), default=1))
-    send2 = np.zeros((k, k, c2), np.int32)
-    for m in range(k):
-        for d in range(k):
-            send2[m, d, : len(need2[m][d])] = need2[m][d]
-    pad2 = nv + k * c2
+    w2 = bucketed_cap_widths(c2, buckets)
+    send2 = bucketed_send_table(need2, k, w2)
+    pad2 = nv + len(w2) * k * w2[0]
     scatter_ids = np.full((k, nv), pad2, np.int32)
     for d in range(k):
         pres = vert_ids[d] < V
@@ -164,56 +173,74 @@ def build_replica_sync_plan(lay: VertexCutLayout, masters: np.ndarray,
         own = m == d
         scatter_ids[d, slots[own]] = slots[own]
         rem = ~own
-        scatter_ids[d, slots[rem]] = (nv + m[rem] * c2
-                                      + pos2[d, vs[rem]]).astype(np.int32)
+        scatter_ids[d, slots[rem]] = halo_slot(
+            pos2[d, vs[rem]], m[rem], w2[0], k, nv).astype(np.int32)
     return dict(execution=execution, send1=send1, gather_ids=gather_ids,
                 gather_mask=gather_mask, send2=send2,
-                scatter_ids=scatter_ids, rows_per_layer=rows1 + rows2)
+                scatter_ids=scatter_ids, rows_per_layer=rows1 + rows2,
+                caps=(c1, c2))  # pre-bucketing max pairwise needs
 
 
 def replica_combine(execution: str, partial: jnp.ndarray, plan: Dict, *,
-                    axis: str, k: int, ell_fn: Callable) -> jnp.ndarray:
+                    axis: str, k: int, ell_fn: Callable,
+                    num_chunks: int = 1) -> jnp.ndarray:
     """Device-local (under shard_map) replica combine: partial [nv, D] ->
     full per-slot neighbor sums [nv, D].  ``plan`` holds this device's slice
     of the static tables; ``ell_fn(ids, mask, table)`` is the masked-gather
-    reduction (the engine passes its Pallas ELL kernel)."""
-    D = partial.shape[1]
-    zero = jnp.zeros((1, D), partial.dtype)
+    reduction (the engine passes its Pallas ELL kernel).
+
+    ``num_chunks`` > 1 feature-chunks the broadcast/p2p exchange (see
+    `pipeline_exchange.chunked_overlap`): the collective for chunk c+1 is
+    issued while chunk c's combine computes, and only two chunk-sized
+    gathered tables are ever live."""
+
     if execution == "broadcast":
-        full = jax.lax.all_gather(partial, axis, axis=0, tiled=True)
-        table = jnp.concatenate([full, zero], 0)
-        return ell_fn(plan["rep_ids"], plan["rep_mask"], table)
+        def exchange(pc):
+            full = jax.lax.all_gather(pc, axis, axis=0, tiled=True)
+            return jnp.concatenate([full, zero_pad_row(pc)], 0)
+
+        return chunked_overlap(
+            partial, num_chunks, exchange,
+            lambda table: ell_fn(plan["rep_ids"], plan["rep_mask"], table))
     if execution == "ring":
         me = jax.lax.axis_index(axis)
 
         def ring_step(carry, r):
-            acc, h_cur = carry
+            acc, tab_cur = carry
             # permute FIRST, then accumulate: exactly k-1 ppermute rounds,
-            # matching the plan's rows_per_layer = k*(k-1)*nv wire accounting
-            h_cur = jax.lax.ppermute(
-                h_cur, axis, [(i, (i - 1) % k) for i in range(k)])
+            # matching the plan's rows_per_layer = k*(k-1)*nv wire accounting.
+            # The zero pad row rides along in the rotating table (hoisted out
+            # of the scan: every device's appended row is zero, so rotation
+            # keeps slot nv a zero row).
+            tab_cur = jax.lax.ppermute(
+                tab_cur, axis, [(i, (i - 1) % k) for i in range(k)])
             owner = (me + r) % k
             ids_r = jnp.take(plan["ring_ids"], owner, axis=0)  # [nv]
-            table = jnp.concatenate([h_cur, zero], 0)
-            acc = acc + jnp.take(table, ids_r, axis=0)
-            return (acc, h_cur), None
+            acc = acc + jnp.take(tab_cur, ids_r, axis=0)
+            return (acc, tab_cur), None
 
-        table0 = jnp.concatenate([partial, zero], 0)
+        table0 = jnp.concatenate([partial, zero_pad_row(partial)], 0)
         acc0 = jnp.take(table0, jnp.take(plan["ring_ids"], me, axis=0), axis=0)
-        (acc, _), _ = jax.lax.scan(ring_step, (acc0, partial),
+        (acc, _), _ = jax.lax.scan(ring_step, (acc0, table0),
                                    jnp.arange(1, k))
         return acc
-    # p2p: gather partials at masters, combine, scatter aggregates back
-    c1 = plan["send1"].shape[-1]
-    c2 = plan["send2"].shape[-1]
-    send = partial[plan["send1"].reshape(-1)].reshape(k, c1, D)
-    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
-    table = jnp.concatenate([partial, recv.reshape(k * c1, D), zero], 0)
-    agg_m = ell_fn(plan["gather_ids"], plan["gather_mask"], table)
-    send_b = agg_m[plan["send2"].reshape(-1)].reshape(k, c2, D)
-    recv_b = jax.lax.all_to_all(send_b, axis, split_axis=0, concat_axis=0)
-    table2 = jnp.concatenate([agg_m, recv_b.reshape(k * c2, D), zero], 0)
-    return jnp.take(table2, plan["scatter_ids"], axis=0)
+
+    # p2p: gather partials at masters, combine, scatter aggregates back.
+    # Phase-1 installment all_to_alls are issued one chunk ahead of the
+    # master combine; phase 2 rides inside the consumer (it depends on the
+    # combined aggregate, so it cannot be hoisted ahead of it).
+    def exchange(pc):
+        return pc, bucketed_all_to_all(pc, plan["send1"], axis, k)
+
+    def consume(carry):
+        pc, recv = carry
+        table = jnp.concatenate([pc, recv, zero_pad_row(pc)], 0)
+        agg_m = ell_fn(plan["gather_ids"], plan["gather_mask"], table)
+        recv_b = bucketed_all_to_all(agg_m, plan["send2"], axis, k)
+        table2 = jnp.concatenate([agg_m, recv_b, zero_pad_row(pc)], 0)
+        return jnp.take(table2, plan["scatter_ids"], axis=0)
+
+    return chunked_overlap(partial, num_chunks, exchange, consume)
 
 
 def reference_combine(partial: jnp.ndarray, vert_ids: jnp.ndarray,

@@ -140,6 +140,36 @@ def replica_sync_device_bytes(layout, masters: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Communication/compute overlap (§6-§7 pipelining)
+# ---------------------------------------------------------------------------
+
+
+def overlapped_step_time(comm_s: float, compute_s: float,
+                         num_chunks: int) -> float:
+    """Per-layer step time with the exchange split into ``num_chunks``
+    feature chunks and the collective for chunk c+1 issued while chunk c's
+    aggregation computes (pipeline_exchange.chunked_overlap).
+
+    Monolithic (C=1) pays comm + compute serially.  Pipelined, the first
+    chunk's collective and the last chunk's multiply can't hide, but the
+    C-1 interior chunks overlap entirely:
+
+        t(C) = (comm + compute)/C + max(comm, compute) * (C-1)/C
+
+    which approaches max(comm, compute) as C grows — the §6.1 overlap
+    ideal.  A LOWER bound for a measured step (per-chunk launch/collective
+    setup overheads only add); the pipelined-epoch analog over the
+    sample/extract/train lanes is
+    `execution.minibatch_pipeline.pipelined_wall_model`, cross-checked
+    against the measured lanes in the pipeline test tier."""
+    C = max(1, int(num_chunks))
+    comm_s, compute_s = float(comm_s), float(compute_s)
+    if C == 1:
+        return comm_s + compute_s
+    return (comm_s + compute_s) / C + max(comm_s, compute_s) * (C - 1) / C
+
+
+# ---------------------------------------------------------------------------
 # Learning-based (ROC): t(l, G) = sum_i w_i x_i(G)
 # ---------------------------------------------------------------------------
 

@@ -16,6 +16,7 @@ from repro.core.sampling.distributed import (
     pull_based_sample,
     skewed_weighted_sample,
 )
+from repro.core.sampling.prefetch import PrefetchWorker
 from repro.core.sampling.partition_batch import (
     LLCGSchedule,
     expanded_partition_minibatch,

@@ -81,19 +81,21 @@ def ell_spmm_pallas(ids: jnp.ndarray, mask: jnp.ndarray, H: jnp.ndarray, *,
 # mask are graph structure (non-differentiable).
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _ell_spmm_vjp(normalize, interpret, ids, mask, H):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _ell_spmm_vjp(normalize, interpret, row_block, feat_block, ids, mask, H):
     return ell_spmm_pallas(ids, mask, H, normalize=normalize,
-                           interpret=interpret)
+                           interpret=interpret, row_block=row_block,
+                           feat_block=feat_block)
 
 
-def _ell_spmm_fwd(normalize, interpret, ids, mask, H):
+def _ell_spmm_fwd(normalize, interpret, row_block, feat_block, ids, mask, H):
     out = ell_spmm_pallas(ids, mask, H, normalize=normalize,
-                          interpret=interpret)
+                          interpret=interpret, row_block=row_block,
+                          feat_block=feat_block)
     return out, (ids, mask, H.shape[0])
 
 
-def _ell_spmm_bwd(normalize, interpret, res, ct):
+def _ell_spmm_bwd(normalize, interpret, row_block, feat_block, res, ct):
     ids, mask, N = res
     V, K = ids.shape
     ctn = ct.astype(jnp.float32)
@@ -113,13 +115,17 @@ _ell_spmm_vjp.defvjp(_ell_spmm_fwd, _ell_spmm_bwd)
 
 
 def ell_spmm(ids: jnp.ndarray, mask: jnp.ndarray, H: jnp.ndarray, *,
-             normalize: bool = True, interpret: bool = False) -> jnp.ndarray:
+             normalize: bool = True, interpret: bool = False,
+             row_block: int = 128, feat_block: int = 128) -> jnp.ndarray:
     """Differentiable ELL SpMM: Pallas forward, scatter-add transpose backward.
 
     out[v] = sum_k mask[v,k] * H[ids[v,k]]  (/ max(deg[v], 1) if normalize)
 
     ids/mask may be traced values (e.g. selected per ring step inside a scan);
-    only H carries gradient.
+    only H carries gradient.  ``row_block``/``feat_block`` tune the Pallas
+    grid (both clipped to the operand) — the chunk-friendly call path: a
+    feature-chunked exchange calling with a narrow table keeps full-width
+    row blocks instead of degrading the grid.
     """
-    return _ell_spmm_vjp(normalize, interpret, ids,
+    return _ell_spmm_vjp(normalize, interpret, row_block, feat_block, ids,
                          mask.astype(jnp.float32), H)

@@ -228,6 +228,17 @@ def main():
     ap.add_argument("--engine-cache-capacity", type=int, default=4096,
                     help="engine mini-batch: cached remote feature rows "
                     "per device (static_degree policy)")
+    ap.add_argument("--engine-exchange-chunks", type=int, default=1,
+                    help="engine: feature-dim chunks for comm/compute "
+                    "overlap in the exchange — chunk c+1's collective is "
+                    "issued while chunk c feeds the ELL multiply; peak "
+                    "gathered-table bytes drop ~chunks/2 x (asserted >= 2x "
+                    "on the 256-chip broadcast lowering with >= 4 chunks)")
+    ap.add_argument("--engine-p2p-buckets", type=int, default=1,
+                    help="engine: power-of-two installments splitting the "
+                    "p2p all_to_all send caps; the lowered all_to_all "
+                    "buffer shrinks ~buckets x (asserted >= 2x when the cap "
+                    "actually splits)")
     ap.add_argument("--bench-partition-families", action="store_true",
                     help="emit BENCH_partition_families.json (edge-cut halo "
                     "vs vertex-cut replica-sync bytes across graphs x chips) "
@@ -285,7 +296,9 @@ def main():
             fanouts=(4,) * cfg.num_layers,
             layer_sizes=(2 * args.engine_batch_size,) * cfg.num_layers,
             cache_policy="static_degree" if minibatch else "none",
-            cache_capacity=args.engine_cache_capacity if minibatch else 0)
+            cache_capacity=args.engine_cache_capacity if minibatch else 0,
+            exchange_chunks=args.engine_exchange_chunks,
+            p2p_buckets=args.engine_p2p_buckets)
         eng = DistGNNEngine(g, mesh=mesh1d, cfg=ecfg)
         if minibatch and args.engine_exec == "p2p":
             # tightened halo cap (PR 2 follow-up): the all_to_all buffer is
@@ -338,6 +351,60 @@ def main():
                      human_bytes(halo), human_bytes(halo_max))
         compiled = (eng.lower_minibatch_step() if minibatch
                     else eng.lower_step()).compile()
+        # --- pipelined-exchange artifacts (ISSUE 4): chunked gathered-table
+        # peak + bucketed all_to_all buffer, measured on the LOWERED module
+        from repro.core.execution.pipeline_exchange import (
+            gathered_table_peak_bytes,
+        )
+        from repro.launch.hlo_analysis import max_collective_buffer_bytes
+
+        C = args.engine_exchange_chunks
+        Dmax = (g.features.shape[1] if minibatch
+                else max(eng.dims[:-1]))
+        if C > 1 and args.engine_exec == "broadcast":
+            mono = gathered_table_peak_bytes(eng.Vp, Dmax, 1)
+            chunked = gathered_table_peak_bytes(eng.Vp, Dmax, C)
+            red = mono / chunked
+            ag = max_collective_buffer_bytes(compiled.as_text(), "all-gather")
+            engine_extra.update(
+                exchange_chunks=C,
+                gathered_table_peak_bytes_monolithic=mono,
+                gathered_table_peak_bytes_chunked=chunked,
+                gathered_table_reduction=red,
+                max_all_gather_buffer_bytes=ag)
+            log.info("chunked broadcast exchange (%d chunks): gathered-table "
+                     "peak %s -> %s (%.1fx smaller); largest lowered "
+                     "all-gather buffer %s", C, human_bytes(mono),
+                     human_bytes(chunked), red, human_bytes(ag))
+            if C >= 4 and chips >= 256:
+                assert red >= 2, (
+                    f"chunked broadcast exchange must cut peak gathered-table "
+                    f"bytes >= 2x at 256-chip lowering: {red:.2f}x")
+        if args.engine_p2p_buckets > 1 and args.engine_exec == "p2p":
+            cap_mono = w = None
+            if args.engine_family == "vertex_cut":
+                cap_mono = max(eng._vc_p2p_caps)
+                w = max(eng._vc_plan["send1"].shape[-1],
+                        eng._vc_plan["send2"].shape[-1])
+            elif not minibatch:
+                cap_mono, w = eng.cap, eng.p2p_widths[0]
+            if cap_mono is not None:
+                mono_buf = chips * cap_mono * Dmax * 4
+                a2a = max_collective_buffer_bytes(
+                    compiled.as_text(), "all-to-all")
+                engine_extra.update(
+                    p2p_buckets=args.engine_p2p_buckets,
+                    p2p_cap_monolithic=int(cap_mono),
+                    p2p_cap_bucketed=int(w),
+                    all_to_all_buffer_bytes_monolithic=mono_buf,
+                    max_all_to_all_buffer_bytes=a2a)
+                log.info("bucketed p2p caps: %d -> %d rows/pair; lowered "
+                         "all_to_all buffer %s (monolithic %s)", cap_mono, w,
+                         human_bytes(a2a), human_bytes(mono_buf))
+                if 2 * w <= cap_mono:  # the cap actually split
+                    assert a2a * 2 <= mono_buf, (
+                        f"bucketed p2p caps must shrink the lowered "
+                        f"all_to_all buffer >= 2x: {a2a} vs {mono_buf}")
         V = eng.Vp
         K = eng.K
     elif args.protocol == "p2p":
@@ -381,7 +448,7 @@ def main():
                   analytic_flops=fl, model_flops_6nd=fl,
                   hbm_traffic_bytes_per_chip=(V * D * 4 * 3) / chips,
                   roofline=rl.as_dict())
-    if args.protocol == "engine" and args.engine_family == "vertex_cut":
+    if args.protocol == "engine" and engine_extra:
         result.update(engine_extra)
     os.makedirs(args.out, exist_ok=True)
     suffix = f"__{args.protocol}" if args.protocol != "broadcast" else ""

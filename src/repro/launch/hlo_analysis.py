@@ -160,6 +160,15 @@ def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
     return sum(by_kind.values()), dict(by_kind)
 
 
+def max_collective_buffer_bytes(hlo_text: str, kind: str) -> int:
+    """Largest single lowered buffer (shape bytes of one op execution) of a
+    collective kind — the peak per-op buffer the schedule materializes, e.g.
+    the all-to-all send buffer that bucketed p2p caps shrink or the
+    all-gather table that feature chunking shrinks."""
+    return max((r.bytes_per_exec for r in parse_collectives(hlo_text)
+                if r.kind == kind), default=0)
+
+
 # ---------------------------------------------------------------------------
 # Roofline
 # ---------------------------------------------------------------------------
