@@ -34,6 +34,7 @@ from repro.core.engine import (
     BATCHING_MODES,
     ENGINE_CACHE_POLICIES,
     EXECUTION_MODELS,
+    GNN_MODELS,
     PROTOCOLS,
     DistGNNEngine,
     EngineConfig,
@@ -49,6 +50,7 @@ def run_engine(args, g):
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     layer_sizes = tuple(int(x) for x in args.layer_sizes.split(","))
     cfg = EngineConfig(execution=args.exec, protocol=args.protocol,
+                       model=args.model,
                        partition_family=args.partition_family,
                        partitioner=args.partition,
                        vertex_cut=args.vertex_cut, lr=args.lr,
@@ -72,7 +74,8 @@ def run_engine(args, g):
            f"(replication={eng.layout.replication_factor():.2f}, nv={eng.nv})"
            if args.partition_family == "vertex_cut"
            else f"partition={args.partition}")
-    print(f"engine: exec={args.exec} protocol={args.protocol} "
+    print(f"engine: model={args.model} exec={args.exec} "
+          f"protocol={args.protocol} "
           f"batching={args.batching} {cut} k={k} "
           f"(nb={eng.nb}, halo cap={getattr(eng, 'cap', '-')}"
           + (f", frontier caps={eng.caps} fcap={eng.fcap}" if minibatch else "")
@@ -173,6 +176,11 @@ def main():
                     help=f"engine: {EXECUTION_MODELS} (default p2p); "
                     f"legacy: {list(SPMM_MODELS)} (default spmm_1d)")
     ap.add_argument("--protocol", default="sync", choices=list(PROTOCOLS))
+    ap.add_argument("--model", default="gcn", choices=list(GNN_MODELS),
+                    help="engine GNN layer program (§3 model axis): gcn | "
+                    "sage | gat | gin — gat runs distributed edge-wise "
+                    "attention (SDDMM logits + masked segment-softmax; "
+                    "two-pass replica sync under vertex_cut)")
     ap.add_argument("--batching", default="full_graph",
                     choices=list(BATCHING_MODES),
                     help="engine §5 batch generation: full_graph partition "

@@ -71,6 +71,28 @@ if (os.cpu_count() or 1) >= 2:  # overlap needs a core for the sampler lane
 print(f"smoke OK pipelined node_wise broadcast+chunks: bitwise == blocking, "
       f"wall {t2.wall:.3f}s vs lanes {t2.busy():.3f}s")
 EOF
+    # 4-device MODEL-AXIS smoke: SAGE (edge-cut p2p — self features resident)
+    # and GAT (vertex-cut broadcast — SDDMM logits + two-pass max/sum replica
+    # softmax sync) vs their extended single-device oracles
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
+import jax
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+
+g = sbm_graph(96, num_blocks=4, p_in=0.08, p_out=0.01, seed=0)
+for model, kw in (("sage", dict(execution="p2p")),
+                  ("gat", dict(execution="broadcast",
+                               partition_family="vertex_cut",
+                               vertex_cut="cartesian2d"))):
+    eng = DistGNNEngine(g, cfg=EngineConfig(model=model, hidden=16, lr=0.3,
+                                            **kw))
+    ld, _ = eng.train(3)
+    lr_, _ = eng.train(3, reference=True)
+    err = max(abs(a - b) for a, b in zip(ld, lr_))
+    assert err < 1e-4, (model, err)
+    assert eng._jit_step._cache_size() == 1
+    print(f"smoke OK model={model} {kw}: oracle err {err:.2e}, 1 compile")
+EOF
     # 4-device VERTEX-CUT engine smoke: cartesian2d 2x2 cut, sync protocol,
     # replica-sync p2p GAS exchange vs the oracle + bytes accounting
     XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'

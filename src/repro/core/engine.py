@@ -1,6 +1,20 @@
 """DistGNNEngine: the survey's four technique families composed into ONE
 jitted shard_map training step.
 
+  model (§3)       a selectable `model` axis — {gcn, sage, gat, gin} — the
+                   GNN layer program every jitted path (full-graph and
+                   mini-batch, edge-cut and vertex-cut, all execution
+                   models) runs.  The survey's challenges are
+                   model-dependent and the axis makes that concrete:
+                   sage/gin's self-feature terms read the RESIDENT block
+                   (zero extra wire bytes over gcn); gat's edge-wise
+                   attention changes what crosses the wire — the exchange
+                   ships TRANSFORMED rows plus a per-row attention
+                   coefficient (a_src . Hw), per-edge logits ride the
+                   Pallas SDDMM kernel over the ELL structure, and the
+                   masked segment-softmax keeps pad slots inert; under
+                   vertex_cut the softmax normalizer is exactified across
+                   replicas by a two-pass (max, then sum) replica sync.
   partition (§4)   a selectable `partition_family` axis:
                      edge_cut   — a partitioner assigns VERTICES to devices;
                                   the engine relabels vertices so device d
@@ -101,11 +115,13 @@ from repro.core.execution.pipeline_exchange import (
 from repro.core.execution.replica_sync import (
     build_replica_sync_plan,
     reference_combine,
+    reference_combine_max,
     replica_combine,
+    replica_combine_max,
 )
 from repro.core.graph import Graph
 from repro.core.models.gnn import init_gnn_params, padded_minibatch_forward
-from repro.core.partition.cost_models import FEAT_BYTES
+from repro.core.partition.cost_models import FEAT_BYTES, model_exchange_widths
 from repro.core.partition.edge_cut import PARTITIONERS, Partition
 from repro.core.partition.vertex_cut import VERTEX_CUTS
 from repro.core.partition.vertex_layout import build_vertex_layout
@@ -124,9 +140,12 @@ from repro.core.sampling.samplers import (
     pad_minibatch,
     subgraph_sample,
 )
-from repro.kernels.ell_spmm import ell_spmm
+from repro.kernels.ell_spmm import ell_attend, ell_spmm
+from repro.kernels.ref import sddmm_ref
+from repro.kernels.sddmm import sddmm_ell
 
 EXECUTION_MODELS = ("broadcast", "ring", "p2p")
+GNN_MODELS = ("gcn", "sage", "gat", "gin")
 PROTOCOLS = ("sync", "epoch_fixed", "epoch_adaptive", "variation")
 BATCHING_MODES = ("full_graph", "node_wise", "layer_wise", "subgraph")
 PARTITION_FAMILIES = ("edge_cut", "vertex_cut")
@@ -137,6 +156,12 @@ ENGINE_CACHE_POLICIES = ("none",) + tuple(CACHE_POLICIES)
 class EngineConfig:
     execution: str = "p2p"  # broadcast | ring | p2p
     protocol: str = "sync"  # sync | epoch_fixed | epoch_adaptive | variation
+    model: str = "gcn"  # gcn | sage | gat | gin — the GNN layer program.
+    #   sage/gin read their self features from the RESIDENT block (never on
+    #   the wire); gat ships transformed rows + the per-row attention
+    #   coefficient (a_src . Hw) through the exchange and runs a masked
+    #   segment-softmax over the ELL slots (for vertex_cut: a two-pass
+    #   max-then-sum replica sync so the normalizer is exact across replicas)
     partition_family: str = "edge_cut"  # edge_cut | vertex_cut
     partitioner: str = "metis_like"  # edge_cut: any key of PARTITIONERS
     vertex_cut: str = "cartesian2d"  # vertex_cut: any key of VERTEX_CUTS
@@ -151,9 +176,10 @@ class EngineConfig:
     #   with the ELL multiply of chunk c (1 = monolithic exchange)
     p2p_buckets: int = 1  # power-of-two installments splitting the p2p
     #   all_to_all send caps (1 = single max-pairwise-need buffer); applies
-    #   to the full-graph halo plan and the replica-sync plan — the
-    #   mini-batch frontier fetch keeps a single fcap buffer (its bucket
-    #   occupancy would vary per batch; ROADMAP follow-up)
+    #   to the full-graph halo plan, the replica-sync plan, AND the
+    #   mini-batch frontier fetch (per-batch occupancy rides a static
+    #   bucket layout: row t of a pair's need list always lands in
+    #   installment t // w, so shapes never change across batches)
     prefetch_depth: int = 2  # batches the pipelined epoch samples ahead
     hidden: int = 32
     num_layers: int = 2
@@ -176,6 +202,8 @@ class DistGNNEngine:
         self.cfg = cfg = cfg or EngineConfig()
         if cfg.execution not in EXECUTION_MODELS:
             raise ValueError(f"execution must be one of {EXECUTION_MODELS}")
+        if cfg.model not in GNN_MODELS:
+            raise ValueError(f"model must be one of {GNN_MODELS}")
         if cfg.protocol not in PROTOCOLS:
             raise ValueError(f"protocol must be one of {PROTOCOLS}")
         if cfg.batching not in BATCHING_MODES:
@@ -230,10 +258,15 @@ class DistGNNEngine:
                      + [cfg.hidden] * (cfg.num_layers - 1) + [num_classes])
         if cfg.partition_family == "vertex_cut":
             # wire bytes of one distributed step: every layer's replica sync
-            # ships `rows_per_layer` rows at that layer's input width — the
-            # same accounting as cost_models.replica_sync_bytes_per_step
-            self._vc_bytes_per_step = (self._vc_rows_per_layer
-                                       * int(sum(self.dims[:-1])) * FEAT_BYTES)
+            # ships `rows_per_layer` rows at that layer's model-dependent
+            # exchange width (input width for gcn/sage/gin; transformed width
+            # + attention coefficient + the max pass for gat) — the same
+            # accounting as cost_models.replica_sync_bytes_per_step
+            self._vc_bytes_per_step = (
+                self._vc_rows_per_layer
+                * int(sum(model_exchange_widths(cfg.model, self.dims,
+                                                "vertex_cut")))
+                * FEAT_BYTES)
         self._step = None
         self._ref_step = None
         self._mb_step = None
@@ -431,10 +464,52 @@ class DistGNNEngine:
                             interpret=self.interpret)
         return (mask[..., None] * jnp.take(table, ids, axis=0)).sum(1)
 
+    def _ell_attend(self, ids, w, table):
+        """sum_k w[v,k] * table[ids[v,k]] with gradients to BOTH w and table —
+        the GAT aggregation (`_ell`'s VJP treats the mask as structure, but
+        attention coefficients are a function of the params)."""
+        if self.cfg.use_pallas:
+            return ell_attend(ids, w, table, interpret=self.interpret)
+        return (w[..., None] * jnp.take(table, ids, axis=0)).sum(1)
+
+    def _sddmm(self, ids, mask, table, a_src, a_dst):
+        """Masked GAT edge logits over the ELL structure (Pallas SDDMM or its
+        jnp oracle); dst row v must be table row v (prefix contract)."""
+        if self.cfg.use_pallas:
+            return sddmm_ell(ids, mask, table, a_src, a_dst,
+                             interpret=self.interpret)
+        return sddmm_ref(ids, mask, table, a_src, a_dst)
+
     @staticmethod
-    def _layer(p_l, agg, h_self, last: bool):
-        z = (agg + h_self) @ p_l["w"] + p_l["b"]
+    def _combine(model, p_l, nbr, h_self, last: bool):
+        """Model-specific combine of the aggregated neighbor rows with the
+        RESIDENT self rows — shared verbatim by the distributed step and the
+        single-device oracle (gat has its own program: the aggregation
+        itself is attention-weighted).  sage/gin read h_self straight from
+        the local block, so the model axis adds ZERO exchange bytes over
+        gcn — the §4 locality argument the cost models encode."""
+        if model == "gcn":
+            z = (nbr + h_self) @ p_l["w"] + p_l["b"]
+        elif model == "sage":
+            z = h_self @ p_l["w_self"] + nbr @ p_l["w_nbr"] + p_l["b"]
+        elif model == "gin":
+            z = jax.nn.relu(
+                ((1.0 + p_l["eps"]) * h_self + nbr) @ p_l["w1"]) @ p_l["w2"]
+        else:
+            raise ValueError(model)
         return z if last else jax.nn.relu(z)
+
+    @staticmethod
+    def _gat_softmax(e_masked):
+        """Masked segment-softmax pieces over ELL slots: (weights, den) from
+        logits already masked to -1e30.  Rows with no real slots get
+        den == 0 (the caller falls back to the self row — the same contract
+        as the dense `gnn_layer` isolated-row fallback).  The stabilizer is
+        stop_gradient'd: softmax is shift-invariant, so treating it as a
+        constant gives the exact gradient without transposing the max."""
+        m = jax.lax.stop_gradient(jnp.max(e_masked, axis=1, keepdims=True))
+        pw = jnp.exp(e_masked - m) * (e_masked > -1e29)
+        return pw, pw.sum(1, keepdims=True)
 
     def _protocol_kwargs(self):
         c = self.cfg
@@ -446,7 +521,7 @@ class DistGNNEngine:
 
     def init_state(self, key=None) -> Dict:
         key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
-        params = init_gnn_params("gcn", self.dims, key)
+        params = init_gnn_params(self.cfg.model, self.dims, key)
         L = len(self.dims) - 1
         state = dict(
             params=params,
@@ -497,11 +572,7 @@ class DistGNNEngine:
                                   num_chunks=C)
             return agg / deg
         if self.cfg.execution == "broadcast":
-            def exchange(hc):
-                h_full = jax.lax.all_gather(hc, ax, axis=0, tiled=True)
-                return jnp.concatenate([h_full, zero_pad_row(hc)], 0)
-
-            agg = chunked_overlap(h_local, C, exchange,
+            agg = chunked_overlap(h_local, C, self._edge_exchange_fn(consts_local),
                                   lambda table: self._ell(ids, mask, table))
             return agg / deg
         if self.cfg.execution == "ring":
@@ -526,15 +597,137 @@ class DistGNNEngine:
             # so the old per-round division burned k-1 extra divides/layer
             return acc / deg
         # p2p halo exchange (bucketed installment all_to_alls)
-        send_rows = consts_local["send_rows"]  # [B, k, w]
-
-        def exchange(hc):
-            recv = bucketed_all_to_all(hc, send_rows, ax, k)
-            return jnp.concatenate([hc, recv, zero_pad_row(hc)], 0)
-
-        agg = chunked_overlap(h_local, C, exchange,
+        agg = chunked_overlap(h_local, C, self._edge_exchange_fn(consts_local),
                               lambda table: self._ell(ids, mask, table))
         return agg / deg
+
+    def _edge_exchange_fn(self, consts_local):
+        """The edge-cut broadcast/p2p table assembly as a reusable closure:
+        hc [nb, Dc] -> gather table (+ the one zero pad row).  Width-agnostic,
+        so the GAT layer reuses it for both the attention-coefficient column
+        and the chunked Hw exchange."""
+        ax, k = self.axis, self.k
+        if self.cfg.execution == "broadcast":
+            def exchange(hc):
+                h_full = jax.lax.all_gather(hc, ax, axis=0, tiled=True)
+                return jnp.concatenate([h_full, zero_pad_row(hc)], 0)
+        else:
+            send_rows = consts_local["send_rows"]  # [B, k, w]
+
+            def exchange(hc):
+                recv = bucketed_all_to_all(hc, send_rows, ax, k)
+                return jnp.concatenate([hc, recv, zero_pad_row(hc)], 0)
+        return exchange
+
+    def _model_layer_local(self, p_l, H, consts_local, last: bool):
+        """One model-aware layer of the distributed forward (device-local
+        under shard_map): gat runs its own attention program; everyone else
+        is exchange-aggregate + the shared `_combine`."""
+        if self.cfg.model == "gat":
+            return self._gat_layer_local(p_l, H, consts_local, last)
+        nbr = self._exchange_and_aggregate(H, consts_local)
+        return self._combine(self.cfg.model, p_l, nbr, H, last)
+
+    def _gat_layer_local(self, p_l, H, consts_local, last: bool):
+        """Distributed GAT layer (survey §3's edge-wise model through the §6
+        exchange): per-edge logits over the ELL structure, a masked
+        segment-softmax over the neighbor slots, and an attention-weighted
+        gather-sum — pad slots stay inert (zero weight) and degree-0 rows
+        fall back to their own transformed row, the same contract as the
+        dense `gnn_layer`.
+
+        What crosses the wire per layer (the model-aware cost-model terms):
+          edge_cut   the TRANSFORMED rows Hw (d_out wide) plus ONE
+                     attention-coefficient column a_src . Hw — receivers
+                     combine it with their local a_dst . Hw instead of
+                     re-deriving neighbor dot products;
+          vertex_cut a two-pass replica sync: a width-1 MAX combine of the
+                     per-replica logit maxima (floored at 0 — any upper
+                     bound is a valid softmax shift, and the floor makes
+                     pad-slot zeros harmless identities), then the ordinary
+                     sum combine of [exp-weighted partial rows | partial
+                     normalizer] at width d_out + 1, so every replica ends
+                     with the bitwise-same exact softmax normalizer."""
+        c = self.cfg
+        ax, k = self.axis, self.k
+        ids, mask = consts_local["ids"], consts_local["mask"]
+        Hw = H @ p_l["w"]
+        if c.partition_family == "vertex_cut":
+            table = jnp.concatenate([Hw, zero_pad_row(Hw)], 0)
+            e = self._sddmm(ids, mask, table, p_l["a_src"], p_l["a_dst"])
+            m_loc = jnp.maximum(jnp.max(e, axis=1, keepdims=True), 0.0)
+            M = jax.lax.stop_gradient(replica_combine_max(
+                c.execution, m_loc, consts_local, axis=ax, k=k))
+            pw = jnp.exp(e - M) * (e > -1e29)
+            part = jnp.concatenate(
+                [self._ell_attend(ids, pw, table),
+                 pw.sum(1, keepdims=True)], 1)
+            comb = replica_combine(c.execution, part, consts_local, axis=ax,
+                                   k=k, ell_fn=self._ell,
+                                   num_chunks=c.exchange_chunks)
+            num, den = comb[:, :-1], comb[:, -1:]
+        elif c.execution == "ring":
+            num, den = self._gat_ring(p_l, Hw, ids, mask)
+        else:  # broadcast / p2p: ship [Hw | a_src . Hw] through the halo
+            exchange = self._edge_exchange_fn(consts_local)
+            s_dst = (Hw @ p_l["a_dst"])[:, None]
+            s_tab = exchange((Hw @ p_l["a_src"])[:, None])
+            s_nbr = jnp.take(s_tab, ids, axis=0)[..., 0]
+            e = jnp.where(mask > 0,
+                          jax.nn.leaky_relu(s_dst + s_nbr, 0.2), -1e30)
+            pw, den = self._gat_softmax(e)
+            num = chunked_overlap(Hw, c.exchange_chunks, exchange,
+                                  lambda T: self._ell_attend(ids, pw, T))
+        z = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), Hw)
+        return z if last else jax.nn.relu(z)
+
+    def _gat_ring(self, p_l, Hw, ids_all, mask_all):
+        """Edge-cut ring GAT: one pass of online softmax (flash-attention
+        style running max + rescale) over the k rotating source blocks — the
+        exact masked softmax without a second max round.  The rotating block
+        carries [Hw | a_src . Hw]; rotation r+1 is issued while rotation r
+        feeds the gather (same double-buffering as the replica-sync ring)."""
+        ax, k, nb = self.axis, self.k, self.nb
+        me = jax.lax.axis_index(ax)
+        s_dst = (Hw @ p_l["a_dst"])[:, None]
+        blk0 = jnp.concatenate([Hw, (Hw @ p_l["a_src"])[:, None]], 1)
+        perm = [(i, (i - 1) % k) for i in range(k)]
+
+        def consume(carry, blk, owner):
+            m, num, den = carry
+            ids_r = jnp.take(ids_all, owner, axis=0)
+            mask_r = jnp.take(mask_all, owner, axis=0)
+            s_nbr = jnp.take(blk[:, -1], ids_r, axis=0)
+            e = jnp.where(mask_r > 0,
+                          jax.nn.leaky_relu(s_dst + s_nbr, 0.2), -1e30)
+            m_new = jax.lax.stop_gradient(
+                jnp.maximum(m, jnp.max(e, axis=1, keepdims=True)))
+            sc = jnp.exp(m - m_new)
+            pw = jnp.exp(e - m_new) * (e > -1e29)
+            num = num * sc + self._ell_attend(ids_r, pw, blk[:, :-1])
+            den = den * sc + pw.sum(1, keepdims=True)
+            return m_new, num, den
+
+        carry = (jnp.full((nb, 1), -1e30, Hw.dtype),
+                 jnp.zeros_like(Hw), jnp.zeros((nb, 1), Hw.dtype))
+        carry = consume(carry, blk0, me)  # round 0: own block, no rotation
+        if k == 1:
+            return carry[1], carry[2]
+        # exactly k-1 ppermute rounds, same prologue/scan/epilogue structure
+        # as replica_sync._ring_combine (the scan-every-round form issued a
+        # k-th rotation whose output was never consumed)
+        blk1 = jax.lax.ppermute(blk0, ax, perm)
+
+        def ring_step(carry_blk, r):
+            carry, blk = carry_blk
+            blk_nxt = jax.lax.ppermute(blk, ax, perm)  # rotation r+1 flies
+            carry = consume(carry, blk, (me + r) % k)  # while r is consumed
+            return (carry, blk_nxt), None
+
+        (carry, blk_last), _ = jax.lax.scan(ring_step, (carry, blk1),
+                                            jnp.arange(1, k - 1))
+        _, num, den = consume(carry, blk_last, (me + k - 1) % k)
+        return num, den
 
     def _forward_local(self, params, hist, age, step, consts_local):
         """Full local forward with protocol mixing; returns (logits_local,
@@ -546,8 +739,8 @@ class DistGNNEngine:
         me = jax.lax.axis_index(ax)
         new_hist, new_age, pushed = [], [], jnp.zeros((), jnp.float32)
         for l, p_l in enumerate(params["layers"]):
-            agg = self._exchange_and_aggregate(H, consts_local)
-            H = self._layer(p_l, agg, H, last=(l == L - 1))
+            H = self._model_layer_local(p_l, H, consts_local,
+                                        last=(l == L - 1))
             if c.protocol != "sync":
                 h_used, h2, a2, rows = block_refresh(
                     c.protocol, hist[l], H, age[l][0], step,
@@ -680,21 +873,50 @@ class DistGNNEngine:
                 self.layout.vert_ids.astype(np.int32))  # [k, nv], pad = V
             Vg = self.g.num_vertices
 
+        def gat_layer_ref(p_l, H, last):
+            """The GAT layer on one device: identical formulas to the
+            distributed path, with the replica combines replaced by their
+            scatter-based references for vertex_cut."""
+            Hw = H @ p_l["w"]
+            table = jnp.concatenate([Hw, jnp.zeros((1, Hw.shape[1]),
+                                                   Hw.dtype)], 0)
+            e = self._sddmm(ids_g, mask, table, p_l["a_src"], p_l["a_dst"])
+            if c.partition_family == "vertex_cut":
+                m_loc = jnp.maximum(jnp.max(e, axis=1, keepdims=True), 0.0)
+                M = jax.lax.stop_gradient(reference_combine_max(
+                    m_loc.reshape(k, nb, 1), vert_ids_ref, Vg
+                ).reshape(Vp, 1))
+                pw = jnp.exp(e - M) * (e > -1e29)
+                part = jnp.concatenate(
+                    [(pw[..., None] * jnp.take(table, ids_g, axis=0)).sum(1),
+                     pw.sum(1, keepdims=True)], 1)
+                comb = reference_combine(part.reshape(k, nb, -1),
+                                         vert_ids_ref, Vg).reshape(Vp, -1)
+                num, den = comb[:, :-1], comb[:, -1:]
+            else:
+                pw, den = self._gat_softmax(e)
+                num = (pw[..., None] * jnp.take(table, ids_g, axis=0)).sum(1)
+            z = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), Hw)
+            return z if last else jax.nn.relu(z)
+
         def forward(params, hist, age, step_i):
             H = X
             new_hist, new_age = [], []
             pushed = jnp.zeros((), jnp.float32)
             for l, p_l in enumerate(params["layers"]):
-                table = jnp.concatenate(
-                    [H, jnp.zeros((1, H.shape[1]), H.dtype)], 0)
-                gathered = (mask[..., None] * jnp.take(table, ids_g, axis=0)
-                            ).sum(1)
-                if c.partition_family == "vertex_cut":
-                    gathered = reference_combine(
-                        gathered.reshape(k, nb, -1), vert_ids_ref, Vg
-                    ).reshape(Vp, -1)
-                agg = gathered / deg
-                H = self._layer(p_l, agg, H, last=(l == L - 1))
+                if c.model == "gat":
+                    H = gat_layer_ref(p_l, H, last=(l == L - 1))
+                else:
+                    table = jnp.concatenate(
+                        [H, jnp.zeros((1, H.shape[1]), H.dtype)], 0)
+                    gathered = (mask[..., None]
+                                * jnp.take(table, ids_g, axis=0)).sum(1)
+                    if c.partition_family == "vertex_cut":
+                        gathered = reference_combine(
+                            gathered.reshape(k, nb, -1), vert_ids_ref, Vg
+                        ).reshape(Vp, -1)
+                    H = self._combine(c.model, p_l, gathered / deg, H,
+                                      last=(l == L - 1))
                 if c.protocol != "sync":
                     h_blocks = H.reshape(k, nb, -1)
                     hist_blocks = hist[l].reshape(k, nb, -1)
@@ -760,6 +982,14 @@ class DistGNNEngine:
         if c.execution == "p2p":
             hops = c.walk_length if c.batching == "subgraph" else c.num_layers
             self.fcap = p2p_frontier_halo_cap(g, self.part, hops, self.caps[0])
+            # power-of-two installments over the measured halo cap (the PR-4
+            # bucketing, applied to the frontier fetch): row t of a pair's
+            # per-batch need list always lands in installment t // w at
+            # offset t % w, so bucket occupancy varies per batch but the
+            # lowered all_to_all operands stay [k, w] — static shapes, ONE
+            # compile, send buffers ~buckets x smaller than the single
+            # monolithic fcap buffer
+            self.fcap_widths = bucketed_cap_widths(self.fcap, c.p2p_buckets)
         D = g.features.shape[1]
         self.Ccap = Ccap = max(int(c.cache_capacity), 1)
         cache_tab = np.zeros((k, Ccap, D), np.float32)
@@ -809,18 +1039,23 @@ class DistGNNEngine:
         w = np.zeros((k, caps[-1]), np.float32)
         adj = [np.zeros((k, caps[l + 1], caps[l]), np.float32)
                for l in range(L)]
+        self_idx = [np.zeros((k, caps[l + 1]), np.int32) for l in range(L)]
         cache_ids = np.full((k, caps[0]), Ccap, np.int32)
         if c.execution == "broadcast":
             bc_ids = np.full((k, caps[0]), Vp, np.int64)
         elif c.execution == "ring":
             ring_ids = np.full((k, k, caps[0]), nb, np.int32)
         else:
-            send_rows = np.zeros((k, k, fcap), np.int32)
-            tab_ids = np.full((k, caps[0]), nb + k * fcap, np.int32)
+            widths = self.fcap_widths
+            B, wdt = len(widths), widths[0]
+            need_lists = [[np.zeros(0, np.int64) for _ in range(k)]
+                          for _ in range(k)]
+            tab_ids = np.full((k, caps[0]), nb + B * k * wdt, np.int32)
         for d, mb in enumerate(mbs):
             padded = pad_minibatch(mb, caps)
             for l in range(L):
                 adj[l][d] = padded["adj"][l]
+                self_idx[l][d] = padded["self_idx"][l]
             tgt, tmask = padded["tgt"], padded["tmask"]
             safe_tgt = np.clip(tgt, 0, None)
             y[d] = np.where(tgt >= 0, self.g.labels[safe_tgt], 0)
@@ -859,14 +1094,16 @@ class DistGNNEngine:
                     else:
                         li = fn % nb
                         pos = need[s].setdefault(li, len(need[s]))
-                        tab_ids[d, j] = nb + s * fcap + pos
+                        tab_ids[d, j] = int(halo_slot(pos, s, wdt, k, nb))
             if c.execution == "p2p":
                 for s in range(k):
                     if s != d and need[s]:
                         assert len(need[s]) <= fcap, (
                             f"p2p halo cap overflow: device {d} needs "
                             f"{len(need[s])} rows from {s}, fcap={fcap}")
-                        send_rows[s, d, : len(need[s])] = list(need[s])
+                        # dict preserves insertion order == pos order
+                        need_lists[s][d] = np.fromiter(
+                            need[s], np.int64, len(need[s]))
             feature_fetch_bytes(self.part, d, mb.layer_vertices[0], D,
                                 cached_ids=self._cache_set[d],
                                 stats=self.comm_stats)
@@ -874,13 +1111,17 @@ class DistGNNEngine:
             frontier=jnp.asarray(frontier.astype(np.int32)),
             y=jnp.asarray(y), w=jnp.asarray(w),
             adj=tuple(jnp.asarray(a) for a in adj),
+            self_idx=tuple(jnp.asarray(a) for a in self_idx),
             cache_ids=jnp.asarray(cache_ids))
         if c.execution == "broadcast":
             batch["bc_ids"] = jnp.asarray(bc_ids.astype(np.int32))
         elif c.execution == "ring":
             batch["ring_ids"] = jnp.asarray(ring_ids)
         else:
-            batch["send_rows"] = jnp.asarray(send_rows)
+            # the one write side matching halo_slot's read side — shared
+            # with the full-graph and replica-sync plans
+            batch["send_rows"] = jnp.asarray(
+                bucketed_send_table(need_lists, k, widths))
             batch["tab_ids"] = jnp.asarray(tab_ids)
         return batch
 
@@ -888,9 +1129,30 @@ class DistGNNEngine:
         """sample + extract: one static-shape device batch for `step_idx`."""
         return self._make_batch(self._sample_host(step_idx))
 
+    def _check_minibatch_runnable(self):
+        """Validate the config ONCE at epoch entry: the constructor already
+        rejects mini-batch + async-history configs, but a config mutated
+        after construction (or an engine driven past a stale reference)
+        would otherwise die deep inside jit with an opaque shape error."""
+        c = self.cfg
+        if c.batching == "full_graph":
+            raise ValueError(
+                "batching='full_graph' has no mini-batch epoch; use train() "
+                "/ make_step(), or rebuild the engine with a sampled "
+                "batching mode (node_wise | layer_wise | subgraph)")
+        if c.protocol != "sync":
+            raise ValueError(
+                f"mini-batch training supports protocol='sync' only, but "
+                f"this engine's config now has protocol={c.protocol!r} "
+                f"(changed after construction?).  The historical-embedding "
+                f"protocols keep full-graph state that sampled batches "
+                f"cannot refresh — rebuild the engine with protocol='sync', "
+                f"or use batching='full_graph' to train with "
+                f"{c.protocol!r}.")
+
     def init_minibatch_state(self, key=None) -> Dict:
         key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
-        state = dict(params=init_gnn_params("gcn", self.dims, key),
+        state = dict(params=init_gnn_params(self.cfg.model, self.dims, key),
                      step=jnp.zeros((), jnp.int32))
         # Pre-place replicated, matching the step's output sharding — so
         # feeding the state back in reuses the ONE compiled executable
@@ -906,7 +1168,7 @@ class DistGNNEngine:
         feature-chunked like `_exchange_and_aggregate` when
         ``exchange_chunks`` > 1 (the frontier gather consumes chunk c while
         chunk c+1's collective flies)."""
-        ax, k, nb, fcap = self.axis, self.k, self.nb, self.fcap
+        ax, k, nb = self.axis, self.k, self.nb
         C = self.cfg.exchange_chunks
         D = X_local.shape[1]
         ctab = jnp.concatenate([cache_local, zero_pad_row(cache_local)], 0)
@@ -939,13 +1201,12 @@ class DistGNNEngine:
                                        jnp.arange(k))
             return F + acc
 
-        # p2p: ship only the rows each destination's misses actually need
+        # p2p: ship only the rows each destination's misses actually need,
+        # in the power-of-two bucketed installments (send operand [k, w]
+        # per round instead of one monolithic [k, fcap] buffer)
         def exchange(hc):
-            send = hc[bl["send_rows"].reshape(-1)].reshape(k, fcap,
-                                                           hc.shape[1])
-            recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0)
-            return jnp.concatenate(
-                [hc, recv.reshape(k * fcap, hc.shape[1]), zero_pad_row(hc)], 0)
+            recv = bucketed_all_to_all(hc, bl["send_rows"], ax, k)
+            return jnp.concatenate([hc, recv, zero_pad_row(hc)], 0)
 
         return F + chunked_overlap(
             X_local, C, exchange,
@@ -966,13 +1227,14 @@ class DistGNNEngine:
         cshard = dict(X=P(ax, None), cache=P(ax, None, None))
         bspec = dict(frontier=P(ax, None), y=P(ax, None), w=P(ax, None),
                      adj=tuple(P(ax, None, None) for _ in range(L)),
+                     self_idx=tuple(P(ax, None) for _ in range(L)),
                      cache_ids=P(ax, None))
         if c.execution == "broadcast":
             bspec["bc_ids"] = P(ax, None)
         elif c.execution == "ring":
             bspec["ring_ids"] = P(ax, None, None)
         else:
-            bspec["send_rows"] = P(ax, None, None)
+            bspec["send_rows"] = P(ax, None, None, None)
             bspec["tab_ids"] = P(ax, None)
         state_spec = dict(params=P(), step=P())
 
@@ -987,7 +1249,9 @@ class DistGNNEngine:
             # the full-graph step); the fetch above is outside the grad, so
             # the grad path is collective-free and portable.
             def num_fn(p):
-                logits = padded_minibatch_forward(p, list(bl["adj"]), F)
+                logits = padded_minibatch_forward(
+                    p, list(bl["adj"]), F, model=c.model,
+                    self_idx=list(bl["self_idx"]))
                 lse = jax.scipy.special.logsumexp(logits, axis=-1)
                 ll = jnp.take_along_axis(
                     logits, bl["y"][:, None], axis=-1)[:, 0]
@@ -1044,8 +1308,9 @@ class DistGNNEngine:
 
             def loss_fn(p):
                 logits = jax.vmap(
-                    lambda f, *adjs: padded_minibatch_forward(
-                        p, list(adjs), f))(F, *batch["adj"])
+                    lambda f, adjs, sidx: padded_minibatch_forward(
+                        p, list(adjs), f, model=c.model, self_idx=list(sidx))
+                )(F, batch["adj"], batch["self_idx"])
                 lse = jax.scipy.special.logsumexp(logits, axis=-1)
                 ll = jnp.take_along_axis(
                     logits, batch["y"][..., None], axis=-1)[..., 0]
@@ -1087,6 +1352,7 @@ class DistGNNEngine:
             SCHEDULES,
             run_pipelined,
         )
+        self._check_minibatch_runnable()
         step = (self.make_reference_minibatch_step() if reference
                 else self.make_minibatch_step())
         if state is None:
@@ -1135,6 +1401,7 @@ class DistGNNEngine:
         mini-batch modes.  Mini-batch runs reset and accumulate
         self.comm_stats (feature fetch bytes, cache hits)."""
         if self.cfg.batching != "full_graph":
+            self._check_minibatch_runnable()
             step = (self.make_reference_minibatch_step() if reference
                     else self.make_minibatch_step())
             state = self.init_minibatch_state()

@@ -181,6 +181,46 @@ def build_replica_sync_plan(lay: VertexCutLayout, masters: np.ndarray,
                 caps=(c1, c2))  # pre-bucketing max pairwise needs
 
 
+def _ring_combine(partial: jnp.ndarray, ring_ids: jnp.ndarray, axis: str,
+                  k: int, combine_op: Callable) -> jnp.ndarray:
+    """Double-buffered ring combine (shared by the sum and max passes): the
+    ppermute for rotation r+1 is ISSUED in the same step that rotation r's
+    block feeds the local gather — the two are data-independent, the pattern
+    XLA's async collectives overlap (the same double-buffering as
+    `pipeline_exchange.chunked_overlap`).  Exactly k-1 ppermute rounds, the
+    plan's rows_per_layer = k*(k-1)*nv wire accounting: the prologue issues
+    rotation 1, the scan body issues rotations 2..k-1 while consuming
+    1..k-2, and the epilogue consumes rotation k-1 without rotating further.
+    Accumulation order (own block, then rotations 1..k-1) is unchanged, so
+    results are bitwise-identical to the serial permute-then-gather ring.
+
+    The zero pad row is hoisted out of the loop: every device appends a zero
+    row, so rotation keeps slot nv a zero row and pad ring_ids read zeros
+    (the identity for the sum combine; the max combine requires all real
+    values >= 0 — see `replica_combine_max`)."""
+    me = jax.lax.axis_index(axis)
+    table0 = jnp.concatenate([partial, zero_pad_row(partial)], 0)
+    acc = jnp.take(table0, jnp.take(ring_ids, me, axis=0), axis=0)
+    if k == 1:
+        return acc
+    perm = [(i, (i - 1) % k) for i in range(k)]
+    tab1 = jax.lax.ppermute(table0, axis, perm)
+
+    def ring_step(carry, r):
+        acc, tab_cur = carry
+        tab_nxt = jax.lax.ppermute(tab_cur, axis, perm)  # rotation r+1 ...
+        owner = (me + r) % k  # ... flies while rotation r feeds the gather
+        acc = combine_op(acc, jnp.take(
+            tab_cur, jnp.take(ring_ids, owner, axis=0), axis=0))
+        return (acc, tab_nxt), None
+
+    (acc, tab_last), _ = jax.lax.scan(ring_step, (acc, tab1),
+                                      jnp.arange(1, k - 1))
+    owner = (me + k - 1) % k
+    return combine_op(acc, jnp.take(
+        tab_last, jnp.take(ring_ids, owner, axis=0), axis=0))
+
+
 def replica_combine(execution: str, partial: jnp.ndarray, plan: Dict, *,
                     axis: str, k: int, ell_fn: Callable,
                     num_chunks: int = 1) -> jnp.ndarray:
@@ -203,27 +243,8 @@ def replica_combine(execution: str, partial: jnp.ndarray, plan: Dict, *,
             partial, num_chunks, exchange,
             lambda table: ell_fn(plan["rep_ids"], plan["rep_mask"], table))
     if execution == "ring":
-        me = jax.lax.axis_index(axis)
-
-        def ring_step(carry, r):
-            acc, tab_cur = carry
-            # permute FIRST, then accumulate: exactly k-1 ppermute rounds,
-            # matching the plan's rows_per_layer = k*(k-1)*nv wire accounting.
-            # The zero pad row rides along in the rotating table (hoisted out
-            # of the scan: every device's appended row is zero, so rotation
-            # keeps slot nv a zero row).
-            tab_cur = jax.lax.ppermute(
-                tab_cur, axis, [(i, (i - 1) % k) for i in range(k)])
-            owner = (me + r) % k
-            ids_r = jnp.take(plan["ring_ids"], owner, axis=0)  # [nv]
-            acc = acc + jnp.take(tab_cur, ids_r, axis=0)
-            return (acc, tab_cur), None
-
-        table0 = jnp.concatenate([partial, zero_pad_row(partial)], 0)
-        acc0 = jnp.take(table0, jnp.take(plan["ring_ids"], me, axis=0), axis=0)
-        (acc, _), _ = jax.lax.scan(ring_step, (acc0, table0),
-                                   jnp.arange(1, k))
-        return acc
+        return _ring_combine(partial, plan["ring_ids"], axis, k,
+                             lambda a, b: a + b)
 
     # p2p: gather partials at masters, combine, scatter aggregates back.
     # Phase-1 installment all_to_alls are issued one chunk ahead of the
@@ -243,6 +264,35 @@ def replica_combine(execution: str, partial: jnp.ndarray, plan: Dict, *,
     return chunked_overlap(partial, num_chunks, exchange, consume)
 
 
+def replica_combine_max(execution: str, partial: jnp.ndarray, plan: Dict, *,
+                        axis: str, k: int) -> jnp.ndarray:
+    """Max-combine across replicas — the first pass of the distributed GAT
+    segment-softmax: every replica's local max of the per-edge logits is
+    combined so all replicas share ONE exact softmax stabilizer, then the
+    exp-sum pass rides the ordinary `replica_combine`.
+
+    Reuses the SAME static plan tables as the sum combine, with one invariant
+    pushed onto the caller: all real values must be >= 0 (the engine floors
+    its local maxima at 0 — any upper bound of the logits is a valid softmax
+    shift).  Pad/absent slots then read the zero rows the plans already
+    route to, and fold into the max as harmless identities."""
+    if execution == "broadcast":
+        full = jax.lax.all_gather(partial, axis, axis=0, tiled=True)
+        table = jnp.concatenate([full, zero_pad_row(partial)], 0)
+        vals = jnp.take(table, plan["rep_ids"], axis=0)  # [nv, Rm, D]
+        return jnp.where(plan["rep_mask"][..., None] > 0, vals, 0.0).max(1)
+    if execution == "ring":
+        return _ring_combine(partial, plan["ring_ids"], axis, k, jnp.maximum)
+    # p2p: max partials at masters, scatter the combined max back
+    recv = bucketed_all_to_all(partial, plan["send1"], axis, k)
+    table = jnp.concatenate([partial, recv, zero_pad_row(partial)], 0)
+    vals = jnp.take(table, plan["gather_ids"], axis=0)  # [nv, Rm, D]
+    agg_m = jnp.where(plan["gather_mask"][..., None] > 0, vals, 0.0).max(1)
+    recv2 = bucketed_all_to_all(agg_m, plan["send2"], axis, k)
+    table2 = jnp.concatenate([agg_m, recv2, zero_pad_row(partial)], 0)
+    return jnp.take(table2, plan["scatter_ids"], axis=0)
+
+
 def reference_combine(partial: jnp.ndarray, vert_ids: jnp.ndarray,
                       num_vertices: int) -> jnp.ndarray:
     """Single-device oracle combine: scatter-add every replica's partial into
@@ -252,3 +302,14 @@ def reference_combine(partial: jnp.ndarray, vert_ids: jnp.ndarray,
     G = jnp.zeros((num_vertices + 1, D), partial.dtype).at[
         vert_ids.reshape(-1)].add(partial.reshape(-1, D))
     return jnp.take(G, vert_ids, axis=0)  # pad slots read G[V] = 0
+
+
+def reference_combine_max(partial: jnp.ndarray, vert_ids: jnp.ndarray,
+                          num_vertices: int) -> jnp.ndarray:
+    """Single-device oracle for `replica_combine_max`: scatter-MAX into the
+    global vertex space and gather back.  Same >= 0 invariant — the zero
+    init of the global table plays the role of the plans' zero pad rows."""
+    D = partial.shape[-1]
+    G = jnp.zeros((num_vertices + 1, D), partial.dtype).at[
+        vert_ids.reshape(-1)].max(partial.reshape(-1, D))
+    return jnp.take(G, vert_ids, axis=0)

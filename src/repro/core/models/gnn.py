@@ -63,7 +63,12 @@ def gnn_layer(model: str, p: Dict, A: jnp.ndarray, H_src: jnp.ndarray,
         e = jnp.where(mask, e, -1e30)
         att = jax.nn.softmax(e, axis=1)
         att = jnp.where(mask, att, 0.0)
-        z = att @ Hw_src
+        # Rows whose neighbors are ALL masked (isolated vertices, padded
+        # rows) fall back to the self-loop Hw_dst instead of silently
+        # emitting zeros — the padded-engine contract, and what the
+        # distributed ELL GAT path computes for degree-0 rows.
+        has_nbr = mask.any(axis=1, keepdims=True)
+        z = jnp.where(has_nbr, att @ Hw_src, Hw_dst)
     elif model == "gin":
         z = ((1 + p["eps"]) * H_self + agg(A, H_src))
         z = jax.nn.relu(z @ p["w1"]) @ p["w2"]
@@ -93,17 +98,26 @@ def minibatch_forward(model: str, params: Dict, layer_adj: List[jnp.ndarray],
 
 
 def padded_minibatch_forward(params: Dict, layer_adj: Sequence[jnp.ndarray],
-                             X: jnp.ndarray) -> jnp.ndarray:
-    """GCN forward over statically PADDED dense sampled blocks (the
-    DistGNNEngine mini-batch contract): self-loops are already folded into the
-    row-normalized blocks, so each layer is H <- A_l @ H @ W + b.  Pad rows and
-    cols of A_l are zero, so padded positions stay inert — they produce
-    constant relu(b) rows that no real row ever reads."""
+                             X: jnp.ndarray, *, model: str = "gcn",
+                             self_idx: Optional[Sequence[jnp.ndarray]] = None
+                             ) -> jnp.ndarray:
+    """Model-aware forward over statically PADDED dense sampled blocks (the
+    DistGNNEngine mini-batch contract), delegating each layer to `gnn_layer`:
+    self-loops are folded into the row-normalized blocks, so GCN is
+    H <- A_l @ H @ W + b; sage/gin/gat read their RESIDENT self features
+    through ``self_idx`` (self_idx[l] maps layer-(l+1) rows into layer-l rows
+    — pad rows point at slot 0, inert because no real row ever reads a pad
+    row: pad rows/cols of A_l are zero and real self_idx entries point at
+    real slots).  Required for every model except gcn."""
+    if model != "gcn" and self_idx is None:
+        raise ValueError(f"model={model!r} needs self_idx (resident self "
+                         "features); only gcn folds self into the blocks")
     H = X
     L = len(params["layers"])
     for l, p in enumerate(params["layers"]):
-        z = layer_adj[l] @ H @ p["w"] + p["b"]
-        H = z if l == L - 1 else jax.nn.relu(z)
+        si = None if self_idx is None else self_idx[l]
+        H = gnn_layer(model, p, layer_adj[l], H, self_idx=si,
+                      last=(l == L - 1))
     return H
 
 

@@ -66,9 +66,33 @@ def bytegnn_score(cross_edges: np.ndarray, part_sizes: np.ndarray,
 FEAT_BYTES = 4
 
 
+def model_exchange_widths(model: str, dims: Sequence[int],
+                          family: str = "edge_cut") -> list:
+    """Per-layer floats-per-exchanged-row for each GNN model (the survey's
+    model-dependent communication volume, §3 x §4).
+
+      gcn / sage / gin  the exchange ships the layer's INPUT rows — width
+                        dims[l].  sage/gin's self-feature terms read the
+                        RESIDENT block, so the model axis adds ZERO bytes
+                        over gcn (asserted by the model property tier).
+      gat               the exchange ships the TRANSFORMED rows Hw (width
+                        dims[l+1]) plus ONE attention-coefficient column
+                        (a_src . Hw) — the +1 "α term"; under vertex_cut the
+                        segment-softmax needs a second, width-1 replica pass
+                        (the max combine that exactifies the normalizer), so
+                        +2 per layer there.
+    """
+    L = len(dims) - 1
+    if model == "gat":
+        extra = 2 if family == "vertex_cut" else 1
+        return [int(dims[l + 1]) + extra for l in range(L)]
+    return [int(d) for d in dims[:-1]]
+
+
 def replica_sync_bytes_per_step(rep_counts: np.ndarray, k: int, nv: int,
                                 execution: str, dims: Sequence[int],
-                                feat_bytes: int = FEAT_BYTES) -> int:
+                                feat_bytes: int = FEAT_BYTES,
+                                model: str = "gcn") -> int:
     """Replication-factor-aware wire bytes of one vertex-cut train step.
 
     ``rep_counts`` [V] = replicas per vertex (incl. the forced master — see
@@ -89,19 +113,23 @@ def replica_sync_bytes_per_step(rep_counts: np.ndarray, k: int, nv: int,
         rows = 2 * int(np.maximum(np.asarray(rep_counts) - 1, 0).sum())
     else:
         raise ValueError(f"unknown execution {execution!r}")
-    return rows * int(sum(dims[:-1])) * feat_bytes
+    widths = model_exchange_widths(model, dims, "vertex_cut")
+    return rows * int(sum(widths)) * feat_bytes
 
 
 def edge_cut_halo_bytes_per_step(g: Graph, part, dims: Sequence[int],
-                                 feat_bytes: int = FEAT_BYTES) -> int:
+                                 feat_bytes: int = FEAT_BYTES,
+                                 model: str = "gcn") -> int:
     """Edge-cut p2p halo volume of one train step: every layer ships each
     partition's remote in-neighbor set (`Partition.boundary_vertices`) once,
-    at that layer's input width."""
-    return part.communication_volume(g) * int(sum(dims[:-1])) * feat_bytes
+    at that layer's model-dependent exchange width."""
+    widths = model_exchange_widths(model, dims, "edge_cut")
+    return part.communication_volume(g) * int(sum(widths)) * feat_bytes
 
 
 def edge_cut_halo_device_bytes(g: Graph, part, dims: Sequence[int],
-                               feat_bytes: int = FEAT_BYTES) -> np.ndarray:
+                               feat_bytes: int = FEAT_BYTES,
+                               model: str = "gcn") -> np.ndarray:
     """[k] per-device halo bytes per step, counting BOTH directions (a row's
     owner sends it, its consumer receives it) — the max of this array is the
     critical-path (straggler) comm volume that sets the step time.  On skewed
@@ -117,12 +145,14 @@ def edge_cut_halo_device_bytes(g: Graph, part, dims: Sequence[int],
     rem = a[pv] != pc
     send = np.bincount(a[pv][rem], minlength=k)
     recv = np.bincount(pc[rem], minlength=k)
-    return (send + recv) * int(sum(dims[:-1])) * feat_bytes
+    widths = model_exchange_widths(model, dims, "edge_cut")
+    return (send + recv) * int(sum(widths)) * feat_bytes
 
 
 def replica_sync_device_bytes(layout, masters: np.ndarray,
                               dims: Sequence[int],
-                              feat_bytes: int = FEAT_BYTES) -> np.ndarray:
+                              feat_bytes: int = FEAT_BYTES,
+                              model: str = "gcn") -> np.ndarray:
     """[k] per-device replica-sync bytes per step (p2p GAS accounting),
     counting both directions like `edge_cut_halo_device_bytes`: a non-master
     replica slot sends one partial and receives one aggregate per layer; a
@@ -135,8 +165,9 @@ def replica_sync_device_bytes(layout, masters: np.ndarray,
     rm1 = np.maximum(layout.rep_count - 1, 0)
     master_traffic = np.bincount(np.asarray(masters, np.int64), weights=rm1,
                                  minlength=layout.k).astype(np.int64)
+    widths = model_exchange_widths(model, dims, "vertex_cut")
     return (2 * (nonmaster + master_traffic)
-            * int(sum(dims[:-1])) * feat_bytes)
+            * int(sum(widths)) * feat_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -218,7 +218,10 @@ def pad_minibatch(mb: MiniBatch, caps: Sequence[int]) -> Dict[str, np.ndarray]:
     zero, so padded positions stay inert through a forward pass.
 
     Returns dict(frontier [caps[0]], fmask, tgt [caps[-1]], tmask,
-    adj = tuple of [caps[l+1], caps[l]] blocks)."""
+    adj = tuple of [caps[l+1], caps[l]] blocks, self_idx = tuple of
+    [caps[l+1]] positions of each layer-(l+1) row within layer l — the
+    resident self-feature table for sage/gin/gat; pad rows point at slot 0
+    (inert: no real row reads a pad row))."""
     L = len(mb.layer_adj)
     if len(caps) != L + 1:
         raise ValueError(f"need {L + 1} caps, got {len(caps)}")
@@ -226,6 +229,11 @@ def pad_minibatch(mb: MiniBatch, caps: Sequence[int]) -> Dict[str, np.ndarray]:
         if len(lv) > caps[l]:
             raise ValueError(
                 f"layer {l} frontier {len(lv)} exceeds cap {caps[l]}")
+    self_idx = []
+    for l, si in enumerate(mb.self_indices()):
+        a = np.zeros(caps[l + 1], np.int64)
+        a[: len(si)] = si
+        self_idx.append(a)
     frontier = np.full(caps[0], -1, np.int64)
     frontier[: mb.num_input_vertices] = mb.layer_vertices[0]
     fmask = np.zeros(caps[0], np.float32)
@@ -240,4 +248,4 @@ def pad_minibatch(mb: MiniBatch, caps: Sequence[int]) -> Dict[str, np.ndarray]:
         P[: A.shape[0], : A.shape[1]] = A
         adj.append(P)
     return dict(frontier=frontier, fmask=fmask, tgt=tgt, tmask=tmask,
-                adj=tuple(adj))
+                adj=tuple(adj), self_idx=tuple(self_idx))

@@ -114,6 +114,47 @@ def _ell_spmm_bwd(normalize, interpret, row_block, feat_block, res, ct):
 _ell_spmm_vjp.defvjp(_ell_spmm_fwd, _ell_spmm_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ell_attend_vjp(interpret, row_block, feat_block, ids, w, H):
+    return ell_spmm_pallas(ids, w, H, normalize=False, interpret=interpret,
+                           row_block=row_block, feat_block=feat_block)
+
+
+def _ell_attend_fwd(interpret, row_block, feat_block, ids, w, H):
+    out = ell_spmm_pallas(ids, w, H, normalize=False, interpret=interpret,
+                          row_block=row_block, feat_block=feat_block)
+    return out, (ids, w, H)
+
+
+def _ell_attend_bwd(interpret, row_block, feat_block, res, ct):
+    ids, w, H = res
+    V, K = ids.shape
+    ctn = ct.astype(jnp.float32)
+    contrib = (w[..., None] * ctn[:, None, :]).reshape(V * K, ct.shape[-1])
+    dH = jnp.zeros((H.shape[0], ct.shape[-1]), jnp.float32).at[
+        ids.reshape(-1)].add(contrib).astype(ct.dtype)
+    # dL/dw[v,k] = ct[v] . H[ids[v,k]] — the SDDMM-shaped gather product
+    dw = (ctn[:, None, :] * jnp.take(H, ids, axis=0)).sum(-1).astype(w.dtype)
+    return (jnp.zeros(ids.shape, jax.dtypes.float0), dw, dH)
+
+
+_ell_attend_vjp.defvjp(_ell_attend_fwd, _ell_attend_bwd)
+
+
+def ell_attend(ids: jnp.ndarray, weights: jnp.ndarray, H: jnp.ndarray, *,
+               interpret: bool = False, row_block: int = 128,
+               feat_block: int = 128) -> jnp.ndarray:
+    """Attention-weighted ELL sum: out[v] = sum_k weights[v,k] * H[ids[v,k]],
+    with gradients flowing to BOTH ``weights`` and ``H``.
+
+    Same Pallas forward as `ell_spmm` (the weights ride the mask lane), but
+    where `ell_spmm` treats the mask as graph structure (zero cotangent),
+    GAT's attention coefficients are a function of the params — their VJP is
+    the SDDMM-shaped gather product ct[v] . H[ids[v,k]]."""
+    return _ell_attend_vjp(interpret, row_block, feat_block, ids,
+                           weights.astype(jnp.float32), H)
+
+
 def ell_spmm(ids: jnp.ndarray, mask: jnp.ndarray, H: jnp.ndarray, *,
              normalize: bool = True, interpret: bool = False,
              row_block: int = 128, feat_block: int = 128) -> jnp.ndarray:

@@ -22,8 +22,10 @@ def sddmm_ref(ids: jnp.ndarray, mask: jnp.ndarray, Hw: jnp.ndarray,
               a_src: jnp.ndarray, a_dst: jnp.ndarray,
               *, slope: float = 0.2) -> jnp.ndarray:
     """GAT edge scores on ELL structure: e[v,k] = LeakyReLU(a_dst.Hw[v] +
-    a_src.Hw[ids[v,k]]), masked entries -> -inf (pre-softmax)."""
-    s_dst = Hw @ a_dst  # [V]
+    a_src.Hw[ids[v,k]]), masked entries -> -inf (pre-softmax).  Hw may hold
+    more rows than ids (halo/pad rows appended after the V dst rows) — dst
+    row v is table row v, the same prefix contract as the Pallas kernel."""
+    s_dst = (Hw @ a_dst)[: ids.shape[0]]  # [V]
     s_src = (Hw @ a_src)[ids]  # [V,K]
     e = s_dst[:, None] + s_src
     e = jnp.where(e > 0, e, slope * e)

@@ -55,3 +55,78 @@ def sddmm_pallas(ids: jnp.ndarray, mask: jnp.ndarray, Hw: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((V, K), jnp.float32),
         interpret=interpret,
     )(ids, mask.astype(jnp.float32), Hw, a_src.reshape(1, -1), a_dst.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper (the distributed GAT path)
+# ---------------------------------------------------------------------------
+#
+# pallas_call carries no autodiff rule, but the edge-score VJP is analytic:
+# with z = s_dst[v] + s_src[ids[v,k]] the masked logits e = LeakyReLU(z) give
+#   de/dHw = scatter(dz) * a_dst + scatter_over_ids(dz) * a_src
+# — two dense rank-1 products plus a scatter-add, all XLA-native.  ids/mask
+# are graph structure (non-differentiable); masked slots emit the constant
+# -1e30, so their cotangent is dropped.
+#
+# Contract (same as the kernel): destination row v's features live at table
+# row v — the table's first V rows ARE the dst rows.  Rows are padded to the
+# grid here, so any V works.
+
+
+def _sddmm_padded(ids, mask, Hw, a_src, a_dst, slope, row_block, interpret):
+    V, K = ids.shape
+    rb = min(row_block, V)
+    Vp = -(-V // rb) * rb
+    if Vp != V:  # pad rows: ids 0 / mask 0 -> -1e30 logits, sliced away
+        ids = jnp.concatenate([ids, jnp.zeros((Vp - V, K), ids.dtype)], 0)
+        mask = jnp.concatenate([mask, jnp.zeros((Vp - V, K), mask.dtype)], 0)
+    out = sddmm_pallas(ids, mask, Hw, a_src, a_dst, slope=slope,
+                       row_block=rb, interpret=interpret)
+    return out[:V] if Vp != V else out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _sddmm_vjp(slope, row_block, interpret, ids, mask, Hw, a_src, a_dst):
+    return _sddmm_padded(ids, mask, Hw, a_src, a_dst, slope, row_block,
+                         interpret)
+
+
+def _sddmm_fwd(slope, row_block, interpret, ids, mask, Hw, a_src, a_dst):
+    out = _sddmm_padded(ids, mask, Hw, a_src, a_dst, slope, row_block,
+                        interpret)
+    return out, (ids, mask, Hw, a_src, a_dst)
+
+
+def _sddmm_bwd(slope, row_block, interpret, res, ct):
+    ids, mask, Hw, a_src, a_dst = res
+    V, K = ids.shape
+    N = Hw.shape[0]
+    s_dst = Hw @ a_dst  # [N]
+    s_src = Hw @ a_src
+    z = s_dst[:V, None] + jnp.take(s_src, ids, axis=0)
+    dz = ct.astype(jnp.float32) * jnp.where(z > 0, 1.0, slope) * (mask > 0)
+    g_dst = jnp.zeros((N,), jnp.float32).at[:V].set(dz.sum(1))
+    g_src = jnp.zeros((N,), jnp.float32).at[ids.reshape(-1)].add(
+        dz.reshape(-1))
+    dHw = (g_dst[:, None] * a_dst[None, :]
+           + g_src[:, None] * a_src[None, :]).astype(Hw.dtype)
+    da_dst = (Hw * g_dst[:, None]).sum(0).astype(a_dst.dtype)
+    da_src = (Hw * g_src[:, None]).sum(0).astype(a_src.dtype)
+    return (jnp.zeros(ids.shape, jax.dtypes.float0), jnp.zeros_like(mask),
+            dHw, da_src, da_dst)
+
+
+_sddmm_vjp.defvjp(_sddmm_fwd, _sddmm_bwd)
+
+
+def sddmm_ell(ids: jnp.ndarray, mask: jnp.ndarray, Hw: jnp.ndarray,
+              a_src: jnp.ndarray, a_dst: jnp.ndarray, *, slope: float = 0.2,
+              row_block: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """Differentiable masked GAT edge logits over ELL structure: Pallas
+    forward (rows padded to the grid), analytic VJP for Hw / a_src / a_dst.
+
+    e[v, k] = LeakyReLU(a_dst . Hw[v] + a_src . Hw[ids[v, k]]), masked slots
+    -> -1e30.  Destination row v must be table row v (the table's first V
+    rows are the dst rows — the engine's local/p2p/reference layouts)."""
+    return _sddmm_vjp(slope, row_block, interpret, ids,
+                      mask.astype(jnp.float32), Hw, a_src, a_dst)

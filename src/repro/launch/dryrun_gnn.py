@@ -206,6 +206,13 @@ def main():
                     help="p2p: boundary fraction per destination pair")
     ap.add_argument("--engine-exec", default="p2p",
                     help="engine: broadcast | ring | p2p")
+    ap.add_argument("--engine-model", default="gcn",
+                    choices=["gcn", "sage", "gat", "gin"],
+                    help="engine: §3 GNN model axis — gat lowers the "
+                    "distributed attention step (SDDMM logits + segment-"
+                    "softmax; two-pass replica sync under vertex_cut) and "
+                    "its exchange ships transformed rows + the attention-"
+                    "coefficient column")
     ap.add_argument("--engine-family", default="edge_cut",
                     choices=["edge_cut", "vertex_cut"],
                     help="engine: §4 partition family (vertex_cut lowers the "
@@ -288,7 +295,8 @@ def main():
         mesh1d = jax.make_mesh((chips,), ("w",))
         minibatch = args.engine_batching != "full_graph"
         ecfg = EngineConfig(
-            execution=args.engine_exec, hidden=cfg.hidden_dim,
+            execution=args.engine_exec, model=args.engine_model,
+            hidden=cfg.hidden_dim,
             num_layers=cfg.num_layers, batching=args.engine_batching,
             partition_family=args.engine_family,
             vertex_cut=args.engine_vertex_cut,
@@ -315,7 +323,7 @@ def main():
                     f"measured-halo fcap should shrink the 256-chip "
                     f"all_to_all buffer >10x on the power-law config, "
                     f"got {shrink:.1f}x")
-        engine_extra = {}
+        engine_extra = dict(engine_model=args.engine_model)
         if args.engine_family == "vertex_cut":
             from repro.core.partition.cost_models import (
                 edge_cut_halo_bytes_per_step,
@@ -329,19 +337,23 @@ def main():
                       + [cfg.hidden_dim] * (cfg.num_layers - 1)
                       + [cfg.num_classes])
             ec_part = PARTITIONERS["metis_like"](g, chips)
-            halo = edge_cut_halo_bytes_per_step(g, ec_part, dims_g)
-            halo_max = int(edge_cut_halo_device_bytes(g, ec_part, dims_g).max())
+            m = args.engine_model
+            halo = edge_cut_halo_bytes_per_step(g, ec_part, dims_g, model=m)
+            halo_max = int(edge_cut_halo_device_bytes(
+                g, ec_part, dims_g, model=m).max())
             sync_b = replica_sync_bytes_per_step(
-                eng.layout.rep_count, chips, eng.nv, args.engine_exec, dims_g)
+                eng.layout.rep_count, chips, eng.nv, args.engine_exec,
+                dims_g, model=m)
             sync_max = int(replica_sync_device_bytes(
-                eng.layout, eng.vcut.masters, dims_g).max())
-            engine_extra = dict(partition_family="vertex_cut",
-                                vertex_cut=args.engine_vertex_cut,
-                                replication_factor=eng.layout.replication_factor(),
-                                replica_sync_bytes_per_step=sync_b,
-                                replica_sync_bottleneck_bytes=sync_max,
-                                edge_cut_halo_bytes_per_step=halo,
-                                edge_cut_halo_bottleneck_bytes=halo_max)
+                eng.layout, eng.vcut.masters, dims_g, model=m).max())
+            engine_extra.update(
+                partition_family="vertex_cut",
+                vertex_cut=args.engine_vertex_cut,
+                replication_factor=eng.layout.replication_factor(),
+                replica_sync_bytes_per_step=sync_b,
+                replica_sync_bottleneck_bytes=sync_max,
+                edge_cut_halo_bytes_per_step=halo,
+                edge_cut_halo_bottleneck_bytes=halo_max)
             log.info("vertex-cut %s: replication factor %.2f, replica sync "
                      "%s/step (bottleneck %s) vs edge-cut halo %s/step "
                      "(bottleneck %s)",
@@ -386,7 +398,11 @@ def main():
                 cap_mono = max(eng._vc_p2p_caps)
                 w = max(eng._vc_plan["send1"].shape[-1],
                         eng._vc_plan["send2"].shape[-1])
-            elif not minibatch:
+            elif minibatch:
+                # the frontier fetch rides the same power-of-two installment
+                # schedule (ISSUE 5 satellite: no more monolithic fcap send)
+                cap_mono, w = eng.fcap, eng.fcap_widths[0]
+            else:
                 cap_mono, w = eng.cap, eng.p2p_widths[0]
             if cap_mono is not None:
                 mono_buf = chips * cap_mono * Dmax * 4
@@ -452,6 +468,8 @@ def main():
         result.update(engine_extra)
     os.makedirs(args.out, exist_ok=True)
     suffix = f"__{args.protocol}" if args.protocol != "broadcast" else ""
+    if args.protocol == "engine" and args.engine_model != "gcn":
+        suffix += f"_{args.engine_model}"
     if args.protocol == "engine" and args.engine_batching != "full_graph":
         suffix += f"_{args.engine_batching}"
     if args.protocol == "engine" and args.engine_family == "vertex_cut":

@@ -70,3 +70,34 @@ def test_all_gnn_models_train(model, g):
     r = full_graph_train(g, model=model, epochs=30, lr=0.2)
     assert np.isfinite(r.losses[-1])
     assert r.losses[-1] < r.losses[0]
+
+
+def test_gat_isolated_vertex_self_fallback():
+    """Regression (ISSUE 5 satellite): a dense-GAT row whose neighbors are
+    ALL masked used to emit zeros after `att = where(mask, att, 0)`; the
+    padded-engine contract promises the self-loop fallback Hw_dst instead —
+    and this dense path is the oracle the distributed GAT path is checked
+    against."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.models.gnn import gnn_layer, init_gnn_params
+
+    rng = np.random.default_rng(3)
+    n = 5
+    A = np.zeros((n, n), np.float32)
+    A[:3, :3] = rng.random((3, 3)) + 0.1  # rows 3, 4 are isolated
+    H = jnp.asarray(rng.standard_normal((n, 4)), jnp.float32)
+    p = init_gnn_params("gat", [4, 3], jax.random.PRNGKey(0))["layers"][0]
+    out = gnn_layer("gat", p, jnp.asarray(A), H, last=True)
+    want_iso = np.asarray(H @ p["w"])[3:]
+    assert np.allclose(np.asarray(out[3:]), want_iso, atol=1e-6), (
+        "isolated rows must fall back to Hw_dst (self-loop), got "
+        f"{np.asarray(out[3:])}")
+    # connected rows attend over their neighbors, not the fallback
+    assert not np.allclose(np.asarray(out[:3]), np.asarray(H @ p["w"])[:3])
+    # gradients stay finite through the fallback (the -1e30 mask trick must
+    # not leak NaNs into the isolated rows' backward pass)
+    def loss(h):
+        return (gnn_layer("gat", p, jnp.asarray(A), h, last=True) ** 2).sum()
+    assert np.isfinite(np.asarray(jax.grad(loss)(H))).all()

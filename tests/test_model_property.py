@@ -1,0 +1,105 @@
+"""Hypothesis property tier for the GNN model axis (same optional
+`property` extra gating as the other hypothesis tiers):
+
+  * padded-row inertness PER MODEL: perturbing pad-slot inputs of a padded
+    mini-batch forward never changes any real target row, for every model —
+    the static-padding contract the distributed step relies on;
+  * GAT masked segment-softmax: attention rows sum to 1 over the real slots
+    (and to 0 for rows with no real slots — the self-fallback case), pad
+    slots carry zero weight;
+  * self-feature locality: sage/gin's model-aware exchange widths equal
+    gcn's exactly (zero extra bytes on the wire), while gat's differ by the
+    attention-coefficient terms.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.models.gnn import (  # noqa: E402
+    init_gnn_params,
+    padded_minibatch_forward,
+)
+from repro.core.partition.cost_models import model_exchange_widths  # noqa: E402
+
+MODELS = ("gcn", "sage", "gat", "gin")
+
+
+def _padded_batch(rng, n_real, cap, d_in):
+    """One padded two-layer batch: real rows first, pad rows zero, every
+    real row gets a folded self-loop (the sampler contract)."""
+    adj = []
+    self_idx = []
+    for _ in range(2):
+        A = np.zeros((cap, cap), np.float32)
+        raw = (rng.random((n_real, n_real)) < 0.4).astype(np.float32)
+        raw += np.eye(n_real, dtype=np.float32)  # folded self loop
+        A[:n_real, :n_real] = raw / raw.sum(1, keepdims=True)
+        adj.append(jnp.asarray(A))
+        si = np.zeros(cap, np.int64)
+        si[:n_real] = np.arange(n_real)
+        self_idx.append(jnp.asarray(si))
+    X = np.zeros((cap, d_in), np.float32)
+    X[:n_real] = rng.standard_normal((n_real, d_in))
+    return adj, self_idx, jnp.asarray(X)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(MODELS), st.integers(2, 6), st.integers(0, 5),
+       st.integers(0, 2 ** 31 - 1))
+def test_padded_rows_inert_per_model(model, n_real, n_pad, seed):
+    rng = np.random.default_rng(seed)
+    cap = n_real + n_pad
+    adj, self_idx, X = _padded_batch(rng, n_real, cap, d_in=5)
+    params = init_gnn_params(model, [5, 4, 3], jax.random.PRNGKey(seed % 97))
+    out = padded_minibatch_forward(params, adj, X, model=model,
+                                   self_idx=self_idx)
+    # perturb ONLY the pad rows' inputs: real rows must not move
+    X2 = X.at[n_real:].set(7.5) if n_pad else X
+    out2 = padded_minibatch_forward(params, adj, X2, model=model,
+                                    self_idx=self_idx)
+    assert np.allclose(np.asarray(out[:n_real]), np.asarray(out2[:n_real]),
+                       atol=0, rtol=0), model
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_gat_softmax_rows_sum_to_one_over_real_slots(V, K, seed):
+    """The engine's masked segment-softmax pieces: weights are zero on pad
+    slots, sum to 1 over real slots, and to 0 for empty rows (which the
+    engine routes to the self fallback)."""
+    from repro.core.engine import DistGNNEngine
+
+    rng = np.random.default_rng(seed)
+    e = rng.standard_normal((V, K)).astype(np.float32) * 3
+    mask = (rng.random((V, K)) < 0.6).astype(np.float32)
+    e_masked = jnp.where(mask > 0, jnp.asarray(e), -1e30)
+    pw, den = DistGNNEngine._gat_softmax(e_masked)
+    att = np.asarray(pw / jnp.maximum(den, 1e-30))
+    assert (np.asarray(pw)[mask == 0] == 0).all()
+    row_has = mask.sum(1) > 0
+    sums = att.sum(1)
+    assert np.allclose(sums[row_has], 1.0, atol=1e-5)
+    assert np.allclose(sums[~row_has], 0.0, atol=0)
+    assert (np.asarray(den)[~row_has] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 64), st.integers(1, 64),
+       st.integers(2, 32))
+def test_self_feature_locality_zero_extra_bytes(L, d_in, hidden, classes):
+    """sage/gin exchange EXACTLY gcn's widths (self features are resident);
+    gat's widths are the transformed width + the coefficient terms."""
+    dims = [d_in] + [hidden] * (L - 1) + [classes]
+    for family in ("edge_cut", "vertex_cut"):
+        base = model_exchange_widths("gcn", dims, family)
+        assert model_exchange_widths("sage", dims, family) == base
+        assert model_exchange_widths("gin", dims, family) == base
+        extra = 2 if family == "vertex_cut" else 1
+        gat = model_exchange_widths("gat", dims, family)
+        assert gat == [dims[l + 1] + extra for l in range(L)]
