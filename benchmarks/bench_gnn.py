@@ -146,6 +146,63 @@ def bench_staleness() -> Tuple[List[Dict], str]:
     return rows, f"max_acc_gap_vs_sync={gap:.4f}"
 
 
+def bench_trainable_embeddings() -> Tuple[List[Dict], str]:
+    """ISSUE 6: the wire cost of making layer-0 rows TRAINABLE embeddings.
+
+    Full-graph: `embedding_grad_bytes_per_step` (the transpose of one
+    layer-0-width exchange) per execution model x partitioner — p2p returns
+    each halo cotangent to its owner once, so its advantage over the
+    broadcast/ring reduce-scatter grows with partition quality.  Mini-batch:
+    `embedding_update_bytes` with and without the hot-row cache overlay —
+    cached rows stop costing per-miss fetches but start costing the fixed
+    2*overlay refresh/grad rows per step, so the overlay only pays for
+    itself once the hit rows it absorbs exceed that rent."""
+    from repro.core.partition.cost_models import embedding_grad_bytes_per_step
+    from repro.core.sampling.distributed import embedding_update_bytes
+
+    g = powerlaw_graph(600, avg_degree=12, seed=5)
+    k, D = 8, 64
+    nb = -(-g.num_vertices // k)
+    rows = []
+    for pname in ("hash", "metis_like"):
+        part = PARTITIONERS[pname](g, k)
+        per_exec = {
+            ex: embedding_grad_bytes_per_step(g, ex, (D,), k=k, part=part,
+                                              nb=nb)
+            for ex in ("broadcast", "ring", "p2p")}
+        for ex, b in per_exec.items():
+            rows.append(dict(mode="full_graph", partitioner=pname,
+                             execution=ex, embed_grad_bytes=b,
+                             vs_broadcast=round(
+                                 b / max(per_exec["broadcast"], 1), 3)))
+
+    part = PARTITIONERS["metis_like"](g, k)
+    train = np.where(g.train_mask)[0]
+    rng = np.random.default_rng(0)
+    frontiers = []
+    for _ in range(30):
+        batch = rng.choice(train, 16, replace=False)
+        frontiers.append(node_wise_sample(g, batch, (4, 4),
+                                          rng).layer_vertices[0])
+    for cap_frac in (0.0, 0.05, 0.15):
+        cap = int(cap_frac * g.num_vertices)
+        cached = (frozenset(int(v) for v in static_degree_cache(g, cap))
+                  if cap else frozenset())
+        total = sum(embedding_update_bytes(part, 0, f, D, cached_ids=cached,
+                                           overlay_rows=cap)
+                    for f in frontiers)
+        rows.append(dict(mode="node_wise", partitioner="metis_like",
+                         cache_capacity=cap,
+                         embed_grad_bytes=total // len(frontiers)))
+    fg = {r["execution"]: r["embed_grad_bytes"] for r in rows
+          if r["mode"] == "full_graph" and r["partitioner"] == "metis_like"}
+    mb = {r["cache_capacity"]: r["embed_grad_bytes"] for r in rows
+          if r["mode"] == "node_wise"}
+    best_cap = min(mb, key=mb.get)
+    return rows, (f"p2p_vs_broadcast={fg['p2p'] / max(fg['broadcast'], 1):.3f}"
+                  f" best_overlay_cap={best_cap}")
+
+
 # ---------------------------------------------------------------------------
 # ISSUE 4: the pipelined hot path — blocking vs pipelined epoch wall-clock
 # and chunked vs monolithic exchange, measured for real on forced-host

@@ -29,6 +29,7 @@ def main() -> None:
         bench_protocol_costs,
         bench_staleness,
         bench_step_pipeline,
+        bench_trainable_embeddings,
     )
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.bench_spmm_comm import bench_spmm_comm
@@ -41,6 +42,7 @@ def main() -> None:
         "protocols": bench_protocol_costs,  # §7.1 comm volume
         "staleness": bench_staleness,  # §7.2 / Table 3
         "step_pipeline": bench_step_pipeline,  # ISSUE 4: pipelined hot path
+        "trainable_embed": bench_trainable_embeddings,  # ISSUE 6: embed bytes
         "spmm_comm": bench_spmm_comm,  # §6.2.2 / Table 2 (CAGNET)
         "kernels": bench_kernels,  # Pallas kernel structural timing
         "roofline": lambda: roofline_table("experiments/dryrun"),  # deliverable g

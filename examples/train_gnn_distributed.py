@@ -61,7 +61,9 @@ def run_engine(args, g):
                        cache_capacity=args.cache_capacity,
                        exchange_chunks=args.exchange_chunks,
                        p2p_buckets=args.p2p_buckets,
-                       prefetch_depth=args.prefetch_depth)
+                       prefetch_depth=args.prefetch_depth,
+                       trainable_features=args.trainable_features,
+                       embed_lr=args.embed_lr)
     n_dev = len(jax.devices())
     k = args.parts or n_dev
     assert k <= n_dev, f"need {k} devices, have {n_dev} (set XLA_FLAGS)"
@@ -91,6 +93,10 @@ def run_engine(args, g):
               f"{s.cache_hit_bytes / 1e6:.3f} MB served by the "
               f"{args.cache!r} cache "
               f"({s.cache_hit_bytes / max(s.requested(), 1):.1%} hit bytes)")
+        if args.trainable_features:
+            print(f"trainable embeddings: {s.embed_grad_bytes / 1e6:.3f} MB "
+                  f"gradient rows routed to owners (+ overlay refresh) over "
+                  f"{args.epochs} steps")
         batch = eng.sample_minibatch(args.epochs - 1)
         _, _, logits = eng.make_minibatch_step()(state, batch)
         acc = eng.minibatch_accuracy(logits, batch)
@@ -105,6 +111,10 @@ def run_engine(args, g):
             s = eng.comm_stats
             print(f"replica sync: {s.replica_sync_bytes / 1e6:.3f} MB over "
                   f"{args.epochs} steps ({args.exec} combine)")
+        if args.trainable_features:
+            print(f"trainable embeddings: "
+                  f"{eng.comm_stats.embed_grad_bytes / 1e6:.3f} MB gradient "
+                  f"rows routed to owners over {args.epochs} steps")
         print(f"final: train_acc={eng.accuracy(logits, 'train'):.3f} "
               f"test_acc={eng.accuracy(logits, 'test'):.3f}")
     if args.oracle_check:
@@ -204,6 +214,12 @@ def main():
                     help="mini-batch stage schedule (survey §6.1); "
                     "'pipelined' runs the REAL double-buffered sampler "
                     "(prefetch thread + async step dispatch)")
+    ap.add_argument("--trainable-features",
+                    action=argparse.BooleanOptionalAction, default=False,
+                    help="layer-0 rows are learnable embedding-store rows "
+                    "updated by row-sparse AdamW (requires protocol=sync)")
+    ap.add_argument("--embed-lr", type=float, default=0.1,
+                    help="sparse-AdamW learning rate for the embedding rows")
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="pipelined schedule: batches sampled ahead of the "
                     "device step (bounded queue depth)")

@@ -7,6 +7,27 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# tier-matrix completeness: every tests/test_*.py must have a row in
+# tests/README.md — fail FAST (before any pytest run) so a new test module
+# can't silently ship undocumented / untiered
+python - <<'EOF'
+import pathlib, re, sys
+
+tests = pathlib.Path("tests")
+readme = (tests / "README.md").read_text()
+listed = set(re.findall(r"test_\w+\.py", readme))
+present = {p.name for p in tests.glob("test_*.py")}
+missing = sorted(present - listed)
+if missing:
+    sys.exit("tests/README.md tier matrix is missing rows for: "
+             + ", ".join(missing))
+stale = sorted(listed - present)
+if stale:
+    sys.exit("tests/README.md lists test modules that do not exist: "
+             + ", ".join(stale))
+print(f"tier matrix complete: {len(present)} test modules all listed")
+EOF
+
 if [[ "${1:-}" == "--smoke" ]]; then
     python -m pytest -x -q tests/test_kernels.py tests/test_exec_protocols.py
     # 4-device engine smoke: one exec model x {sync, async} vs the oracle
@@ -92,6 +113,28 @@ for model, kw in (("sage", dict(execution="p2p")),
     assert err < 1e-4, (model, err)
     assert eng._jit_step._cache_size() == 1
     print(f"smoke OK model={model} {kw}: oracle err {err:.2e}, 1 compile")
+EOF
+    # 4-device TRAINABLE-FEATURES smoke: layer-0 rows as learnable embedding
+    # store rows — node-wise p2p with the cache as a live hot-row overlay,
+    # row-sparse AdamW vs the dense-table oracle, embed-grad bytes accounted
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
+import jax
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+
+g = sbm_graph(96, num_blocks=4, p_in=0.08, p_out=0.01, seed=0)
+eng = DistGNNEngine(g, cfg=EngineConfig(
+    execution="p2p", batching="node_wise", batch_size=8, fanouts=(3, 3),
+    hidden=16, lr=0.3, cache_policy="static_degree", cache_capacity=12,
+    trainable_features=True, embed_lr=0.05))
+ld, _ = eng.train(3)
+lr_, _ = eng.train(3, reference=True)
+err = max(abs(a - b) for a, b in zip(ld, lr_))
+assert err < 1e-4, err
+assert eng._jit_mb_step._cache_size() == 1, eng._jit_mb_step._cache_size()
+assert eng.comm_stats.embed_grad_bytes > 0
+print(f"smoke OK trainable node_wise p2p+overlay: oracle err {err:.2e}, "
+      f"1 compile, {eng.comm_stats.embed_grad_bytes} embed-grad bytes")
 EOF
     # 4-device VERTEX-CUT engine smoke: cartesian2d 2x2 cut, sync protocol,
     # replica-sync p2p GAS exchange vs the oracle + bytes accounting

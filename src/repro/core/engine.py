@@ -119,6 +119,11 @@ from repro.core.execution.replica_sync import (
     replica_combine,
     replica_combine_max,
 )
+from repro.core.feature_store import (
+    FeatureStore,
+    overlay_refresh_plan,
+    touched_rows_from_frontier,
+)
 from repro.core.graph import Graph
 from repro.core.models.gnn import init_gnn_params, padded_minibatch_forward
 from repro.core.partition.cost_models import FEAT_BYTES, model_exchange_widths
@@ -127,7 +132,11 @@ from repro.core.partition.vertex_cut import VERTEX_CUTS
 from repro.core.partition.vertex_layout import build_vertex_layout
 from repro.core.protocols.async_hist import block_refresh
 from repro.core.sampling.cache import CACHE_POLICIES, device_cache_ids
-from repro.core.sampling.distributed import CommStats, feature_fetch_bytes
+from repro.core.sampling.distributed import (
+    CommStats,
+    embedding_update_bytes,
+    feature_fetch_bytes,
+)
 from repro.core.sampling.partition_batch import (
     p2p_frontier_halo_cap,
     partition_targets,
@@ -141,6 +150,7 @@ from repro.core.sampling.samplers import (
     subgraph_sample,
 )
 from repro.kernels.ell_spmm import ell_attend, ell_spmm
+from repro.optim.sparse_optim import row_adamw_update, sparse_adamw_ids
 from repro.kernels.ref import sddmm_ref
 from repro.kernels.sddmm import sddmm_ell
 
@@ -181,6 +191,20 @@ class EngineConfig:
     #   bucket layout: row t of a pair's need list always lands in
     #   installment t // w, so shapes never change across batches)
     prefetch_depth: int = 2  # batches the pipelined epoch samples ahead
+    trainable_features: bool = False  # layer-0 rows are LEARNABLE embeddings:
+    #   the owner-sharded feature shard moves from the step's constants into
+    #   its state and a row-sparse AdamW (optim/sparse_optim.py) updates ONLY
+    #   the rows the step touched — all owned real rows under full_graph, the
+    #   frontier's owner rows under mini-batch (master-masked under
+    #   vertex_cut so replicas never double-update; the masters' deltas are
+    #   re-broadcast through the replica sync so copies never drift).
+    #   Requires protocol='sync' (historical embeddings of a moving layer-0
+    #   table are a ROADMAP follow-up).
+    embed_lr: float = 0.1  # sparse-AdamW hyperparams for the embedding rows
+    embed_b1: float = 0.9
+    embed_b2: float = 0.999
+    embed_eps: float = 1e-8
+    embed_weight_decay: float = 0.0
     hidden: int = 32
     num_layers: int = 2
     lr: float = 0.5
@@ -215,6 +239,12 @@ class DistGNNEngine:
             raise ValueError(
                 "mini-batch training supports protocol='sync' only: the "
                 "historical-embedding protocols are full-graph state")
+        if cfg.trainable_features and cfg.protocol != "sync":
+            raise ValueError(
+                "trainable_features requires protocol='sync': the "
+                "historical-embedding protocols cache layer outputs of a "
+                "FROZEN layer-0 table; staleness bounds for a moving "
+                "embedding table are a ROADMAP follow-up")
         if cfg.exchange_chunks < 1:
             raise ValueError("exchange_chunks must be >= 1")
         if cfg.p2p_buckets < 1:
@@ -267,6 +297,18 @@ class DistGNNEngine:
                 * int(sum(model_exchange_widths(cfg.model, self.dims,
                                                 "vertex_cut")))
                 * FEAT_BYTES)
+        if cfg.trainable_features and cfg.batching == "full_graph":
+            # layer-0 gradient routing per step (the transpose of one
+            # exchange pass at width dims[0]); mirrors the standalone
+            # cost_models.embedding_grad_bytes_per_step exactly
+            D0 = self.dims[0]
+            if cfg.partition_family == "vertex_cut":
+                rows = 2 * self._vc_rows_per_layer  # grad combine + delta
+            elif cfg.execution in ("broadcast", "ring"):
+                rows = self.k * (self.k - 1) * self.nb
+            else:  # p2p: each halo row's cotangent returns to its owner once
+                rows = self._halo_rows
+            self._emb_bytes_per_step = rows * D0 * FEAT_BYTES
         self._step = None
         self._ref_step = None
         self._mb_step = None
@@ -318,7 +360,16 @@ class DistGNNEngine:
         self.mask = jnp.asarray(mask)
         degp = np.maximum(mask.sum(1, keepdims=True), 1.0).astype(np.float32)
         self.deg = jnp.asarray(degp)
-        self.X = jnp.asarray(X)
+        # the feature plane lives in an owner-partitioned store: flat store
+        # id == the relabeled vertex id (owner * nb + slot), so the exchange
+        # plans move store rows without any translation
+        self.store = FeatureStore(X.reshape(k, nb, D))
+        self.X = self.store.device_table()
+        # full-graph touched set for trainable embeddings: every REAL owned
+        # row is in the batch (pads stay untouched forever)
+        real = np.zeros((Vp,), np.float32)
+        real[new_of_old[olds]] = 1.0
+        self.emb_touched = real
         self.y = jnp.asarray(y)
         self.train_w = jnp.asarray(train_w)
         self.test_w = jnp.asarray(test_w)
@@ -375,6 +426,10 @@ class DistGNNEngine:
                 need_sets[d][s] = np.unique(local_id[rows][sel])
         cap = max(1, max((len(x) for row in need_sets for x in row), default=1))
         self.cap = cap
+        # true halo rows per layer-0-width pass (== part.communication_volume:
+        # each need set is one partition's remote in-neighbor set) — the
+        # trainable-embedding gradient transpose ships exactly these rows back
+        self._halo_rows = sum(len(x) for row in need_sets for x in row)
         # power-of-two bucketed installment caps (1 bucket = the classic
         # max-pairwise-need buffer): each lowered all_to_all operand holds
         # k*w rows instead of k*cap, shipping the same rows over B rounds
@@ -424,7 +479,16 @@ class DistGNNEngine:
         self.Vp = Vp = k * nv
         self.K = lay.Kc
         D = g.features.shape[1]
-        self.X = jnp.asarray(lay.X.reshape(Vp, D))
+        # replica-slot store: flat store id == d * nv + slot; replicas of a
+        # vertex are separate store rows kept value-identical by the
+        # master-delta broadcast when trainable
+        self.store = FeatureStore(np.asarray(lay.X, np.float32))
+        self.X = self.store.device_table()
+        # trainable embeddings update at MASTER slots only (replicas receive
+        # the master's delta through the replica sync, so they never drift
+        # and never double-update)
+        self.emb_touched = np.asarray(
+            lay.master_mask.reshape(Vp), np.float32)
         self.y = jnp.asarray(lay.y.reshape(Vp))
         self.train_w = jnp.asarray(lay.train_w.reshape(Vp))
         self.test_w = jnp.asarray(lay.test_w.reshape(Vp))
@@ -536,13 +600,21 @@ class DistGNNEngine:
         from jax.sharding import NamedSharding
         ax = self.axis
         rep = NamedSharding(self.mesh, P())
-        shardings = dict(
+        row = NamedSharding(self.mesh, P(ax))  # == P(ax, None) for 2D, but
+        shardings = dict(                      # spelled how the step emits it
             params=jax.tree_util.tree_map(lambda _: rep, params),
             step=rep,
-            hist=tuple(NamedSharding(self.mesh, P(ax))  # == P(ax, None), but
-                       for _ in range(L)),  # spelled how the step emits it
+            hist=tuple(row for _ in range(L)),
             age=NamedSharding(self.mesh, P(None, ax)),
         )
+        if self.cfg.trainable_features:
+            # the embedding table (the store's device view) and its owner-
+            # sharded sparse-AdamW moments live in the STATE, not the consts
+            state["embed"] = self.X
+            state["emb_m"] = jnp.zeros_like(self.X)
+            state["emb_v"] = jnp.zeros_like(self.X)
+            state["emb_t"] = jnp.zeros((self.Vp,), jnp.int32)
+            shardings.update(embed=row, emb_m=row, emb_v=row, emb_t=row)
         return jax.device_put(state, shardings)
 
     # ------------------------------------------------------------------
@@ -729,12 +801,13 @@ class DistGNNEngine:
         _, num, den = consume(carry, blk_last, (me + k - 1) % k)
         return num, den
 
-    def _forward_local(self, params, hist, age, step, consts_local):
+    def _forward_local(self, params, hist, age, step, consts_local, X=None):
         """Full local forward with protocol mixing; returns (logits_local,
-        new_hist, new_age, rows_pushed)."""
+        new_hist, new_age, rows_pushed).  ``X`` overrides the layer-0 rows
+        (the trainable-embedding path differentiates through it)."""
         c = self.cfg
         ax = self.axis
-        H = consts_local["X"]
+        H = consts_local["X"] if X is None else X
         L = len(self.dims) - 1
         me = jax.lax.axis_index(ax)
         new_hist, new_age, pushed = [], [], jnp.zeros((), jnp.float32)
@@ -754,6 +827,41 @@ class DistGNNEngine:
                 new_age.append(age[l])
         return H, tuple(new_hist), jnp.stack(new_age), pushed
 
+    def _embed_hparams(self):
+        c = self.cfg
+        return dict(lr=c.embed_lr, b1=c.embed_b1, b2=c.embed_b2,
+                    eps=c.embed_eps, weight_decay=c.embed_weight_decay)
+
+    def _embed_update_full(self, emb, g_emb, state, cl):
+        """Full-graph sparse-AdamW embedding update (device-local under
+        shard_map): masked-dense over the owned shard — the touched set is
+        static (every real owned row; vertex masters under vertex_cut), so
+        the mask form costs exactly the touched rows in moment traffic and
+        leaves untouched rows (pads / non-masters) bitwise unchanged.
+
+        vertex_cut: g_emb is each replica's PARTIAL gradient; the replica
+        sync combines it to the full vertex gradient, the update applies at
+        MASTER slots only (moments live at masters), and the masters' deltas
+        are re-broadcast through the same sync — a sum with one nonzero
+        contribution, so every replica adds the bitwise-same delta and the
+        copies never drift."""
+        c = self.cfg
+        touched = cl["emb_touched"]
+        if c.partition_family == "vertex_cut":
+            g_emb = replica_combine(c.execution, g_emb, cl, axis=self.axis,
+                                    k=self.k, ell_fn=self._ell,
+                                    num_chunks=c.exchange_chunks)
+        emb2, m2, v2, t2 = row_adamw_update(
+            emb, g_emb, state["emb_m"], state["emb_v"], state["emb_t"],
+            touched, **self._embed_hparams())
+        if c.partition_family == "vertex_cut":
+            delta = (emb2 - emb) * touched[:, None]
+            delta_all = replica_combine(
+                c.execution, delta, cl, axis=self.axis, k=self.k,
+                ell_fn=self._ell, num_chunks=c.exchange_chunks)
+            emb2 = emb + delta_all
+        return dict(embed=emb2, emb_m=m2, emb_v=v2, emb_t=t2)
+
     def make_step(self):
         """The jitted distributed train step: state -> (state, metrics)."""
         if self._step is not None:
@@ -766,6 +874,12 @@ class DistGNNEngine:
                       deg=self.deg, ids=self.ids_exec, mask=self.mask)
         shard = dict(X=P(ax, None), y=P(ax), w=P(ax), bmask=P(ax),
                      deg=P(ax, None), ids=P(ax, None), mask=P(ax, None))
+        if c.trainable_features:
+            # layer-0 rows come from state["embed"]; the touched mask is the
+            # static full-graph batch (real owned rows / vertex masters)
+            del consts["X"], shard["X"]
+            consts["emb_touched"] = jnp.asarray(self.emb_touched)
+            shard["emb_touched"] = P(ax)
         if c.partition_family == "vertex_cut":
             for key, a in self._vc_plan.items():
                 consts[key] = a
@@ -781,6 +895,9 @@ class DistGNNEngine:
             params=P(), step=P(),
             hist=tuple(P(ax, None) for _ in range(L)),
             age=P(None, ax))
+        if c.trainable_features:
+            state_specs.update(embed=P(ax, None), emb_m=P(ax, None),
+                               emb_v=P(ax, None), emb_t=P(ax))
 
         def local_step(state, consts_local):
             params, step_i = state["params"], state["step"]
@@ -805,17 +922,28 @@ class DistGNNEngine:
             # the collectives inside the forward (all_gather / all_to_all /
             # ppermute) have stable, well-defined transposes on all supported
             # versions, so grads of the local numerator are portable.
-            def num_fn(p):
+            def num_fn(p, X_l):
                 logits, new_hist, new_age, pushed = self._forward_local(
-                    p, hist, age_l, step_i, cl)
+                    p, hist, age_l, step_i, cl, X=X_l)
                 lse = jax.scipy.special.logsumexp(logits, axis=-1)
                 ll = jnp.take_along_axis(
                     logits, cl["y"][:, None], axis=-1)[:, 0]
                 num = ((lse - ll) * cl["w"]).sum()
                 return num, (logits, new_hist, new_age, pushed)
 
-            (num, (logits, new_hist, new_age, pushed)), grads = (
-                jax.value_and_grad(num_fn, has_aux=True)(params))
+            if c.trainable_features:
+                # Differentiating w.r.t. the layer-0 rows rides the SAME
+                # stable collective transposes: g_X arrives already summed
+                # over every device that read the row (all_gather ->
+                # reduce-scatter etc.), i.e. the owner's total gradient — no
+                # psum, which would double-count it.
+                (num, (logits, new_hist, new_age, pushed)), (grads, g_X) = (
+                    jax.value_and_grad(num_fn, argnums=(0, 1), has_aux=True)(
+                        params, state["embed"]))
+            else:
+                (num, (logits, new_hist, new_age, pushed)), grads = (
+                    jax.value_and_grad(num_fn, has_aux=True)(
+                        params, cl["X"]))
             den = jnp.maximum(jax.lax.psum(cl["w"].sum(), ax), 1.0)
             loss = jax.lax.psum(num, ax) / den
             grads = jax.tree_util.tree_map(
@@ -824,6 +952,9 @@ class DistGNNEngine:
                 lambda p_, g_: p_ - c.lr * g_, params, grads)
             state2 = dict(params=params2, step=step_i + 1,
                           hist=new_hist, age=new_age)
+            if c.trainable_features:
+                state2.update(self._embed_update_full(
+                    state["embed"], g_X / den, state, cl))
             metrics = dict(loss=loss,
                            rows_pushed=jax.lax.psum(pushed, ax))
             return state2, metrics, logits
@@ -899,8 +1030,8 @@ class DistGNNEngine:
             z = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), Hw)
             return z if last else jax.nn.relu(z)
 
-        def forward(params, hist, age, step_i):
-            H = X
+        def forward(params, hist, age, step_i, X_in=None):
+            H = X if X_in is None else X_in
             new_hist, new_age = [], []
             pushed = jnp.zeros((), jnp.float32)
             for l, p_l in enumerate(params["layers"]):
@@ -935,24 +1066,49 @@ class DistGNNEngine:
                     new_age.append(age[l])
             return H, tuple(new_hist), jnp.stack(new_age), pushed
 
+        if c.trainable_features:
+            touched_ref = jnp.asarray(self.emb_touched)
+
+        def ref_combine_rows(rows):
+            """Replica combine in the flattened replica space — the oracle's
+            counterpart of the replica-sync passes in _embed_update_full."""
+            return reference_combine(rows.reshape(k, nb, -1), vert_ids_ref,
+                                     Vg).reshape(Vp, -1)
+
         @jax.jit
         def ref_step(state):
             params, step_i = state["params"], state["step"]
 
-            def loss_fn(p):
+            def loss_fn(p, X_in):
                 logits, new_hist, new_age, pushed = forward(
-                    p, state["hist"], state["age"], step_i)
+                    p, state["hist"], state["age"], step_i, X_in)
                 lse = jax.scipy.special.logsumexp(logits, axis=-1)
                 ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
                 loss = ((lse - ll) * w).sum() / jnp.maximum(w.sum(), 1.0)
                 return loss, (logits, new_hist, new_age, pushed)
 
-            (loss, (logits, new_hist, new_age, pushed)), grads = (
-                jax.value_and_grad(loss_fn, has_aux=True)(params))
+            if c.trainable_features:
+                (loss, (logits, new_hist, new_age, pushed)), (grads, g_X) = (
+                    jax.value_and_grad(loss_fn, argnums=(0, 1),
+                                       has_aux=True)(params, state["embed"]))
+            else:
+                (loss, (logits, new_hist, new_age, pushed)), grads = (
+                    jax.value_and_grad(loss_fn, has_aux=True)(params, X))
             params2 = jax.tree_util.tree_map(
                 lambda p_, g_: p_ - c.lr * g_, params, grads)
             state2 = dict(params=params2, step=step_i + 1,
                           hist=new_hist, age=new_age)
+            if c.trainable_features:
+                emb = state["embed"]
+                if c.partition_family == "vertex_cut":
+                    g_X = ref_combine_rows(g_X)
+                emb2, m2, v2, t2 = row_adamw_update(
+                    emb, g_X, state["emb_m"], state["emb_v"],
+                    state["emb_t"], touched_ref, **self._embed_hparams())
+                if c.partition_family == "vertex_cut":
+                    delta = (emb2 - emb) * touched_ref[:, None]
+                    emb2 = emb + ref_combine_rows(delta)
+                state2.update(embed=emb2, emb_m=m2, emb_v=v2, emb_t=t2)
             return state2, dict(loss=loss, rows_pushed=pushed), logits
 
         self._ref_step = ref_step
@@ -992,7 +1148,6 @@ class DistGNNEngine:
             self.fcap_widths = bucketed_cap_widths(self.fcap, c.p2p_buckets)
         D = g.features.shape[1]
         self.Ccap = Ccap = max(int(c.cache_capacity), 1)
-        cache_tab = np.zeros((k, Ccap, D), np.float32)
         self.cache_old_ids = []
         self._cache_slot = []  # per device: old global id -> cache row
         self._cache_set = []
@@ -1000,10 +1155,28 @@ class DistGNNEngine:
             ids_d = device_cache_ids(g, self.part.assignment, d,
                                      c.cache_policy, c.cache_capacity)
             self.cache_old_ids.append(ids_d)
-            cache_tab[d, : len(ids_d)] = g.features[ids_d]
             self._cache_slot.append({int(v): j for j, v in enumerate(ids_d)})
             self._cache_set.append(frozenset(int(v) for v in ids_d))
-        self._cache_table = jnp.asarray(cache_tab)
+        # the cache is a hot-row OVERLAY on the feature store: per-device
+        # pinned remote store rows.  Frozen features: a build-time snapshot
+        # (exact forever).  Trainable: the snapshot would go stale, so the
+        # jitted step re-gathers the overlay rows from the LIVE owner shards
+        # every step through a static bucketed all_to_all plan (whose
+        # transpose routes cache-hit gradients back to the owners).
+        overlay_sids = [self.new_of_old[ids_d].astype(np.int64)
+                        for ids_d in self.cache_old_ids]
+        self.store.attach_overlay(overlay_sids, Ccap)
+        self._cache_table = jnp.asarray(self.store.overlay_table())
+        self._has_overlay = any(len(a) for a in overlay_sids)
+        if c.trainable_features:
+            if self._has_overlay:
+                ov_send, ov_tab, self._ov_widths = overlay_refresh_plan(
+                    overlay_sids, k, self.nb, Ccap, buckets=c.p2p_buckets)
+                self._ov_send = jnp.asarray(ov_send)
+                self._ov_tab = jnp.asarray(ov_tab)
+            # touched-row cap: per owner, at most every one of its rows, and
+            # at most one per frontier slot across all k devices
+            self.tcap = min(self.nb, k * self.caps[0])
 
     def _sample_host(self, step_idx: int):
         """Host sampling stage: per device, draw targets from its OWNED
@@ -1107,6 +1280,12 @@ class DistGNNEngine:
             feature_fetch_bytes(self.part, d, mb.layer_vertices[0], D,
                                 cached_ids=self._cache_set[d],
                                 stats=self.comm_stats)
+            if c.trainable_features:
+                embedding_update_bytes(
+                    self.part, d, mb.layer_vertices[0], D,
+                    cached_ids=self._cache_set[d],
+                    overlay_rows=len(self.cache_old_ids[d]),
+                    stats=self.comm_stats)
         batch = dict(
             frontier=jnp.asarray(frontier.astype(np.int32)),
             y=jnp.asarray(y), w=jnp.asarray(w),
@@ -1123,6 +1302,13 @@ class DistGNNEngine:
             batch["send_rows"] = jnp.asarray(
                 bucketed_send_table(need_lists, k, widths))
             batch["tab_ids"] = jnp.asarray(tab_ids)
+        if c.trainable_features:
+            # per-OWNER touched local rows (sorted, deterministic): the
+            # sparse-AdamW id set — every row any device's frontier reads,
+            # hit or miss (hits read the refreshed overlay whose gradient
+            # still lands on the owner's shard)
+            batch["emb_ids"] = jnp.asarray(touched_rows_from_frontier(
+                frontier, k, nb, self.tcap))
         return batch
 
     def sample_minibatch(self, step_idx: int) -> Dict:
@@ -1158,21 +1344,47 @@ class DistGNNEngine:
         # feeding the state back in reuses the ONE compiled executable
         # (the recompile-count contract in tests/test_engine_minibatch.py).
         from jax.sharding import NamedSharding
-        return jax.device_put(state, NamedSharding(self.mesh, P()))
+        state = jax.device_put(state, NamedSharding(self.mesh, P()))
+        if self.cfg.trainable_features:
+            # layer-0 rows are parameters: the store table plus owner-sharded
+            # sparse-AdamW moments and per-row step counts
+            mat = NamedSharding(self.mesh, P(self.axis, None))
+            row = NamedSharding(self.mesh, P(self.axis))
+            state["embed"] = jax.device_put(self.X, mat)
+            state["emb_m"] = jax.device_put(jnp.zeros_like(self.X), mat)
+            state["emb_v"] = jax.device_put(jnp.zeros_like(self.X), mat)
+            state["emb_t"] = jax.device_put(
+                jnp.zeros((self.Vp,), jnp.int32), row)
+        return state
 
-    def _fetch_frontier(self, X_local, cache_local, bl):
+    def _overlay_rows_live(self, X_local, cl):
+        """Re-gather this device's overlay rows from the LIVE owner shards
+        (trainable_features): the static bucketed all_to_all refresh plan —
+        one extra exchange per step whose transpose routes cache-hit
+        gradients back to the owners' embedding shards."""
+        recv = bucketed_all_to_all(X_local, cl["ov_send"], self.axis, self.k)
+        tab = jnp.concatenate([X_local, recv, zero_pad_row(X_local)], 0)
+        return jnp.take(tab, cl["ov_tab"], axis=0)  # [Ccap, D]
+
+    def _fetch_frontier(self, X_local, cache_rows, bl):
         """Device-local frontier feature fetch under shard_map: resident-cache
         reads plus the execution-model exchange for the misses.  Every valid
         frontier slot is covered by exactly one of the two (the other reads a
-        zero row), so the sum is exact.  The broadcast/p2p exchanges are
-        feature-chunked like `_exchange_and_aggregate` when
-        ``exchange_chunks`` > 1 (the frontier gather consumes chunk c while
-        chunk c+1's collective flies)."""
+        zero row), so the sum is exact.  ``cache_rows`` is the [Ccap, D]
+        overlay table (the static snapshot, or the live-refreshed rows under
+        trainable_features), or None when no cache is configured.  The
+        broadcast/p2p exchanges are feature-chunked like
+        `_exchange_and_aggregate` when ``exchange_chunks`` > 1 (the frontier
+        gather consumes chunk c while chunk c+1's collective flies)."""
         ax, k, nb = self.axis, self.k, self.nb
         C = self.cfg.exchange_chunks
         D = X_local.shape[1]
-        ctab = jnp.concatenate([cache_local, zero_pad_row(cache_local)], 0)
-        F = jnp.take(ctab, bl["cache_ids"], axis=0)
+        if cache_rows is None:
+            F = jnp.zeros((bl["cache_ids"].shape[0], D), X_local.dtype)
+        else:
+            ctab = jnp.concatenate(
+                [cache_rows, zero_pad_row(cache_rows)], 0)
+            F = jnp.take(ctab, bl["cache_ids"], axis=0)
         if self.cfg.execution == "broadcast":
             def exchange(hc):
                 h_full = jax.lax.all_gather(hc, ax, axis=0, tiled=True)
@@ -1223,8 +1435,18 @@ class DistGNNEngine:
                              "use make_step()")
         ax, c, k, L = self.axis, self.cfg, self.k, self.cfg.num_layers
 
-        consts = dict(X=self.X, cache=self._cache_table)
-        cshard = dict(X=P(ax, None), cache=P(ax, None, None))
+        if c.trainable_features:
+            # the feature plane lives in STATE (store rows are parameters);
+            # the cache snapshot is replaced by the live overlay refresh plan
+            consts, cshard = {}, {}
+            if self._has_overlay:
+                consts["ov_send"] = self._ov_send
+                consts["ov_tab"] = self._ov_tab
+                cshard["ov_send"] = P(ax, None, None, None)
+                cshard["ov_tab"] = P(ax, None)
+        else:
+            consts = dict(X=self.X, cache=self._cache_table)
+            cshard = dict(X=P(ax, None), cache=P(ax, None, None))
         bspec = dict(frontier=P(ax, None), y=P(ax, None), w=P(ax, None),
                      adj=tuple(P(ax, None, None) for _ in range(L)),
                      self_idx=tuple(P(ax, None) for _ in range(L)),
@@ -1237,28 +1459,58 @@ class DistGNNEngine:
             bspec["send_rows"] = P(ax, None, None, None)
             bspec["tab_ids"] = P(ax, None)
         state_spec = dict(params=P(), step=P())
+        if c.trainable_features:
+            bspec["emb_ids"] = P(ax, None)
+            state_spec.update(embed=P(ax, None), emb_m=P(ax, None),
+                              emb_v=P(ax, None), emb_t=P(ax))
+        nb = self.nb
 
         def local_step(state, consts_local, batch_local):
             params, step_i = state["params"], state["step"]
             bl = {key: (tuple(a[0] for a in v) if isinstance(v, tuple)
                         else v[0]) for key, v in batch_local.items()}
-            X_l = consts_local["X"]
-            cache_l = consts_local["cache"][0]
-            F = self._fetch_frontier(X_l, cache_l, bl)
-            # Differentiate the LOCAL loss numerator only (same rationale as
-            # the full-graph step); the fetch above is outside the grad, so
-            # the grad path is collective-free and portable.
-            def num_fn(p):
-                logits = padded_minibatch_forward(
-                    p, list(bl["adj"]), F, model=c.model,
-                    self_idx=list(bl["self_idx"]))
-                lse = jax.scipy.special.logsumexp(logits, axis=-1)
-                ll = jnp.take_along_axis(
-                    logits, bl["y"][:, None], axis=-1)[:, 0]
-                return ((lse - ll) * bl["w"]).sum(), logits
+            if c.trainable_features:
+                cl = {key: consts_local[key][0] for key in consts_local}
 
-            (num, logits), grads = jax.value_and_grad(
-                num_fn, has_aux=True)(params)
+                # the fetch moves INSIDE the differentiated function: the
+                # collectives' transposes route each frontier row's cotangent
+                # back to its owner's embedding shard (all_gather ->
+                # psum_scatter, ppermute -> inverse ppermute, all_to_all ->
+                # reversed all_to_all), so g_X arrives pre-summed across
+                # devices — the owner's TOTAL gradient, no extra psum
+                def num_fn(p, X_l):
+                    cache_rows = (self._overlay_rows_live(X_l, cl)
+                                  if self._has_overlay else None)
+                    F = self._fetch_frontier(X_l, cache_rows, bl)
+                    logits = padded_minibatch_forward(
+                        p, list(bl["adj"]), F, model=c.model,
+                        self_idx=list(bl["self_idx"]))
+                    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+                    ll = jnp.take_along_axis(
+                        logits, bl["y"][:, None], axis=-1)[:, 0]
+                    return ((lse - ll) * bl["w"]).sum(), logits
+
+                (num, logits), (grads, g_X) = jax.value_and_grad(
+                    num_fn, argnums=(0, 1), has_aux=True)(
+                        params, state["embed"])
+            else:
+                X_l = consts_local["X"]
+                cache_l = consts_local["cache"][0]
+                F = self._fetch_frontier(X_l, cache_l, bl)
+                # Differentiate the LOCAL loss numerator only (same rationale
+                # as the full-graph step); the fetch above is outside the
+                # grad, so the grad path is collective-free and portable.
+                def num_fn(p):
+                    logits = padded_minibatch_forward(
+                        p, list(bl["adj"]), F, model=c.model,
+                        self_idx=list(bl["self_idx"]))
+                    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+                    ll = jnp.take_along_axis(
+                        logits, bl["y"][:, None], axis=-1)[:, 0]
+                    return ((lse - ll) * bl["w"]).sum(), logits
+
+                (num, logits), grads = jax.value_and_grad(
+                    num_fn, has_aux=True)(params)
             den = jnp.maximum(jax.lax.psum(bl["w"].sum(), ax), 1.0)
             loss = jax.lax.psum(num, ax) / den
             grads = jax.tree_util.tree_map(
@@ -1266,6 +1518,18 @@ class DistGNNEngine:
             params2 = jax.tree_util.tree_map(
                 lambda p_, g_: p_ - c.lr * g_, params, grads)
             state2 = dict(params=params2, step=step_i + 1)
+            if c.trainable_features:
+                # scatter-update ONLY this owner's touched rows: emb_ids row
+                # d (sorted distinct local rows any device's frontier read,
+                # sentinel nb) against the pre-summed owner gradient
+                ids = bl["emb_ids"]
+                g_rows = jnp.take(
+                    g_X, jnp.where(ids < nb, ids, 0), axis=0) / den
+                emb2, m2, v2, t2 = sparse_adamw_ids(
+                    state["embed"], state["emb_m"], state["emb_v"],
+                    state["emb_t"], ids, g_rows, valid=ids < nb,
+                    **self._embed_hparams())
+                state2.update(embed=emb2, emb_m=m2, emb_v=v2, emb_t=t2)
             return state2, dict(loss=loss), logits[None]
 
         smapped = shard_map(
@@ -1297,33 +1561,67 @@ class DistGNNEngine:
         if self._mb_ref_step is not None:
             return self._mb_ref_step
         c = self.cfg
+        k, nb = self.k, self.nb
         D = self.g.features.shape[1]
-        table = jnp.concatenate(
-            [self.X, jnp.zeros((1, D), self.X.dtype)], 0)
+        zrow = jnp.zeros((1, D), self.X.dtype)
+        table0 = jnp.concatenate([self.X, zrow], 0)
 
-        @jax.jit
-        def ref_step(state, batch):
-            params, step_i = state["params"], state["step"]
-            F = jnp.take(table, batch["frontier"], axis=0)  # [k, cap0, D]
+        def batch_loss(p, F, batch):
+            logits = jax.vmap(
+                lambda f, adjs, sidx: padded_minibatch_forward(
+                    p, list(adjs), f, model=c.model, self_idx=list(sidx))
+            )(F, batch["adj"], batch["self_idx"])
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(
+                logits, batch["y"][..., None], axis=-1)[..., 0]
+            w = batch["w"]
+            loss = ((lse - ll) * w).sum() / jnp.maximum(w.sum(), 1.0)
+            return loss, logits
 
-            def loss_fn(p):
-                logits = jax.vmap(
-                    lambda f, adjs, sidx: padded_minibatch_forward(
-                        p, list(adjs), f, model=c.model, self_idx=list(sidx))
-                )(F, batch["adj"], batch["self_idx"])
-                lse = jax.scipy.special.logsumexp(logits, axis=-1)
-                ll = jnp.take_along_axis(
-                    logits, batch["y"][..., None], axis=-1)[..., 0]
-                w = batch["w"]
-                loss = ((lse - ll) * w).sum() / jnp.maximum(w.sum(), 1.0)
-                return loss, logits
+        if c.trainable_features:
+            # dense [Vp, D] oracle embedding: fetch through the live table
+            # inside the grad, then sparse-AdamW over the batch's global
+            # touched ids — row (s, j) of emb_ids maps to flat id s*nb + j
+            offsets = jnp.asarray(
+                (np.arange(k) * nb)[:, None], jnp.int32)
 
-            (loss, logits), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params)
-            params2 = jax.tree_util.tree_map(
-                lambda p_, g_: p_ - c.lr * g_, params, grads)
-            return (dict(params=params2, step=step_i + 1),
-                    dict(loss=loss), logits)
+            @jax.jit
+            def ref_step(state, batch):
+                params, step_i = state["params"], state["step"]
+
+                def loss_fn(p, emb):
+                    table = jnp.concatenate([emb, zrow], 0)
+                    F = jnp.take(table, batch["frontier"], axis=0)
+                    return batch_loss(p, F, batch)
+
+                (loss, logits), (grads, g_E) = jax.value_and_grad(
+                    loss_fn, argnums=(0, 1), has_aux=True)(
+                        params, state["embed"])
+                params2 = jax.tree_util.tree_map(
+                    lambda p_, g_: p_ - c.lr * g_, params, grads)
+                valid = (batch["emb_ids"] < nb).reshape(-1)
+                ids = (offsets + batch["emb_ids"]).reshape(-1)
+                g_rows = jnp.take(
+                    g_E, jnp.where(valid, ids, 0), axis=0)
+                emb2, m2, v2, t2 = sparse_adamw_ids(
+                    state["embed"], state["emb_m"], state["emb_v"],
+                    state["emb_t"], ids, g_rows, valid=valid,
+                    **self._embed_hparams())
+                return (dict(params=params2, step=step_i + 1, embed=emb2,
+                             emb_m=m2, emb_v=v2, emb_t=t2),
+                        dict(loss=loss), logits)
+        else:
+            @jax.jit
+            def ref_step(state, batch):
+                params, step_i = state["params"], state["step"]
+                F = jnp.take(table0, batch["frontier"], axis=0)  # [k,cap0,D]
+
+                (loss, logits), grads = jax.value_and_grad(
+                    batch_loss, has_aux=True)(params, F, batch)
+                params2 = jax.tree_util.tree_map(
+                    lambda p_, g_: p_ - c.lr * g_, params, grads)
+                return (dict(params=params2, step=step_i + 1),
+                        dict(loss=loss), logits)
 
         self._mb_ref_step = ref_step
         return ref_step
@@ -1415,15 +1713,21 @@ class DistGNNEngine:
             return losses, logits
         step = self.make_reference_step() if reference else self.make_step()
         state = self.init_state()
-        if self.cfg.partition_family == "vertex_cut" and not reference:
+        if not reference and (self.cfg.partition_family == "vertex_cut"
+                              or self.cfg.trainable_features):
             self.comm_stats = CommStats()
         losses = []
         logits = None
         for _ in range(epochs):
             state, metrics, logits = step(state)
             losses.append(float(metrics["loss"]))
-            if self.cfg.partition_family == "vertex_cut" and not reference:
-                self.comm_stats.replica_sync_bytes += self._vc_bytes_per_step
+            if not reference:
+                if self.cfg.partition_family == "vertex_cut":
+                    self.comm_stats.replica_sync_bytes += \
+                        self._vc_bytes_per_step
+                if self.cfg.trainable_features:
+                    self.comm_stats.embed_grad_bytes += \
+                        self._emb_bytes_per_step
         return losses, logits
 
     def accuracy(self, logits, split: str = "test") -> float:

@@ -1,0 +1,194 @@
+"""Owner-partitioned, id-addressed feature/embedding store (ROADMAP item 1).
+
+The survey's "massive feature communication" challenge treats features as
+fixed files; at production scale the feature plane is a sharded KV-store of
+(often learnable) embedding rows.  `FeatureStore` is that abstraction for the
+engine: one table of shape [k, rows, D] whose row (owner, slot) lives on
+device `owner`, addressed by the flat store id
+
+    sid = owner * rows + slot
+
+which IS the engine's relabeled vertex space under edge_cut (device d owns
+[d*nb, (d+1)*nb)) and its replica-slot space under vertex_cut (slot space
+[d*nv, (d+1)*nv)) — so both partition families resolve feature rows through
+the same addressing, and the exchange plans (broadcast / ring / p2p) need no
+change: they already move rows of this table.
+
+The mini-batch feature cache becomes a HOT-ROW OVERLAY on the store: each
+device pins a capacity-bounded set of remote store rows.  With frozen
+features the overlay is a build-time snapshot (exact forever); with trainable
+rows it must be re-read from the live owner shards — `overlay_refresh_plan`
+builds the static bucketed all_to_all plan the jitted step uses to do that
+every step (and whose transpose routes cache-hit gradients back to the
+owners).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.execution.pipeline_exchange import (
+    bucketed_cap_widths,
+    bucketed_send_table,
+    halo_slot,
+)
+
+
+class FeatureStore:
+    """Owner-partitioned feature/embedding table with flat-id addressing.
+
+    Host-side source of truth for the engine's feature plane: the engine
+    reads `device_table()` once at build (and again via `update_rows` /
+    `lookup` in tests and serving paths); the jitted step owns the device
+    copy.  `rows` is the per-owner padded row count (nb for edge_cut, nv for
+    vertex_cut); pad rows are zero and never addressed by real ids."""
+
+    def __init__(self, table: np.ndarray):
+        table = np.asarray(table, np.float32)
+        if table.ndim != 3:
+            raise ValueError(
+                f"FeatureStore wants [k, rows, D]; got shape {table.shape}")
+        self._table = table.copy()
+        self.k, self.rows, self.dim = table.shape
+        self._overlay_ids: Optional[List[np.ndarray]] = None
+        self._overlay_cap = 0
+        self._overlay_tab: Optional[np.ndarray] = None
+
+    @classmethod
+    def from_flat(cls, flat: np.ndarray, k: int) -> "FeatureStore":
+        flat = np.asarray(flat, np.float32)
+        return cls(flat.reshape(k, flat.shape[0] // k, flat.shape[1]))
+
+    # -- id addressing --------------------------------------------------
+    def owner_of(self, ids) -> np.ndarray:
+        return np.asarray(ids) // self.rows
+
+    def slot_of(self, ids) -> np.ndarray:
+        return np.asarray(ids) % self.rows
+
+    @property
+    def num_rows(self) -> int:
+        return self.k * self.rows
+
+    # -- reads / writes --------------------------------------------------
+    def flat(self) -> np.ndarray:
+        """[k*rows, D] flat view (copy-free reshape of the owner table)."""
+        return self._table.reshape(self.k * self.rows, self.dim)
+
+    def device_table(self):
+        """The flat table as a jnp array — what the engine feeds the jitted
+        step (sharded P(ax, None) so device d holds exactly its shard)."""
+        import jax.numpy as jnp
+
+        return jnp.asarray(self.flat())
+
+    def lookup(self, ids) -> np.ndarray:
+        """Rows by flat store id; a sentinel id == k*rows reads a zero row
+        (the same pad convention as the engine's gather tables)."""
+        ids = np.asarray(ids)
+        flat = self.flat()
+        out = np.zeros(ids.shape + (self.dim,), np.float32)
+        real = (ids >= 0) & (ids < self.num_rows)
+        out[real] = flat[ids[real]]
+        return out
+
+    def update_rows(self, ids, values) -> None:
+        """Write rows by flat store id (e.g. after an embedding update);
+        invalidates nothing by itself — overlay snapshots go stale until
+        `refresh_overlay` (host) or the in-step refresh plan (device)."""
+        self.flat()[np.asarray(ids)] = np.asarray(values, np.float32)
+
+    # -- hot-row overlay (the mini-batch cache as a view of the store) ---
+    def attach_overlay(self, ids_per_device: Sequence[np.ndarray],
+                       capacity: int) -> None:
+        """Pin per-device hot REMOTE store rows (from a sampling/cache.py
+        policy ranking, relabeled to store ids).  `capacity` is the static
+        padded slot count every device's overlay table gets."""
+        if len(ids_per_device) != self.k:
+            raise ValueError(f"want {self.k} id lists, got "
+                             f"{len(ids_per_device)}")
+        ids_per_device = [np.asarray(a, np.int64) for a in ids_per_device]
+        for d, a in enumerate(ids_per_device):
+            if len(a) > capacity:
+                raise ValueError(f"device {d} overlay {len(a)} > capacity "
+                                 f"{capacity}")
+            if np.any(self.owner_of(a) == d):
+                raise ValueError(f"device {d} overlay contains its own rows "
+                                 "(local rows are already resident)")
+        self._overlay_ids = ids_per_device
+        self._overlay_cap = int(capacity)
+        self.refresh_overlay()
+
+    def overlay_table(self) -> np.ndarray:
+        """[k, capacity, D] overlay snapshot (zeros past each device's real
+        rows) — the engine's static cache table when features are frozen."""
+        if self._overlay_tab is None:
+            raise ValueError("no overlay attached")
+        return self._overlay_tab
+
+    def refresh_overlay(self) -> None:
+        """Re-read the overlay snapshot from the current table (what the
+        in-step refresh plan does on device every step)."""
+        tab = np.zeros((self.k, self._overlay_cap, self.dim), np.float32)
+        for d, a in enumerate(self._overlay_ids):
+            tab[d, : len(a)] = self.lookup(a)
+        self._overlay_tab = tab
+
+
+def overlay_refresh_plan(ids_per_device: Sequence[np.ndarray], k: int,
+                         rows: int, capacity: int, buckets: int = 1
+                         ) -> Tuple[np.ndarray, np.ndarray, list]:
+    """Static plan to re-gather every device's overlay rows from the LIVE
+    owner shards inside the jitted step: returns (send_rows [k, B, k, w],
+    tab_ids [k, capacity], widths).
+
+    The read side mirrors the engine's p2p frontier fetch: device d builds
+    table = concat([own_shard, bucketed_all_to_all(own_shard, send_rows),
+    zero_row]) and takes tab_ids[d] — slot j < len(ids) yields overlay row j,
+    the rest read the zero row (sentinel).  Because the plan is static, the
+    refresh compiles into the one jitted step, and its transpose routes
+    cache-hit gradients back to the owners' shards."""
+    ids_per_device = [np.asarray(a, np.int64) for a in ids_per_device]
+    need_lists = [[np.zeros(0, np.int64) for _ in range(k)]
+                  for _ in range(k)]  # [src][dst]
+    for d, a in enumerate(ids_per_device):
+        owners = a // rows
+        for s in range(k):
+            if s != d:
+                need_lists[s][d] = (a[owners == s] % rows)
+    cap = max(1, max((len(x) for row in need_lists for x in row), default=1))
+    widths = bucketed_cap_widths(cap, buckets)
+    B, w = len(widths), widths[0]
+    send_rows = bucketed_send_table(need_lists, k, widths)
+    tab_ids = np.full((k, capacity), rows + B * k * w, np.int32)
+    for d, a in enumerate(ids_per_device):
+        pos = {s: 0 for s in range(k)}
+        for j, sid in enumerate(a):
+            s = int(sid // rows)
+            tab_ids[d, j] = int(halo_slot(pos[s], s, w, k, rows))
+            pos[s] += 1
+    return send_rows, tab_ids, widths
+
+
+def touched_rows_from_frontier(frontier_sids: np.ndarray, k: int, rows: int,
+                               cap: int) -> np.ndarray:
+    """Per-OWNER touched local-row lists from a batch's frontier store ids:
+    frontier_sids [k, cap0] (sentinel k*rows for pads) -> ids [k, cap] int32
+    where row s lists the distinct local rows of owner s read by ANY device
+    this step, sorted (deterministic), sentinel `rows` past the end.
+
+    This is the sparse-optimizer id set: a row is touched iff some device's
+    frontier reads it (cache hit or miss — hits read the refreshed overlay,
+    whose gradient still lands on the owner's shard)."""
+    sids = np.asarray(frontier_sids).ravel()
+    sids = sids[(sids >= 0) & (sids < k * rows)]
+    out = np.full((k, cap), rows, np.int32)
+    owners, slots = sids // rows, sids % rows
+    for s in range(k):
+        uniq = np.unique(slots[owners == s])
+        assert len(uniq) <= cap, (
+            f"touched-row cap overflow: owner {s} has {len(uniq)} touched "
+            f"rows, cap={cap}")
+        out[s, : len(uniq)] = uniq
+    return out

@@ -127,6 +127,44 @@ def edge_cut_halo_bytes_per_step(g: Graph, part, dims: Sequence[int],
     return part.communication_volume(g) * int(sum(widths)) * feat_bytes
 
 
+def embedding_grad_bytes_per_step(g: Graph, execution: str,
+                                  dims: Sequence[int], *, k: int,
+                                  family: str = "edge_cut", part=None,
+                                  nb: int = None, replica_rows: int = None,
+                                  feat_bytes: int = FEAT_BYTES) -> int:
+    """Wire bytes per FULL-GRAPH train step for routing layer-0 embedding
+    gradients back to their owner shards (cfg.trainable_features) — the
+    transpose of one layer-0-width exchange pass at width dims[0].
+
+      edge_cut broadcast/ring  the all_gather / ring-rotation transpose is a
+                               reduce-scatter of the same table:
+                               k*(k-1)*nb rows (nb = the padded block size).
+      edge_cut p2p             each halo row's cotangent returns to its owner
+                               once: `part.communication_volume(g)` rows —
+                               the engine's bucketed all_to_all ships exactly
+                               these (its need sets are the partition's
+                               remote in-neighbor sets).
+      vertex_cut               two replica-sync passes at width dims[0]: the
+                               per-replica partial grads combine to the full
+                               vertex grad, and the master-masked update's
+                               delta broadcasts back so replicas never drift
+                               -> 2 * replica_rows (= the plan's
+                               rows_per_layer) rows.
+
+    Cross-checked against DistGNNEngine's CommStats.embed_grad_bytes by the
+    feature-store test tier."""
+    D = int(dims[0])
+    if family == "vertex_cut":
+        return 2 * int(replica_rows) * D * feat_bytes
+    if execution in ("broadcast", "ring"):
+        rows = k * (k - 1) * int(nb)
+    elif execution == "p2p":
+        rows = part.communication_volume(g)
+    else:
+        raise ValueError(f"unknown execution {execution!r}")
+    return rows * D * feat_bytes
+
+
 def edge_cut_halo_device_bytes(g: Graph, part, dims: Sequence[int],
                                feat_bytes: int = FEAT_BYTES,
                                model: str = "gcn") -> np.ndarray:

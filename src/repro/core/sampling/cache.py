@@ -114,7 +114,9 @@ class FIFOCache:
 
     def access(self, v: int) -> bool:
         hit = v in self._set
-        if not hit:
+        if not hit and self.capacity > 0:
+            # capacity <= 0: nothing can be resident (the old popitem on an
+            # empty OrderedDict raised KeyError); everything misses
             if len(self._set) >= self.capacity:
                 self._set.popitem(last=False)
             self._set[v] = True

@@ -27,10 +27,13 @@ class CommStats:
     push_bytes: int = 0  # sampling requests + results (CSP)
     cache_hit_bytes: int = 0  # feature bytes served by a local cache instead
     replica_sync_bytes: int = 0  # vertex-cut partial/aggregate rows exchanged
+    embed_grad_bytes: int = 0  # trainable embeddings: layer-0 gradient rows
+    #   routed back to their owners (+ the live cache-overlay refresh)
 
     def total(self) -> int:
         """Bytes that actually cross the wire (cache hits excluded)."""
-        return self.pull_bytes + self.push_bytes + self.replica_sync_bytes
+        return (self.pull_bytes + self.push_bytes + self.replica_sync_bytes
+                + self.embed_grad_bytes)
 
     def requested(self) -> int:
         """Bytes the computation asked for, whether cached or fetched."""
@@ -118,3 +121,31 @@ def feature_fetch_bytes(part: Partition, worker: int, vertices: np.ndarray,
         stats.pull_bytes += miss
         stats.cache_hit_bytes += hit
     return miss
+
+
+def embedding_update_bytes(part: Partition, worker: int, vertices: np.ndarray,
+                           feature_dim: int, cached_ids=frozenset(),
+                           overlay_rows: int = 0,
+                           stats: CommStats = None) -> int:
+    """Wire bytes one device adds per mini-batch step when layer-0 rows are
+    TRAINABLE embeddings (cfg.trainable_features): the cotangent of every
+    remote frontier MISS returns to its owner (the transpose of the feature
+    fetch — same row count, same width), and the hot-row cache overlay costs
+    a fixed 2 * overlay_rows rows per step (the live refresh down from the
+    owners plus the hit gradients back), since cached rows can no longer be
+    served by a frozen snapshot.
+
+    Like `feature_fetch_bytes` this counts requested rows (the p2p volume),
+    independent of which collective ships them — the convention the engine's
+    CommStats accounting uses, so engine and model agree exactly.  Returns
+    the bytes; accumulates into ``stats.embed_grad_bytes`` when given."""
+    cached = (cached_ids if isinstance(cached_ids, (set, frozenset))
+              else set(int(v) for v in np.asarray(cached_ids).ravel()))
+    rows = 0
+    for v in np.asarray(vertices).ravel():
+        if part.assignment[v] != worker and int(v) not in cached:
+            rows += 1
+    b = (rows + 2 * int(overlay_rows)) * feature_dim * FEAT_BYTES
+    if stats is not None:
+        stats.embed_grad_bytes += b
+    return b

@@ -241,6 +241,9 @@ def main():
                     "issued while chunk c feeds the ELL multiply; peak "
                     "gathered-table bytes drop ~chunks/2 x (asserted >= 2x "
                     "on the 256-chip broadcast lowering with >= 4 chunks)")
+    ap.add_argument("--engine-trainable-features", action="store_true",
+                    help="engine mode: layer-0 rows are learnable embedding "
+                    "store rows (sparse-AdamW state enters the lowered step)")
     ap.add_argument("--engine-p2p-buckets", type=int, default=1,
                     help="engine: power-of-two installments splitting the "
                     "p2p all_to_all send caps; the lowered all_to_all "
@@ -306,7 +309,8 @@ def main():
             cache_policy="static_degree" if minibatch else "none",
             cache_capacity=args.engine_cache_capacity if minibatch else 0,
             exchange_chunks=args.engine_exchange_chunks,
-            p2p_buckets=args.engine_p2p_buckets)
+            p2p_buckets=args.engine_p2p_buckets,
+            trainable_features=args.engine_trainable_features)
         eng = DistGNNEngine(g, mesh=mesh1d, cfg=ecfg)
         if minibatch and args.engine_exec == "p2p":
             # tightened halo cap (PR 2 follow-up): the all_to_all buffer is
@@ -324,6 +328,18 @@ def main():
                     f"all_to_all buffer >10x on the power-law config, "
                     f"got {shrink:.1f}x")
         engine_extra = dict(engine_model=args.engine_model)
+        if args.engine_trainable_features:
+            engine_extra["trainable_features"] = True
+            if not minibatch:
+                engine_extra["embed_grad_bytes_per_step"] = \
+                    eng._emb_bytes_per_step
+                log.info("trainable embeddings: %s/step gradient rows "
+                         "routed back to owner shards",
+                         human_bytes(eng._emb_bytes_per_step))
+            else:
+                engine_extra["embed_touched_row_cap"] = eng.tcap
+                log.info("trainable embeddings: sparse-AdamW over <= %d "
+                         "touched rows per owner per step", eng.tcap)
         if args.engine_family == "vertex_cut":
             from repro.core.partition.cost_models import (
                 edge_cut_halo_bytes_per_step,

@@ -8,6 +8,11 @@ from repro.optim.optimizers import (
     make_optimizer,
     sgdm,
 )
+from repro.optim.sparse_optim import (
+    row_adamw_update,
+    sparse_adamw,
+    sparse_adamw_ids,
+)
 
 __all__ = [
     "Optimizer",
@@ -17,5 +22,8 @@ __all__ = [
     "cosine_schedule",
     "global_norm",
     "make_optimizer",
+    "row_adamw_update",
     "sgdm",
+    "sparse_adamw",
+    "sparse_adamw_ids",
 ]

@@ -164,11 +164,19 @@ def sgdm(lr_fn, momentum=0.9, weight_decay=0.0) -> Optimizer:
     return Optimizer(init, update, axes)
 
 
+def _optimizer_factories():
+    """Name -> factory registry (a function so sparse_optim can import this
+    module without a cycle)."""
+    from repro.optim.sparse_optim import sparse_adamw
+
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm,
+            "sparse_adamw": sparse_adamw}
+
+
 def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
-    if name == "adamw":
-        return adamw(lr_fn, **kw)
-    if name == "adafactor":
-        return adafactor(lr_fn, **kw)
-    if name == "sgdm":
-        return sgdm(lr_fn, **kw)
-    raise ValueError(name)
+    factories = _optimizer_factories()
+    if name not in factories:
+        raise ValueError(
+            f"unknown optimizer {name!r}: valid names are "
+            f"{sorted(factories)}")
+    return factories[name](lr_fn, **kw)

@@ -1,0 +1,152 @@
+"""Row-sparse AdamW for trainable embedding tables (ROADMAP item 1).
+
+At production scale most vertex "features" are learnable embeddings, which
+makes the feature plane part of the optimizer: a step only sees gradients for
+the rows it touched (the ELL / frontier-fetch VJPs emit exactly row-sparse
+cotangents), so the optimizer must update ONLY those rows — dense Adam would
+decay every row's moments every step and pay O(V) FLOPs per step.
+
+The core is `row_adamw_update`: AdamW over the rows of one table with a
+per-row TOUCHED mask and per-row step counts for bias correction (a row's
+bc uses how often *that row* has been updated, not the global step — the only
+definition under which "sparse update == dense AdamW restricted to the
+touched rows" holds across steps with different touched sets).  Untouched
+rows — params, both moments, and the step counts — are bitwise unchanged.
+
+Two consumers:
+  * `sparse_adamw_ids` — gather -> row-AdamW -> scatter over an explicit
+    touched-id list (the engine's mini-batch path; ids come from the frontier
+    plan).  Scatter uses a dead-row redirect (invalid ids write past the
+    table, then the pad row is sliced off) so it is deterministic and the
+    untouched rows are never written at all.
+  * `sparse_adamw` — the `Optimizer`-shaped wrapper registered in
+    `make_optimizer`: rows whose gradient is entirely zero are untouched
+    (lazy semantics); with dense nonzero gradients it IS adamw with the same
+    hyperparameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+
+def _row_mask(mask, ndim):
+    """Broadcast a [N] row mask over a [N, ...] table."""
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def row_adamw_update(p, g, m, v, t, touched, *, lr, b1=0.9, b2=0.999,
+                     eps=1e-8, weight_decay=0.0):
+    """Masked-dense row AdamW: p/g/m/v [N, ...], t [N] int32 per-row update
+    counts, touched [N] (bool/float).  Returns (p2, m2, v2, t2) where every
+    untouched row of all four buffers is bitwise the input row.  Bias
+    correction is per-row: row r's bc term uses t2[r] = t[r] + touched[r],
+    so a row updated for the i-th time behaves exactly like dense AdamW at
+    global step i restricted to that row."""
+    tch = jnp.asarray(touched).astype(bool)
+    rm = _row_mask(tch, p.ndim)
+    g32 = g.astype(jnp.float32)
+    t2 = t + tch.astype(t.dtype)
+    tf = t2.astype(jnp.float32)
+    # untouched rows may still have t2 == 0; guard the division (the where
+    # below discards the guarded lanes anyway)
+    bc1 = jnp.maximum(1.0 - b1 ** tf, 1e-30)
+    bc2 = jnp.maximum(1.0 - b2 ** tf, 1e-30)
+    m2 = b1 * m + (1 - b1) * g32
+    v2 = b2 * v + (1 - b2) * jnp.square(g32)
+    mh = m2 / _row_mask(bc1, p.ndim)
+    vh = v2 / _row_mask(bc2, p.ndim)
+    u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+    p2 = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+    return (jnp.where(rm, p2, p), jnp.where(rm, m2, m),
+            jnp.where(rm, v2, v), t2)
+
+
+def sparse_adamw_ids(table, m, v, t, ids, grads, *, lr, b1=0.9, b2=0.999,
+                     eps=1e-8, weight_decay=0.0, valid=None, dedup=False):
+    """Sparse row AdamW over an explicit touched-id list: gather the R rows,
+    run `row_adamw_update`, scatter back.  table/m/v [N, D], t [N]; ids [R]
+    int row indices; grads [R, D] the gradient rows aligned with `ids`.
+
+    ``valid`` [R] masks real entries (default: 0 <= ids < N, so a sentinel id
+    >= N marks padding).  With ``dedup=True`` duplicate valid ids are summed
+    onto their FIRST occurrence and the later occurrences deactivated (an
+    R x R combine — meant for small R); otherwise valid ids must be unique.
+
+    Untouched rows are never written: the scatter targets exactly the applied
+    ids (invalid/duplicate entries redirect to a dead pad row that is sliced
+    off), so FLOPs and moment traffic are O(R * D), and untouched rows of all
+    four buffers are bitwise unchanged."""
+    N = table.shape[0]
+    ids = jnp.asarray(ids)
+    if valid is None:
+        valid = (ids >= 0) & (ids < N)
+    valid = jnp.asarray(valid).astype(bool)
+    g = grads.astype(jnp.float32) * _row_mask(valid, grads.ndim)
+    if dedup:
+        R = ids.shape[0]
+        eq = (ids[:, None] == ids[None, :]) & valid[:, None] & valid[None, :]
+        first = jnp.argmax(eq, axis=1)  # first j with the same id (valid)
+        is_first = first == jnp.arange(R)
+        g = (eq.astype(g.dtype) @ g.reshape(R, -1)).reshape(g.shape)
+        apply = valid & is_first
+    else:
+        apply = valid
+    safe = jnp.where(valid, ids, 0)
+    p2, m2, v2, t2 = row_adamw_update(
+        jnp.take(table, safe, axis=0), g, jnp.take(m, safe, axis=0),
+        jnp.take(v, safe, axis=0), jnp.take(t, safe, axis=0), apply,
+        lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+    ids_eff = jnp.where(apply, ids, N)  # dead row past the table
+
+    def scatter(buf, rows):
+        pad = jnp.zeros((1,) + buf.shape[1:], buf.dtype)
+        return jnp.concatenate([buf, pad], 0).at[ids_eff].set(rows)[:N]
+
+    return scatter(table, p2), scatter(m, m2), scatter(v, v2), scatter(t, t2)
+
+
+def sparse_adamw(lr_fn, b1=0.9, b2=0.999, eps=1e-8,
+                 weight_decay=0.0) -> Optimizer:
+    """Lazy row-sparse AdamW as a generic `Optimizer`: per leaf, a leading-
+    axis row whose gradient is entirely zero is UNTOUCHED — its params, both
+    moments, and its per-row step count stay put (the state carries a
+    [rows]-shaped int32 count per leaf for the per-row bias correction).
+    With dense nonzero gradients every row updates every step and the
+    trajectory is `adamw`'s with the same hyperparameters (note the defaults
+    differ: embeddings want b2=0.999 / weight_decay=0)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        counts = lambda p: jnp.zeros(p.shape[:1], jnp.int32)  # noqa: E731
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "t": jax.tree_util.tree_map(counts, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def upd(g, m, v, t, p):
+            g32 = g.astype(jnp.float32)
+            touched = jnp.any(g32 != 0,
+                              axis=tuple(range(1, g32.ndim)))
+            p2, m2, v2, t2 = row_adamw_update(
+                p, g32, m, v, t, touched, lr=lr, b1=b1, b2=b2, eps=eps,
+                weight_decay=weight_decay)
+            return (p2 - p).astype(p.dtype), m2, v2, t2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     state["t"], params)
+        pick = lambda i: jax.tree_util.tree_map(  # noqa: E731
+            lambda tup: tup[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "t": pick(3)}
+
+    def axes(param_axes, abstract_params=None):
+        row = lambda ax: tuple(ax[:1])  # noqa: E731
+        return {"m": param_axes, "v": param_axes,
+                "t": jax.tree_util.tree_map(
+                    row, param_axes, is_leaf=lambda x: isinstance(x, tuple))}
+
+    return Optimizer(init, update, axes)

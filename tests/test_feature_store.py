@@ -1,0 +1,368 @@
+"""Sharded FeatureStore + trainable embedding tier.
+
+Host half: the owner-partitioned id-addressed store itself — flat-id
+addressing, sentinel reads, overlay attach/validation, snapshot staleness
+semantics, and the touched-row extraction the sparse optimizer consumes.
+
+Device half (subprocess, forced host devices): `trainable_features=True`
+turns layer-0 rows into owner-sharded learnable embeddings updated by
+row-sparse AdamW — every partition family x execution model x batching mode
+must match the single-device DENSE-table oracle to <=1e-4, bitwise
+deterministically, in ONE compile; rows a run never touched keep bitwise-zero
+moment buffers; and the engine's reported embedding-gradient bytes must equal
+the standalone cost models exactly.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.core.feature_store import (
+    FeatureStore,
+    touched_rows_from_frontier,
+)
+
+
+# ----------------------------------------------------------------------
+# host-level store semantics
+# ----------------------------------------------------------------------
+
+def _store(k=3, rows=4, D=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return FeatureStore(rng.normal(size=(k, rows, D)).astype(np.float32))
+
+
+def test_store_flat_id_addressing_roundtrip():
+    st = _store()
+    ids = np.arange(st.num_rows)
+    assert np.array_equal(st.owner_of(ids) * st.rows + st.slot_of(ids), ids)
+    # from_flat(flat(), k) reproduces the table bitwise
+    st2 = FeatureStore.from_flat(st.flat(), st.k)
+    assert np.array_equal(st2.flat(), st.flat())
+    # lookup by flat id == direct table row
+    got = st.lookup([5])
+    assert np.array_equal(got[0], st.flat()[5])
+
+
+def test_store_sentinel_and_out_of_range_read_zero():
+    st = _store()
+    out = st.lookup([st.num_rows, -1, 0])
+    assert np.all(out[0] == 0) and np.all(out[1] == 0)
+    assert np.array_equal(out[2], st.flat()[0])
+
+
+def test_store_update_rows_visible_to_lookup():
+    st = _store()
+    new = np.full((2, st.dim), 7.0, np.float32)
+    st.update_rows([1, 9], new)
+    assert np.array_equal(st.lookup([1, 9]), new)
+    # the owner table view sees the same write
+    assert np.array_equal(st._table[st.owner_of(9), st.slot_of(9)], new[1])
+
+
+def test_overlay_rejects_local_rows_and_over_capacity():
+    st = _store(k=2, rows=4)
+    with pytest.raises(ValueError, match="own rows"):
+        st.attach_overlay([np.array([0]), np.array([1])], capacity=2)
+    with pytest.raises(ValueError, match="capacity"):
+        st.attach_overlay([np.array([4, 5, 6]), np.zeros(0, np.int64)],
+                          capacity=2)
+    with pytest.raises(ValueError, match="id lists"):
+        st.attach_overlay([np.zeros(0, np.int64)], capacity=2)
+
+
+def test_overlay_snapshot_staleness_and_refresh():
+    """The cache-as-store-overlay contract: a snapshot is exact at attach
+    time, goes STALE when owner rows are updated (what frozen-feature
+    engines may ignore but trainable ones must not), and one refresh makes
+    it bitwise-exact again."""
+    st = _store(k=2, rows=4)
+    ids0 = np.array([4, 6])  # device 0 pins rows owned by device 1
+    st.attach_overlay([ids0, np.array([1])], capacity=3)
+    tab = st.overlay_table()
+    assert np.array_equal(tab[0, :2], st.lookup(ids0))
+    assert np.all(tab[0, 2] == 0) and np.all(tab[1, 1:] == 0)
+    st.update_rows([6], np.full((1, st.dim), 3.25, np.float32))
+    stale = st.overlay_table()
+    assert not np.array_equal(stale[0, 1], st.lookup([6])[0])  # stale
+    st.refresh_overlay()
+    assert np.array_equal(st.overlay_table()[0, :2], st.lookup(ids0))
+
+
+def test_touched_rows_from_frontier_sorted_unique_per_owner():
+    k, rows, cap = 2, 4, 4
+    sent = k * rows
+    frontier = np.array([[5, 1, 1, sent],   # device 0 reads owner1:1, owner0:1
+                         [7, 0, 5, sent]])  # device 1 reads owner1:{3,1}, owner0:0
+    out = touched_rows_from_frontier(frontier, k, rows, cap)
+    assert out.dtype == np.int32 and out.shape == (k, cap)
+    assert out[0].tolist() == [0, 1, rows, rows]      # owner 0: slots {0,1}
+    assert out[1].tolist() == [1, 3, rows, rows]      # owner 1: slots {1,3}
+    with pytest.raises(AssertionError, match="cap overflow"):
+        touched_rows_from_frontier(np.arange(sent)[None], k, rows, cap=1)
+
+
+def test_trainable_features_requires_sync_protocol():
+    from repro.core.engine import DistGNNEngine, EngineConfig
+    from repro.core.graph import sbm_graph
+    g = sbm_graph(48, num_blocks=4, p_in=0.1, p_out=0.02, seed=0)
+    with pytest.raises(ValueError, match="protocol='sync'"):
+        DistGNNEngine(g, cfg=EngineConfig(
+            trainable_features=True, protocol="epoch_fixed"))
+
+
+# ----------------------------------------------------------------------
+# device tier: trainable embeddings == dense single-device Adam oracle
+# ----------------------------------------------------------------------
+
+_FULL_GRAPH_CODE = """
+    import itertools
+    import jax, numpy as np
+    from repro.core.engine import DistGNNEngine, EngineConfig
+    from repro.core.graph import sbm_graph
+
+    g = sbm_graph({V}, num_blocks=8, p_in=0.08, p_out=0.01, seed=0)
+    fails = []
+    for fam, exe in itertools.product({families}, {execs}):
+        cfg = EngineConfig(
+            execution=exe, partition_family=fam, hidden=16, lr=0.3,
+            trainable_features=True, embed_lr=0.05, embed_weight_decay=0.01)
+        eng = DistGNNEngine(g, cfg=cfg)
+        losses_d, logits_d = eng.train({epochs})
+        losses_r, logits_r = eng.train({epochs}, reference=True)
+        err = max(abs(a - b) for a, b in zip(losses_d, losses_r))
+        lerr = float(abs(logits_d - logits_r).max())
+        # bitwise determinism + the one-compile contract
+        losses_d2, _ = eng.train({epochs})
+        det = losses_d == losses_d2
+        n = eng._jit_step._cache_size()
+        # the embedding table must actually have LEARNED (moved off X)
+        st = eng.init_state()
+        st2 = st
+        step = eng.make_step()
+        for _ in range({epochs}):
+            st2, _, _ = step(st2)
+        moved = float(abs(st2["embed"] - st["embed"]).max()) > 0
+        tag = f"{{fam}}/{{exe}}"
+        print(f"{{tag}}: loss_err={{err:.2e}} logits_err={{lerr:.2e}} "
+              f"compiles={{n}} moved={{moved}}")
+        if not (err <= 1e-4 and lerr <= 1e-4 and det and moved and n == 1
+                and np.isfinite(losses_d[-1])):
+            fails.append((tag, err, lerr, det, moved, n))
+    assert not fails, fails
+    print("FS_FG_OK")
+"""
+
+_MINIBATCH_CODE = """
+    import itertools
+    import jax, numpy as np
+    from repro.core.engine import DistGNNEngine, EngineConfig
+    from repro.core.graph import sbm_graph
+
+    g = sbm_graph({V}, num_blocks=8, p_in=0.08, p_out=0.01, seed=0)
+    fails = []
+    for batching, exe in itertools.product({batchings}, {execs}):
+        cfg = EngineConfig(
+            execution=exe, batching=batching, batch_size=8,
+            fanouts=(3, 3), layer_sizes=(16, 16), walk_length=3,
+            hidden=16, lr=0.3, trainable_features=True, embed_lr=0.05,
+            cache_policy={cache_policy!r}, cache_capacity={cache_capacity})
+        eng = DistGNNEngine(g, cfg=cfg)
+        losses_d, logits_d = eng.train({epochs})
+        losses_r, logits_r = eng.train({epochs}, reference=True)
+        err = max(abs(a - b) for a, b in zip(losses_d, losses_r))
+        lerr = float(abs(logits_d - logits_r).max())
+        losses_d2, _ = eng.train({epochs})
+        det = losses_d == losses_d2
+        n = eng._jit_mb_step._cache_size()
+        tag = f"{{batching}}/{{exe}}/cache={{cfg.cache_policy}}"
+        print(f"{{tag}}: loss_err={{err:.2e}} logits_err={{lerr:.2e}} "
+              f"compiles={{n}}")
+        if not (err <= 1e-4 and lerr <= 1e-4 and det and n == 1
+                and np.isfinite(losses_d[-1])):
+            fails.append((tag, err, lerr, det, n))
+    assert not fails, fails
+    print("FS_MB_OK")
+"""
+
+
+def test_trainable_full_graph_matrix_4dev():
+    """Both partition families x all execution models, 4 devices: trainable
+    layer-0 rows (sparse-AdamW on the store shards) == the dense-table
+    single-device oracle, deterministic, one compile, and learning."""
+    out = run_with_devices(_FULL_GRAPH_CODE.format(
+        V=96, epochs=3,
+        families=("edge_cut", "vertex_cut"),
+        execs=("broadcast", "ring", "p2p"),
+    ), n_devices=4, timeout=600)
+    assert "FS_FG_OK" in out
+
+
+def test_trainable_minibatch_matrix_4dev():
+    """Sampled batchings x execution models, no cache: the frontier fetch
+    moves inside the grad, the collective transposes route cotangents back
+    to the owners, and only the touched rows update."""
+    out = run_with_devices(_MINIBATCH_CODE.format(
+        V=96, epochs=3,
+        batchings=("node_wise", "layer_wise", "subgraph"),
+        execs=("broadcast", "ring", "p2p"),
+        cache_policy="none", cache_capacity=0,
+    ), n_devices=4, timeout=600)
+    assert "FS_MB_OK" in out
+
+
+def test_trainable_minibatch_cached_matrix_4dev():
+    """With the hot-row overlay on: cache hits read LIVE rows (the in-step
+    overlay refresh), so hit gradients still land on the owner shards and
+    the math stays oracle-exact."""
+    out = run_with_devices(_MINIBATCH_CODE.format(
+        V=96, epochs=3,
+        batchings=("node_wise", "subgraph"),
+        execs=("broadcast", "ring", "p2p"),
+        cache_policy="static_degree", cache_capacity=12,
+    ), n_devices=4, timeout=600)
+    assert "FS_MB_OK" in out
+
+
+def test_trainable_matrix_8dev():
+    """Scale sanity at 8 devices: both families full-graph p2p, plus cached
+    node-wise mini-batch."""
+    out = run_with_devices(_FULL_GRAPH_CODE.format(
+        V=128, epochs=2,
+        families=("edge_cut", "vertex_cut"), execs=("p2p",),
+    ), n_devices=8, timeout=600)
+    assert "FS_FG_OK" in out
+    out = run_with_devices(_MINIBATCH_CODE.format(
+        V=128, epochs=2,
+        batchings=("node_wise",), execs=("broadcast", "ring", "p2p"),
+        cache_policy="static_degree", cache_capacity=12,
+    ), n_devices=8, timeout=600)
+    assert "FS_MB_OK" in out
+
+
+def test_untouched_rows_bitwise_frozen_4dev():
+    """The sparse-update contract, verified on the live engine: embedding
+    rows NO mini-batch step touched keep their initial values and ZERO
+    moment/step buffers bitwise; touched rows have moved.  Under vertex_cut
+    full-graph, non-master replica slots keep zero moments and every
+    replica group stays bitwise consistent after training."""
+    out = run_with_devices("""
+        import jax, numpy as np
+        from repro.core.engine import DistGNNEngine, EngineConfig
+        from repro.core.feature_store import touched_rows_from_frontier
+        from repro.core.graph import sbm_graph
+
+        g = sbm_graph(96, num_blocks=8, p_in=0.08, p_out=0.01, seed=0)
+        cfg = EngineConfig(execution="p2p", batching="node_wise",
+                           batch_size=4, fanouts=(2, 2), hidden=16, lr=0.3,
+                           trainable_features=True, embed_lr=0.05)
+        eng = DistGNNEngine(g, cfg=cfg)
+        steps = 3
+        step = eng.make_minibatch_step()
+        state0 = eng.init_minibatch_state()
+        state = state0
+        touched = np.zeros(eng.Vp, bool)
+        for i in range(steps):
+            batch = eng.sample_minibatch(i)
+            ids = np.asarray(batch["emb_ids"])  # [k, tcap] local rows
+            for d in range(eng.k):
+                rows = ids[d][ids[d] < eng.nb]
+                touched[d * eng.nb + rows] = True
+            state, _, _ = step(state, batch)
+        emb0 = np.asarray(state0["embed"])
+        emb = np.asarray(state["embed"])
+        m = np.asarray(state["emb_m"])
+        v = np.asarray(state["emb_v"])
+        t = np.asarray(state["emb_t"])
+        u = ~touched
+        assert np.array_equal(emb[u], emb0[u]), "untouched rows moved"
+        assert np.all(m[u] == 0) and np.all(v[u] == 0) and np.all(t[u] == 0)
+        assert touched.any() and t[touched].min() >= 1
+        assert float(np.abs(emb[touched] - emb0[touched]).max()) > 0
+        print("UNTOUCHED_MB_OK", int(touched.sum()), "/", eng.Vp)
+
+        cfg2 = EngineConfig(execution="broadcast",
+                            partition_family="vertex_cut", hidden=16,
+                            lr=0.3, trainable_features=True, embed_lr=0.05)
+        eng2 = DistGNNEngine(g, cfg=cfg2)
+        st = eng2.init_state()
+        fg = eng2.make_step()
+        for _ in range(3):
+            st, _, _ = fg(st)
+        mask = np.asarray(eng2.emb_touched).astype(bool)  # master slots
+        m2 = np.asarray(st["emb_m"]); t2 = np.asarray(st["emb_t"])
+        assert np.all(m2[~mask] == 0) and np.all(t2[~mask] == 0)
+        assert np.all(t2[mask & (np.asarray(eng2.layout.vert_ids).ravel()
+                                 < g.num_vertices)] >= 1)
+        # replica groups bitwise consistent after the delta re-broadcast
+        emb2 = np.asarray(st["embed"])
+        vid = np.asarray(eng2.layout.vert_ids).ravel()
+        for vtx in range(g.num_vertices):
+            rows = emb2[vid == vtx]
+            if len(rows) > 1:
+                assert np.array_equal(rows, np.repeat(rows[:1], len(rows),
+                                                      axis=0))
+        print("VC_REPLICA_OK")
+    """, n_devices=4, timeout=600)
+    assert "UNTOUCHED_MB_OK" in out and "VC_REPLICA_OK" in out
+
+
+def test_embed_grad_bytes_cross_check_4dev():
+    """Engine-reported CommStats.embed_grad_bytes == the standalone cost
+    models, recomputed from a FRESH engine: `embedding_grad_bytes_per_step`
+    for full-graph (all executions + vertex_cut), `embedding_update_bytes`
+    over the deterministic frontiers for mini-batch."""
+    out = run_with_devices("""
+        import jax, numpy as np
+        from repro.core.engine import DistGNNEngine, EngineConfig
+        from repro.core.graph import powerlaw_graph
+        from repro.core.partition.cost_models import (
+            embedding_grad_bytes_per_step)
+        from repro.core.sampling import CommStats
+        from repro.core.sampling.distributed import embedding_update_bytes
+
+        g = powerlaw_graph(120, avg_degree=8, seed=2)
+        steps = 3
+        for exe in ("broadcast", "ring", "p2p"):
+            cfg = EngineConfig(execution=exe, hidden=16, lr=0.3,
+                               trainable_features=True, embed_lr=0.05)
+            eng = DistGNNEngine(g, cfg=cfg)
+            eng.train(steps)
+            per = embedding_grad_bytes_per_step(
+                g, exe, eng.dims, k=eng.k, part=eng.part, nb=eng.nb)
+            assert eng.comm_stats.embed_grad_bytes == steps * per, (
+                exe, eng.comm_stats, per)
+            assert per > 0
+        cfgv = EngineConfig(execution="broadcast",
+                            partition_family="vertex_cut", hidden=16,
+                            lr=0.3, trainable_features=True, embed_lr=0.05)
+        engv = DistGNNEngine(g, cfg=cfgv)
+        engv.train(steps)
+        perv = embedding_grad_bytes_per_step(
+            g, "broadcast", engv.dims, k=engv.k, family="vertex_cut",
+            replica_rows=engv._vc_rows_per_layer)
+        assert engv.comm_stats.embed_grad_bytes == steps * perv
+        print("FG_BYTES_OK")
+
+        cfg = EngineConfig(execution="p2p", batching="node_wise",
+                           batch_size=8, fanouts=(3, 3), hidden=16, lr=0.3,
+                           cache_policy="static_degree", cache_capacity=12,
+                           trainable_features=True, embed_lr=0.05)
+        eng = DistGNNEngine(g, cfg=cfg)
+        eng.train(steps)
+        eng2 = DistGNNEngine(g, cfg=cfg)
+        expected = CommStats()
+        D = g.features.shape[1]
+        for i in range(steps):
+            for d, mb in enumerate(eng2._sample_host(i)):
+                embedding_update_bytes(
+                    eng2.part, d, mb.layer_vertices[0], D,
+                    cached_ids=eng2._cache_set[d],
+                    overlay_rows=len(eng2.cache_old_ids[d]), stats=expected)
+        assert eng.comm_stats.embed_grad_bytes == expected.embed_grad_bytes
+        assert expected.embed_grad_bytes > 0
+        # feature-fetch accounting is unchanged by trainable mode
+        assert eng.comm_stats.pull_bytes > 0
+        print("MB_BYTES_OK")
+    """, n_devices=4, timeout=600)
+    assert "FG_BYTES_OK" in out and "MB_BYTES_OK" in out

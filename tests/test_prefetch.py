@@ -1,0 +1,123 @@
+"""PrefetchWorker failure-mode tier (sampling/prefetch.py).
+
+The double-buffered sampler lane must never hang or orphan its thread, no
+matter which lane dies or where: producer exceptions (first item, mid-epoch,
+last item, BaseException) relay to the consumer at the position they
+occurred with the thread already stopped; the consumer abandoning mid-epoch
+— including while the producer is blocked on a FULL queue — always joins on
+close(); and the tightest legal pipeline (depth=1) completes in order under
+backpressure from either side."""
+import threading
+import time
+
+import pytest
+
+from repro.core.execution.minibatch_pipeline import run_pipelined
+from repro.core.sampling.prefetch import PrefetchWorker
+
+
+def _thread_count():
+    return sum(t.name == "prefetch-sampler" and t.is_alive()
+               for t in threading.enumerate())
+
+
+@pytest.mark.parametrize("fail_at,n", [(0, 5), (4, 5)])
+def test_exception_relay_positions(fail_at, n):
+    """A producer exception on the FIRST or the LAST item surfaces in the
+    consumer exactly after the preceding results, and the thread is gone."""
+    def produce(i):
+        if i == fail_at:
+            raise ValueError(f"boom at {i}")
+        return i
+
+    w = PrefetchWorker(range(n), produce, depth=2)
+    got = []
+    with pytest.raises(ValueError, match=f"boom at {fail_at}"):
+        for item in w:
+            got.append(item)
+    assert got == list(range(fail_at))
+    assert not w.alive
+    w.close()  # close after a relayed failure is a no-op, not an error
+    assert not w.alive
+
+
+def test_base_exception_relays():
+    """KeyboardInterrupt in the sampler lane must not vanish into the
+    daemon thread — the consumer sees it."""
+    def produce(i):
+        if i == 1:
+            raise KeyboardInterrupt
+        return i
+
+    w = PrefetchWorker(range(3), produce, depth=1)
+    it = iter(w)
+    assert next(it) == 0
+    with pytest.raises(KeyboardInterrupt):
+        next(it)
+    assert not w.alive
+
+
+def test_close_unblocks_producer_stuck_on_full_queue():
+    """Consumer dies mid-epoch at depth=1 with the producer mid-put: close()
+    must drain, signal, and join — bounded time, idempotent."""
+    started = threading.Event()
+
+    def produce(i):
+        started.set()
+        return i
+
+    w = PrefetchWorker(range(10_000), produce, depth=1)
+    assert started.wait(5.0)
+    assert next(iter(w)) == 0  # consume one, then abandon
+    t0 = time.monotonic()
+    w.close()
+    w.close()  # idempotent
+    assert time.monotonic() - t0 < 5.0
+    assert not w.alive
+    assert _thread_count() == 0
+
+
+def test_close_before_first_next_joins():
+    """Abandoning before consuming anything still shuts the lane down."""
+    w = PrefetchWorker(range(100), lambda i: i, depth=1)
+    w.close()
+    assert not w.alive
+
+
+def test_depth1_no_deadlock_slow_consumer_and_producer():
+    """The tightest pipeline, both lanes alternately slow: every item
+    arrives, strictly in order, no deadlock."""
+    def produce(i):
+        if i % 3 == 0:
+            time.sleep(0.002)
+        return i * 2
+
+    w = PrefetchWorker(range(40), produce, depth=1)
+    got = []
+    for item in w:
+        if len(got) % 4 == 0:
+            time.sleep(0.002)
+        got.append(item)
+    assert got == [i * 2 for i in range(40)]
+    w.close()
+    assert not w.alive
+
+
+def test_run_pipelined_depth1_failure_joins_worker():
+    """The engine's pipelined epoch driver at depth=1: a device-lane death
+    mid-epoch propagates and leaves no live sampler thread behind."""
+    calls = []
+
+    def train(mb, feats):
+        calls.append(feats)
+        if len(calls) == 3:
+            raise RuntimeError("device lane died")
+
+    with pytest.raises(RuntimeError, match="device lane died"):
+        run_pipelined(list(range(200)), lambda i: i, lambda mb: mb + 1,
+                      train, prefetch_depth=1)
+    assert calls == [1, 2, 3]
+    deadline = time.monotonic() + 5.0
+    while _thread_count() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert _thread_count() == 0

@@ -161,3 +161,79 @@ def test_fifo_with_proximity_ordering(g):
         stream2.append(mb.layer_vertices[0])
     hr_rand = fifo2.run(stream2)
     assert hr_bfs >= hr_rand - 0.05  # BGL claim: proximity ordering helps FIFO
+
+
+# -- edge cases and the cache-as-store-overlay contract ---------------------
+
+def test_simulate_hit_ratio_empty_stream():
+    """No accesses -> 0.0, not a ZeroDivisionError; an empty cache over a
+    real stream is all misses."""
+    assert simulate_hit_ratio(np.array([1, 2]), []) == 0.0
+    assert simulate_hit_ratio(np.zeros(0, np.int64),
+                              [np.array([1, 2, 3])]) == 0.0
+
+
+def test_fifo_capacity_zero_all_misses():
+    """capacity=0 must behave as 'nothing is ever resident' — the old code
+    raised KeyError popping from an empty OrderedDict on the first miss."""
+    fifo = FIFOCache(capacity=0)
+    assert fifo.access(7) is False
+    assert fifo.access(7) is False  # still a miss: nothing was admitted
+    assert fifo.run([np.array([1, 1, 2, 2])]) == 0.0
+
+
+def test_device_cache_ids_capacity_exceeds_remote_count(g):
+    """Asking for more cached rows than remote vertices exist returns all
+    remote vertices (no padding, no local rows, no duplicates)."""
+    from repro.core.sampling.cache import device_cache_ids
+
+    part = PARTITIONERS["hash"](g, 4)
+    n_remote = int((part.assignment != 0).sum())
+    ids = device_cache_ids(g, part.assignment, 0, "static_degree",
+                           capacity=g.num_vertices * 2)
+    assert len(ids) == n_remote
+    assert len(set(ids.tolist())) == len(ids)
+    assert not np.any(part.assignment[ids] == 0)
+    # capacity 0 / policy none: empty, never an error
+    assert len(device_cache_ids(g, part.assignment, 0, "static_degree", 0)) == 0
+    assert len(device_cache_ids(g, part.assignment, 0, "none", 8)) == 0
+
+
+def test_cache_is_store_overlay_consistent(g):
+    """The mini-batch cache as a FeatureStore overlay: the overlay snapshot
+    equals row-by-row lookups of the pinned ids; after owner rows are
+    UPDATED the snapshot is stale until refresh_overlay, then bitwise exact
+    again — the staleness trainable-feature engines must (and do) handle
+    with the in-step refresh."""
+    from repro.core.feature_store import FeatureStore
+    from repro.core.sampling.cache import device_cache_ids
+
+    k = 4
+    part = PARTITIONERS["hash"](g, k)
+    V = g.num_vertices
+    nb = -(-V // k)
+    # store-id relabel: device d owns slots [d*nb, (d+1)*nb)
+    sid_of = np.zeros(V, np.int64)
+    for d in range(k):
+        mine = np.where(part.assignment == d)[0]
+        sid_of[mine] = d * nb + np.arange(len(mine))
+    flat = np.zeros((k * nb, g.features.shape[1]), np.float32)
+    flat[sid_of] = g.features
+    store = FeatureStore.from_flat(flat, k)
+    cap = 12
+    overlay = [sid_of[device_cache_ids(g, part.assignment, d,
+                                       "static_degree", cap)]
+               for d in range(k)]
+    store.attach_overlay(overlay, cap)
+    tab = store.overlay_table()
+    for d in range(k):
+        assert np.array_equal(tab[d, : len(overlay[d])],
+                              store.lookup(overlay[d]))
+        assert np.all(tab[d, len(overlay[d]):] == 0)
+    # update every device-0-pinned row, as a training step would
+    new = store.lookup(overlay[0]) + 1.5
+    store.update_rows(overlay[0], new)
+    assert not np.array_equal(store.overlay_table()[0, : len(overlay[0])],
+                              new)  # snapshot is stale
+    store.refresh_overlay()
+    assert np.array_equal(store.overlay_table()[0, : len(overlay[0])], new)

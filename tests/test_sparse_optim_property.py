@@ -1,0 +1,179 @@
+"""Property tier for the row-sparse AdamW (optim/sparse_optim.py).
+
+Randomized multi-step runs over random touched-id sequences (duplicates,
+empty steps, sentinel padding included) check the two contracts everything
+else builds on:
+
+  * equivalence — `sparse_adamw_ids` over any id list produces EXACTLY the
+    trajectory of the masked-dense `row_adamw_update` with the scatter-added
+    dense gradient (and, for always-touched rows, of the repo's dense
+    `adamw` with the same hyperparameters);
+  * isolation — rows a step does not touch are bitwise unchanged in params,
+    both moments, AND the per-row step counts.
+
+The seeded checks below always run; when the optional `property` extra
+(hypothesis) is installed — the same gating as test_model_property.py — the
+same properties are additionally driven by generated cases.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, make_optimizer, sparse_adamw
+from repro.optim.sparse_optim import row_adamw_update, sparse_adamw_ids
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+HP = dict(lr=0.07, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.013)
+
+
+def _random_id_steps(rng, N):
+    """A short run of per-step id lists: duplicates, empty steps, and
+    sentinel (== N) entries all occur."""
+    steps = []
+    for _ in range(int(rng.integers(1, 5))):
+        n_ids = int(rng.integers(0, 2 * N))
+        steps.append(rng.integers(0, N + 1, size=n_ids).tolist())
+    steps.append([])  # always exercise an empty step
+    dup = int(rng.integers(0, N))
+    steps.append([dup, dup, dup])  # and a pure-duplicate step
+    return steps
+
+
+def _check_ids_path_matches_masked_dense(N, D, steps, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.normal(size=(N, D)).astype(np.float32)
+    sp = dict(p=jnp.asarray(p), m=jnp.zeros((N, D), jnp.float32),
+              v=jnp.zeros((N, D), jnp.float32), t=jnp.zeros((N,), jnp.int32))
+    dn = {k: v for k, v in sp.items()}
+    for ids_list in steps:
+        R = max(len(ids_list), 1) + 2  # always some sentinel padding
+        ids = np.full((R,), N, np.int64)
+        ids[: len(ids_list)] = ids_list
+        g_rows = rng.normal(size=(R, D)).astype(np.float32)
+        # dense oracle: scatter-ADD duplicate rows, touched = scattered ids
+        g_dense = np.zeros((N, D), np.float32)
+        touched = np.zeros((N,), bool)
+        for j, i in enumerate(ids):
+            if i < N:
+                g_dense[i] += g_rows[j]
+                touched[i] = True
+        sp["p"], sp["m"], sp["v"], sp["t"] = sparse_adamw_ids(
+            sp["p"], sp["m"], sp["v"], sp["t"], jnp.asarray(ids),
+            jnp.asarray(g_rows), dedup=True, **HP)
+        prev = {k: np.asarray(v) for k, v in dn.items()}
+        dn["p"], dn["m"], dn["v"], dn["t"] = row_adamw_update(
+            dn["p"], jnp.asarray(g_dense), dn["m"], dn["v"], dn["t"],
+            jnp.asarray(touched), **HP)
+        for key in ("p", "m", "v", "t"):
+            a, b = np.asarray(sp[key]), np.asarray(dn[key])
+            assert np.array_equal(a, b), (key, a, b)
+            u = ~touched
+            assert np.array_equal(a[u], prev[key][u]), (
+                f"untouched rows of {key} changed")
+
+
+def _check_lazy_matches_dense_adamw(N, D, seeds):
+    rng = np.random.default_rng(seeds[0])
+    params = {"emb": jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))}
+    lr_fn = lambda s: HP["lr"]  # noqa: E731
+    osp = make_optimizer("sparse_adamw", lr_fn, b1=HP["b1"], b2=HP["b2"],
+                         eps=HP["eps"], weight_decay=HP["weight_decay"])
+    odn = adamw(lr_fn, b1=HP["b1"], b2=HP["b2"], eps=HP["eps"],
+                weight_decay=HP["weight_decay"])
+    ssp, sdn = osp.init(params), odn.init(params)
+    psp = pdn = params
+    for step, seed in enumerate(seeds):
+        g = {"emb": jnp.asarray(
+            np.random.default_rng(seed).normal(size=(N, D))
+            .astype(np.float32) + 0.01)}
+        usp, ssp = osp.update(g, ssp, psp, jnp.asarray(step))
+        udn, sdn = odn.update(g, sdn, pdn, jnp.asarray(step))
+        np.testing.assert_allclose(np.asarray(usp["emb"]),
+                                   np.asarray(udn["emb"]), atol=1e-6)
+        psp = {"emb": psp["emb"] + usp["emb"]}
+        pdn = {"emb": pdn["emb"] + udn["emb"]}
+    # now zero out row 0's gradient: it must freeze bitwise
+    before = (np.asarray(psp["emb"][0]), np.asarray(ssp["m"]["emb"][0]),
+              np.asarray(ssp["v"]["emb"][0]), int(ssp["t"]["emb"][0]))
+    g = {"emb": jnp.asarray(np.ones((N, D), np.float32)).at[0].set(0.0)}
+    usp, ssp = osp.update(g, ssp, psp, jnp.asarray(len(seeds)))
+    psp = {"emb": psp["emb"] + usp["emb"]}
+    assert np.array_equal(np.asarray(psp["emb"][0]), before[0])
+    assert np.array_equal(np.asarray(ssp["m"]["emb"][0]), before[1])
+    assert np.array_equal(np.asarray(ssp["v"]["emb"][0]), before[2])
+    assert int(ssp["t"]["emb"][0]) == before[3]
+    if N > 1:
+        assert int(ssp["t"]["emb"][1]) == before[3] + 1
+
+
+# -- always-on seeded sweeps ------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_ids_path_matches_masked_dense_oracle(seed):
+    """sparse_adamw_ids (dedup on, sentinel-padded, duplicate ids) ==
+    row_adamw_update with the dense scatter-added gradient, every step;
+    untouched rows bitwise frozen in all four buffers."""
+    rng = np.random.default_rng(1000 + seed)
+    N, D = int(rng.integers(2, 10)), int(rng.integers(1, 5))
+    _check_ids_path_matches_masked_dense(
+        N, D, _random_id_steps(rng, N), seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_lazy_optimizer_matches_dense_adamw_when_all_rows_touched(seed):
+    """The registered Optimizer wrapper: with dense nonzero gradients every
+    step, sparse_adamw's trajectory IS adamw's (same hyperparameters); rows
+    given an all-zero gradient are bitwise untouched, including t."""
+    rng = np.random.default_rng(2000 + seed)
+    _check_lazy_matches_dense_adamw(
+        int(rng.integers(2, 9)), int(rng.integers(1, 4)),
+        rng.integers(0, 2**31 - 1, size=3).tolist())
+
+
+def test_empty_id_list_is_identity():
+    """An all-sentinel step changes nothing, bitwise."""
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32))
+    m = jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32))
+    v = jnp.asarray(np.abs(rng.normal(size=(5, 3))).astype(np.float32))
+    t = jnp.asarray(np.arange(5, dtype=np.int32))
+    ids = jnp.full((4,), 5)
+    g = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    p2, m2, v2, t2 = sparse_adamw_ids(p, m, v, t, ids, g, **HP)
+    for a, b in ((p, p2), (m, m2), (v, v2), (t, t2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_state_logical_axes_shapes():
+    """Moment axes mirror the param axes; the per-row counts keep only the
+    leading (row) axis — what the engine's sharded state relies on."""
+    opt = sparse_adamw(lambda s: 0.1)
+    axes = opt.state_logical_axes({"emb": ("vocab", "embed")})
+    assert axes["m"] == {"emb": ("vocab", "embed")}
+    assert axes["v"] == {"emb": ("vocab", "embed")}
+    assert axes["t"] == {"emb": ("vocab",)}
+
+
+# -- hypothesis-driven versions (optional `property` extra) -----------------
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 9), st.integers(1, 4),
+           st.integers(0, 2**31 - 1))
+    def test_ids_path_property(N, D, seed):
+        rng = np.random.default_rng(seed)
+        _check_ids_path_matches_masked_dense(
+            N, D, _random_id_steps(rng, N), seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(2, 8), st.integers(1, 3),
+           st.lists(st.integers(0, 2**31 - 1), min_size=2, max_size=4))
+    def test_lazy_optimizer_property(N, D, seeds):
+        _check_lazy_matches_dense_adamw(N, D, seeds)

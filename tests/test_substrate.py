@@ -12,7 +12,15 @@ from repro.configs.base import ShapeConfig
 from repro.data.pipeline import batch_logical_axes, input_specs, make_batch
 from repro.launch import flops as flops_lib
 from repro.launch.hlo_analysis import collective_bytes, parse_collectives, roofline_terms
-from repro.optim import adafactor, adamw, clip_by_global_norm, cosine_schedule, sgdm
+from repro.optim import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+    sgdm,
+    sparse_adamw,
+)
 
 
 # --- optimizers -------------------------------------------------------------
@@ -22,6 +30,7 @@ from repro.optim import adafactor, adamw, clip_by_global_norm, cosine_schedule, 
     lambda: adamw(lambda s: 0.1),
     lambda: adafactor(lambda s: 0.5, min_dim_factored=4),
     lambda: sgdm(lambda s: 0.05),
+    lambda: sparse_adamw(lambda s: 0.1),
 ])
 def test_optimizer_descends_quadratic(make):
     opt = make()
@@ -39,6 +48,20 @@ def test_optimizer_descends_quadratic(make):
         updates, state = opt.update(grads, state, params, jnp.asarray(step))
         params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
     assert float(loss(params)) < l0 * 0.3
+
+
+def test_make_optimizer_registry_and_unknown_name():
+    """Every registered name builds an Optimizer (sparse_adamw included);
+    an unknown name fails with an actionable error listing the valid ones."""
+    for name in ("adamw", "adafactor", "sgdm", "sparse_adamw"):
+        opt = make_optimizer(name, lambda s: 0.1)
+        assert callable(opt.init) and callable(opt.update)
+    with pytest.raises(ValueError) as ei:
+        make_optimizer("adam", lambda s: 0.1)
+    msg = str(ei.value)
+    assert "'adam'" in msg
+    for name in ("adamw", "adafactor", "sgdm", "sparse_adamw"):
+        assert name in msg, f"error message must list {name}: {msg}"
 
 
 def test_adafactor_state_is_factored():
