@@ -121,6 +121,22 @@ def run_engine(args, g):
         ref_losses, _ = eng.train(args.epochs, reference=True)
         gap = max(abs(a - b) for a, b in zip(losses, ref_losses))
         print(f"oracle gap (max |loss_dist - loss_ref|) = {gap:.2e}")
+    if args.infer:
+        if minibatch:
+            infer_state = state
+        else:  # train() keeps its state internal: replay the same stream
+            step = eng.make_step()
+            infer_state = eng.init_state()
+            for _ in range(args.epochs):
+                infer_state, _, _ = step(infer_state)
+        emb = eng.global_embeddings(eng.infer_full_graph(infer_state))
+        ref = eng.global_embeddings(
+            eng.infer_full_graph(infer_state, reference=True))
+        err = float(np.max(np.abs(emb - ref)))
+        print(f"layer-wise inference sweep: embeddings {emb.shape}, "
+              f"{eng.inference_bytes_per_sweep() / 1e6:.3f} MB/sweep "
+              f"({eng.comm_stats.inference_bytes / 1e6:.3f} MB accounted), "
+              f"oracle gap {err:.2e}")
 
 
 def run_legacy(args, g):
@@ -246,6 +262,12 @@ def main():
     ap.add_argument("--oracle-check", action="store_true",
                     help="engine: also run the single-device reference and "
                     "report the max loss gap")
+    ap.add_argument("--infer", action="store_true",
+                    help="engine: after training, run the layer-wise "
+                    "full-graph inference sweep (embeddings for every "
+                    "vertex in O(L) exchanges) and report its oracle gap; "
+                    "K-target query serving lives in "
+                    "`python -m repro.launch.serve_gnn`")
     args = ap.parse_args()
 
     if args.exec is None:

@@ -157,6 +157,48 @@ print(f"smoke OK vertex_cut cartesian2d 2x2 p2p/sync: oracle err {err:.2e}, "
       f"1 compile, replication {eng.layout.replication_factor():.2f}, "
       f"{eng.comm_stats.replica_sync_bytes} replica-sync bytes")
 EOF
+    # 4-device SERVING smoke (ISSUE 7): one layer-wise full-graph sweep vs
+    # the oracle with the wire bytes cross-checked against the engine's own
+    # cost model, then a few K-target queries through the GNNQueryEngine vs
+    # the single-device reference round — one serve compile total
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
+import jax
+import numpy as np
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+from repro.core.serving import GNNQueryEngine
+
+g = sbm_graph(96, num_blocks=4, p_in=0.08, p_out=0.01, seed=0)
+eng = DistGNNEngine(g, cfg=EngineConfig(
+    execution="p2p", batching="node_wise", batch_size=8, fanouts=(3, 3),
+    hidden=16, lr=0.3, cache_policy="static_degree", cache_capacity=12))
+state, _, _ = eng.run_epoch_minibatch(3)
+params = state["params"]
+emb = eng.global_embeddings(eng.infer_full_graph(params=params))
+ref = eng.global_embeddings(eng.infer_full_graph(params=params,
+                                                 reference=True))
+err = float(np.max(np.abs(emb - ref)))
+assert err < 1e-4, err
+assert eng.comm_stats.inference_bytes == eng.inference_bytes_per_sweep()
+qe = GNNQueryEngine(eng, params)
+rng = np.random.default_rng(0)
+for _ in range(3):
+    targets = rng.choice(g.num_vertices, 6, replace=False)
+    per_dev = [[] for _ in range(eng.k)]
+    for v in targets:
+        per_dev[int(eng.part.assignment[v])].append(int(v))
+    batch = qe.build_round([np.asarray(x, np.int64) for x in per_dev])
+    H = np.asarray(qe.serve_round(batch))
+    R = np.asarray(qe.reference_round(batch))
+    for d, tg in enumerate(per_dev):
+        if tg:
+            qerr = float(np.max(np.abs(H[d, :len(tg)] - R[d, :len(tg)])))
+            assert qerr < 1e-4, (d, qerr)
+assert qe.num_compiles() == 1, qe.num_compiles()
+print(f"smoke OK serving: sweep oracle err {err:.2e}, "
+      f"{eng.comm_stats.inference_bytes} inference bytes == cost model, "
+      f"{qe.stats.rounds} query rounds, 1 serve compile")
+EOF
 else
     python -m pytest -x -q
 fi

@@ -313,6 +313,8 @@ class DistGNNEngine:
         self._ref_step = None
         self._mb_step = None
         self._mb_ref_step = None
+        self._infer_step = None
+        self._ref_infer = None
         self.comm_stats = CommStats()
         if cfg.batching != "full_graph":
             self._build_minibatch_plan()
@@ -987,18 +989,16 @@ class DistGNNEngine:
     # single-device oracle
     # ------------------------------------------------------------------
 
-    def make_reference_step(self):
-        """Identical math on one device: global ELL gather (for vertex_cut:
+    def _make_reference_layer(self):
+        """Single-device reference layer math, shared by the oracle train
+        step and reference inference: global ELL gather (for vertex_cut:
         per-replica partials + a scatter-add combine over the global vertex
-        space) + the same block_refresh vmapped over the k blocks."""
-        if self._ref_step is not None:
-            return self._ref_step
+        space).  Returns ``layer_ref(p_l, H, last)`` over the padded [Vp]
+        space."""
         c = self.cfg
         k, nb, Vp = self.k, self.nb, self.Vp
-        L = len(self.dims) - 1
         ids_g = jnp.asarray(self.ids_global.astype(np.int32))
         mask, deg = self.mask, self.deg
-        X, y, w, bmask = self.X, self.y, self.train_w, self.bmask
         if c.partition_family == "vertex_cut":
             vert_ids_ref = jnp.asarray(
                 self.layout.vert_ids.astype(np.int32))  # [k, nv], pad = V
@@ -1030,24 +1030,43 @@ class DistGNNEngine:
             z = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), Hw)
             return z if last else jax.nn.relu(z)
 
+        def layer_ref(p_l, H, last):
+            if c.model == "gat":
+                return gat_layer_ref(p_l, H, last)
+            table = jnp.concatenate(
+                [H, jnp.zeros((1, H.shape[1]), H.dtype)], 0)
+            gathered = (mask[..., None]
+                        * jnp.take(table, ids_g, axis=0)).sum(1)
+            if c.partition_family == "vertex_cut":
+                gathered = reference_combine(
+                    gathered.reshape(k, nb, -1), vert_ids_ref, Vg
+                ).reshape(Vp, -1)
+            return self._combine(c.model, p_l, gathered / deg, H, last=last)
+
+        return layer_ref
+
+    def make_reference_step(self):
+        """Identical math on one device: the shared reference layer
+        (`_make_reference_layer`) + the same block_refresh vmapped over the
+        k blocks."""
+        if self._ref_step is not None:
+            return self._ref_step
+        c = self.cfg
+        k, nb, Vp = self.k, self.nb, self.Vp
+        L = len(self.dims) - 1
+        layer_ref = self._make_reference_layer()
+        X, y, w, bmask = self.X, self.y, self.train_w, self.bmask
+        if c.partition_family == "vertex_cut":
+            vert_ids_ref = jnp.asarray(
+                self.layout.vert_ids.astype(np.int32))  # [k, nv], pad = V
+            Vg = self.g.num_vertices
+
         def forward(params, hist, age, step_i, X_in=None):
             H = X if X_in is None else X_in
             new_hist, new_age = [], []
             pushed = jnp.zeros((), jnp.float32)
             for l, p_l in enumerate(params["layers"]):
-                if c.model == "gat":
-                    H = gat_layer_ref(p_l, H, last=(l == L - 1))
-                else:
-                    table = jnp.concatenate(
-                        [H, jnp.zeros((1, H.shape[1]), H.dtype)], 0)
-                    gathered = (mask[..., None]
-                                * jnp.take(table, ids_g, axis=0)).sum(1)
-                    if c.partition_family == "vertex_cut":
-                        gathered = reference_combine(
-                            gathered.reshape(k, nb, -1), vert_ids_ref, Vg
-                        ).reshape(Vp, -1)
-                    H = self._combine(c.model, p_l, gathered / deg, H,
-                                      last=(l == L - 1))
+                H = layer_ref(p_l, H, last=(l == L - 1))
                 if c.protocol != "sync":
                     h_blocks = H.reshape(k, nb, -1)
                     hist_blocks = hist[l].reshape(k, nb, -1)
@@ -1113,6 +1132,167 @@ class DistGNNEngine:
 
         self._ref_step = ref_step
         return ref_step
+
+    # ------------------------------------------------------------------
+    # serving: layer-wise full-graph inference (the throughput tier)
+    # ------------------------------------------------------------------
+
+    def make_infer_step(self):
+        """The jitted layer-wise full-graph inference sweep: compute layer l
+        for ALL vertices before layer l+1 — the production answer to neighbor
+        explosion (embeddings for every vertex in O(L) exchange sweeps, no
+        fanout blow-up).  Reuses the training exchange per layer
+        (`_exchange_and_aggregate` under `_model_layer_local`: chunked
+        double-buffered broadcast/p2p, ring scan, vertex-cut replica sync);
+        layer-0 rows arrive as an ARGUMENT so the sweep reads the live
+        FeatureStore (or a trainable state's embed table) without retracing.
+
+        Inference is protocol-free: it serves fresh activations, never the
+        async history (stale serving reads are a ROADMAP item-4 follow-up).
+        """
+        if self._infer_step is not None:
+            return self._infer_step
+        ax = self.axis
+        c = self.cfg
+        L = len(self.dims) - 1
+
+        consts = dict(deg=self.deg, ids=self.ids_exec, mask=self.mask)
+        shard = dict(deg=P(ax, None), ids=P(ax, None), mask=P(ax, None))
+        if c.partition_family == "vertex_cut":
+            for key, a in self._vc_plan.items():
+                consts[key] = a
+                shard[key] = P(*((ax,) + (None,) * (a.ndim - 1)))
+        elif c.execution == "ring":
+            consts["mask"] = self.mask_exec
+            shard["ids"] = P(ax, None, None, None)
+            shard["mask"] = P(ax, None, None, None)
+        elif c.execution == "p2p":
+            consts["send_rows"] = self.send_rows
+            shard["send_rows"] = P(ax, None, None, None)
+
+        def local_infer(params, X_local, consts_local):
+            # squeeze the device axis off ring/p2p plans (as in local_step)
+            cl = dict(consts_local)
+            if c.partition_family == "vertex_cut":
+                for key in ("send1", "send2", "ring_ids"):
+                    if key in cl:
+                        cl[key] = cl[key][0]
+            elif c.execution == "ring":
+                cl["ids"] = cl["ids"][0]
+                cl["mask"] = cl["mask"][0]
+            elif c.execution == "p2p":
+                cl["send_rows"] = cl["send_rows"][0]
+            H = X_local
+            for l, p_l in enumerate(params["layers"]):
+                H = self._model_layer_local(p_l, H, cl, last=(l == L - 1))
+            return H
+
+        smapped = shard_map(local_infer, mesh=self.mesh,
+                            in_specs=(P(), P(ax, None), shard),
+                            out_specs=P(ax, None), check_vma=False)
+
+        @jax.jit
+        def istep(params, X, consts_):
+            return smapped(params, X, consts_)
+
+        self._infer_consts = consts
+        self._jit_infer = istep
+        self._infer_step = lambda params, X: istep(params, X, consts)
+        return self._infer_step
+
+    def _layer0_table(self, state=None):
+        """Layer-0 rows for inference: the trainable embed table when the
+        features are learnable, else a LIVE read through the FeatureStore
+        (rows published via `store.update_rows` / `publish_embeddings` flow
+        into the next sweep — no dense re-materialization, no retrace)."""
+        if self.cfg.trainable_features:
+            if state is None or "embed" not in state:
+                raise ValueError(
+                    "trainable_features: inference reads layer-0 rows from "
+                    "the train state's embed table — pass state=")
+            return state["embed"]
+        return self.store.device_table()
+
+    def infer_full_graph(self, state=None, *, params=None, reference=False):
+        """Owner-partitioned final-layer embeddings for EVERY vertex, [Vp, C]
+        (edge_cut: the contiguous relabeled blocks; vertex_cut: replica slots,
+        masters authoritative — `global_embeddings` maps either back to the
+        original vertex ids).  One call = one O(L) layer-wise sweep; wire
+        bytes are accounted into CommStats.inference_bytes and cross-checked
+        against `cost_models.inference_bytes_per_sweep` by the serving tier.
+
+        `reference=True` runs the bitwise-independent single-device oracle
+        (shared `_make_reference_layer` math) instead of the jitted
+        distributed sweep."""
+        if params is None:
+            if state is None or "params" not in state:
+                raise ValueError("infer_full_graph needs params= or a train "
+                                 "state with a 'params' entry")
+            params = state["params"]
+        X = self._layer0_table(state)
+        if reference:
+            if self._ref_infer is None:
+                layer_ref = self._make_reference_layer()
+                L = len(self.dims) - 1
+
+                @jax.jit
+                def ref_infer(p, X_in):
+                    H = X_in
+                    for l, p_l in enumerate(p["layers"]):
+                        H = layer_ref(p_l, H, last=(l == L - 1))
+                    return H
+
+                self._ref_infer = ref_infer
+            return self._ref_infer(params, X)
+        out = self.make_infer_step()(params, X)
+        self.comm_stats.inference_bytes += self.inference_bytes_per_sweep()
+        return out
+
+    def inference_bytes_per_sweep(self) -> int:
+        """Wire bytes of one layer-wise sweep — the engine-side mirror of
+        `cost_models.inference_bytes_per_sweep` (forward-only: one exchange
+        per layer at that layer's model-dependent width, nothing back)."""
+        c = self.cfg
+        if c.partition_family == "vertex_cut":
+            return self._vc_bytes_per_step
+        if c.execution in ("broadcast", "ring"):
+            rows = self.k * (self.k - 1) * self.nb
+        else:  # p2p: each partition's remote in-neighbor set, once per layer
+            rows = self._halo_rows
+        widths = model_exchange_widths(c.model, self.dims, "edge_cut")
+        return rows * int(sum(widths)) * FEAT_BYTES
+
+    def global_embeddings(self, H) -> np.ndarray:
+        """Map owner-partitioned padded embeddings [Vp, D] back to the
+        ORIGINAL vertex ids, [V, D]: edge_cut inverts the contiguous
+        relabel; vertex_cut reads each vertex's master replica row."""
+        H = np.asarray(H)
+        V = self.g.num_vertices
+        if self.cfg.partition_family == "vertex_cut":
+            lay = self.layout
+            out = np.zeros((V, H.shape[1]), H.dtype)
+            flat_vid = np.asarray(lay.vert_ids).reshape(-1)  # pad slots -> V
+            mm = np.asarray(lay.master_mask).reshape(-1) > 0.5
+            out[flat_vid[mm]] = H[mm]
+            return out
+        return H[self.new_of_old]
+
+    def publish_embeddings(self, state) -> None:
+        """Serving handoff for trainable features: write the trained layer-0
+        rows back into the FeatureStore (and refresh any attached overlay
+        snapshot), so engines/serving tiers built on this store — including a
+        non-trainable clone — read the TRAINED table.  Host-side, out of the
+        jitted path."""
+        emb = np.asarray(state["embed"], np.float32)
+        if emb.shape != (self.store.num_rows, self.store.dim):
+            raise ValueError(f"embed table {emb.shape} != store "
+                             f"{(self.store.num_rows, self.store.dim)}")
+        self.store.update_rows(np.arange(self.store.num_rows), emb)
+        if self.store._overlay_ids is not None:
+            self.store.refresh_overlay()
+            if getattr(self, "_cache_table", None) is not None:
+                self._cache_table = jnp.asarray(self.store.overlay_table())
+        self.X = self.store.device_table()
 
     # ------------------------------------------------------------------
     # mini-batch path (§5 batch generation wired into the jitted step)

@@ -127,6 +127,43 @@ def edge_cut_halo_bytes_per_step(g: Graph, part, dims: Sequence[int],
     return part.communication_volume(g) * int(sum(widths)) * feat_bytes
 
 
+def inference_bytes_per_sweep(execution: str, dims: Sequence[int], *,
+                              model: str = "gcn", family: str = "edge_cut",
+                              k: int = None, nb: int = None, g: Graph = None,
+                              part=None, rep_counts: np.ndarray = None,
+                              nv: int = None,
+                              feat_bytes: int = FEAT_BYTES) -> int:
+    """Wire bytes of ONE layer-wise full-graph inference sweep
+    (`DistGNNEngine.infer_full_graph`): the forward-only half of a train
+    step — every layer runs its exchange exactly once at that layer's
+    model-dependent width, and nothing flows back (no gradient transpose,
+    no embedding-delta re-broadcast).
+
+      edge_cut broadcast/ring  every device gathers the other k-1 padded
+                               blocks per layer: k*(k-1)*nb rows.
+      edge_cut p2p             each layer ships each partition's remote
+                               in-neighbor (halo) set once:
+                               `part.communication_volume(g)` rows — the
+                               engine's bucketed all_to_all need sets.
+      vertex_cut               one replica-sync combine per layer — the same
+                               rows-per-layer as a training forward, so the
+                               sweep volume IS `replica_sync_bytes_per_step`
+                               (gat pays its +2 max/α columns there).
+
+    Cross-checked against CommStats.inference_bytes by the serving tier."""
+    if family == "vertex_cut":
+        return replica_sync_bytes_per_step(rep_counts, k, nv, execution,
+                                           dims, feat_bytes, model)
+    widths = model_exchange_widths(model, dims, "edge_cut")
+    if execution in ("broadcast", "ring"):
+        rows = k * (k - 1) * int(nb)
+    elif execution == "p2p":
+        rows = part.communication_volume(g)
+    else:
+        raise ValueError(f"unknown execution {execution!r}")
+    return rows * int(sum(widths)) * feat_bytes
+
+
 def embedding_grad_bytes_per_step(g: Graph, execution: str,
                                   dims: Sequence[int], *, k: int,
                                   family: str = "edge_cut", part=None,

@@ -60,24 +60,41 @@ def presampling_cache(g: Graph, capacity: int, *, fanouts=(5, 5), batch_size=32,
     return np.argsort(-counts)[:capacity]
 
 
-def analysis_cache(g: Graph, capacity: int, *, fanouts=(5, 5)) -> np.ndarray:
+def analysis_propagation(g: Graph, *, fanouts=(5, 5)) -> tuple:
     """SALIENT++ propagation model: p_0 = uniform over train set; each hop
-    propagates p along in-edges scaled by min(fanout/deg, 1)."""
+    ships p[v] * min(fanout/deg, 1) of v's mass SPLIT EVENLY across its
+    in-neighbors (a sampler visits each neighbor with probability ~fanout/deg,
+    and the per-vertex mass is a probability, so it divides — it doesn't
+    replicate).  Duplicate neighbor entries (parallel edges) accumulate via
+    np.add.at; fancy-index `+=` would silently keep only one of them.
+
+    Returns ``(total, per_hop)`` — total [V] is the cache-ranking score,
+    per_hop[h] the mass vector after hop h.  Because scale <= 1 and the split
+    sums to one, each hop's mass is conserved: per_hop[h].sum() <= the
+    previous hop's mass (the regression tier asserts this)."""
     V = g.num_vertices
     train = np.where(g.train_mask)[0] if g.train_mask is not None else np.arange(V)
     p = np.zeros(V)
     p[train] = 1.0 / max(len(train), 1)
     total = p.copy()
     deg = g.degree().astype(np.float64)
+    per_hop: List[np.ndarray] = []
     for fanout in fanouts:
         nxt = np.zeros(V)
         scale = np.minimum(fanout / np.maximum(deg, 1.0), 1.0)
         for v in range(V):
             if p[v] > 0 and deg[v] > 0:
                 nb = g.neighbors(v)
-                nxt[nb] += p[v] * scale[v] / len(nb) * len(nb)  # prob mass per nbr
+                np.add.at(nxt, nb, p[v] * scale[v] / len(nb))
         total += nxt
+        per_hop.append(nxt)
         p = nxt
+    return total, per_hop
+
+
+def analysis_cache(g: Graph, capacity: int, *, fanouts=(5, 5)) -> np.ndarray:
+    """SALIENT++: cache the highest analytically-propagated access probability."""
+    total, _ = analysis_propagation(g, fanouts=fanouts)
     return np.argsort(-total)[:capacity]
 
 
@@ -139,6 +156,15 @@ def proximity_ordering(g: Graph, train: np.ndarray, *, seed: int = 0,
     order: List[int] = []
     seen = set()
     q = deque()
+    # Restart source: a pre-shuffled pass over the train vertices with a
+    # monotone cursor.  Each restart advances past already-seen vertices, so
+    # the total restart work is O(|train|) across the whole traversal — the
+    # old `[t for t in train_set if t not in set(order)]` rebuilt the emitted
+    # set every restart, turning many-component graphs quadratic.  (When the
+    # queue drains, every seen train vertex has been popped into `order`, so
+    # "unseen" == "not yet emitted".)
+    restart = rng.permutation(np.asarray(train, np.int64))
+    cursor = 0
     start = int(rng.choice(train))
     q.append(start)
     seen.add(start)
@@ -151,9 +177,10 @@ def proximity_ordering(g: Graph, train: np.ndarray, *, seed: int = 0,
                 seen.add(int(u))
                 q.append(int(u))
         if not q:
-            rest = [t for t in train_set if t not in set(order)]
-            if rest:
-                nxt = int(rng.choice(np.asarray(rest)))
+            while cursor < len(restart) and int(restart[cursor]) in seen:
+                cursor += 1
+            if cursor < len(restart):
+                nxt = int(restart[cursor])
                 q.append(nxt)
                 seen.add(nxt)
     arr = np.asarray(order, np.int64)

@@ -29,11 +29,13 @@ class CommStats:
     replica_sync_bytes: int = 0  # vertex-cut partial/aggregate rows exchanged
     embed_grad_bytes: int = 0  # trainable embeddings: layer-0 gradient rows
     #   routed back to their owners (+ the live cache-overlay refresh)
+    inference_bytes: int = 0  # layer-wise full-graph inference sweeps: one
+    #   forward-only exchange per layer (cost_models.inference_bytes_per_sweep)
 
     def total(self) -> int:
         """Bytes that actually cross the wire (cache hits excluded)."""
         return (self.pull_bytes + self.push_bytes + self.replica_sync_bytes
-                + self.embed_grad_bytes)
+                + self.embed_grad_bytes + self.inference_bytes)
 
     def requested(self) -> int:
         """Bytes the computation asked for, whether cached or fetched."""

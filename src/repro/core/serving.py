@@ -1,0 +1,250 @@
+"""Low-latency GNN query serving (ROADMAP item 2, latency tier).
+
+`GNNQueryEngine` is the persistent engine that answers "embed these K target
+vertices now" on top of a trained `DistGNNEngine`, riding the padded
+node-wise sampler path:
+
+  - STATIC shapes, ONE compile: every serve round is padded to the engine's
+    mini-batch frontier caps (fixed fanouts), so the jitted shard_map serve
+    step compiles exactly once per fanout config — the same contract as
+    `launch/serve.py`'s LLM serve step (recompile-count guarded in tests);
+  - REQUEST COALESCING: `submit()` queues requests, `flush()` dedupes the
+    pending target set, splits it by owner (targets are sampled on the
+    device that owns them, the invariant the p2p halo caps are measured
+    under), and packs it into the fewest padded rounds the per-owner cap
+    (cfg.batch_size) allows;
+  - the RESIDENT FEATURE CACHE (the FeatureStore hot-row overlay) is the
+    serving hot set: remote frontier rows it holds never touch the wire, so
+    a fully cache-resident query costs zero exchange bytes (asserted by the
+    serving test tier; bytes ride the engine's CommStats accounting).
+
+The throughput tier — embeddings for EVERY vertex in O(L) layer-wise
+sweeps — is `DistGNNEngine.infer_full_graph`; this module is the K-target
+point-query complement ("Scalable GNN Training: The Case for Sampling"
+— sampled serving is dominated by feature fetches, which the cache and
+owner-local sampling keep off the wire).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.models.gnn import padded_minibatch_forward
+from repro.core.sampling.samplers import node_wise_sample
+
+
+@dataclasses.dataclass
+class ServingStats:
+    """Host-side serving counters; wire bytes live in engine.comm_stats."""
+    queries: int = 0  # requests answered
+    rounds: int = 0  # serve-step executions
+    targets: int = 0  # deduped target vertices embedded
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+    def percentile_ms(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), q) * 1e3)
+
+    def qps(self) -> float:
+        wall = sum(self.latencies_s)
+        return self.queries / wall if wall > 0 else 0.0
+
+
+class GNNQueryEngine:
+    """Persistent K-target embedding server over a DistGNNEngine.
+
+    The engine must be built with ``batching='node_wise'`` (the fixed-fanout
+    padded sampler path whose caps make the serve step static) and frozen
+    features — for ``trainable_features`` models, publish the trained table
+    first (``engine.publish_embeddings(state)``) and serve from a
+    non-trainable engine on the same store/partition.
+    """
+
+    def __init__(self, engine, params):
+        c = engine.cfg
+        if c.batching != "node_wise":
+            raise ValueError(
+                "GNNQueryEngine rides the node-wise padded sampler path: "
+                f"build the engine with batching='node_wise' "
+                f"(got batching={c.batching!r})")
+        if c.trainable_features:
+            raise ValueError(
+                "GNNQueryEngine serves FROZEN layer-0 rows: write the "
+                "trained table back with engine.publish_embeddings(state) "
+                "and build a non-trainable engine on the same graph/"
+                "partition for serving")
+        self.engine = engine
+        self.params = params
+        self.stats = ServingStats()
+        self._pending: List[tuple] = []  # (rid, target ids)
+        self._next_rid = 0
+        self._qctr = 0  # monotone round counter keying the sampling streams
+        self._serve = None
+        self._jit_serve = None
+        self._ref_round = None
+
+    # -- the one-compile serve step -------------------------------------
+    def make_serve_step(self):
+        """The jitted serve round: (params, padded batch) -> [k, cap_L, C]
+        final-layer rows for each device's padded targets.  The mini-batch
+        train step minus loss/grads: resident-cache gather + execution
+        exchange for the frontier (`_fetch_frontier`), then the padded
+        dense-block forward."""
+        if self._serve is not None:
+            return self._serve
+        eng = self.engine
+        c = eng.cfg
+        ax, L = eng.axis, c.num_layers
+        consts = dict(X=eng.X, cache=eng._cache_table)
+        cshard = dict(X=P(ax, None), cache=P(ax, None, None))
+        bspec = dict(adj=tuple(P(ax, None, None) for _ in range(L)),
+                     self_idx=tuple(P(ax, None) for _ in range(L)),
+                     cache_ids=P(ax, None))
+        if c.execution == "broadcast":
+            bspec["bc_ids"] = P(ax, None)
+        elif c.execution == "ring":
+            bspec["ring_ids"] = P(ax, None, None)
+        else:
+            bspec["send_rows"] = P(ax, None, None, None)
+            bspec["tab_ids"] = P(ax, None)
+
+        def local_serve(params, consts_local, batch_local):
+            bl = {key: (tuple(a[0] for a in v) if isinstance(v, tuple)
+                        else v[0]) for key, v in batch_local.items()}
+            F = eng._fetch_frontier(consts_local["X"],
+                                    consts_local["cache"][0], bl)
+            H = padded_minibatch_forward(params, list(bl["adj"]), F,
+                                         model=c.model,
+                                         self_idx=list(bl["self_idx"]))
+            return H[None]
+
+        smapped = shard_map(local_serve, mesh=eng.mesh,
+                            in_specs=(P(), cshard, bspec),
+                            out_specs=P(ax, None, None),
+                            check_vma=False)
+
+        @jax.jit
+        def serve(params, consts_, batch):
+            return smapped(params, consts_, batch)
+
+        keys = tuple(bspec)
+        self._jit_serve = serve
+        self._serve = lambda params, batch: serve(
+            params, consts, {key: batch[key] for key in keys})
+        return self._serve
+
+    def num_compiles(self) -> int:
+        """Recompile-count guard: 1 after any number of served rounds."""
+        return self._jit_serve._cache_size() if self._jit_serve else 0
+
+    # -- round construction ----------------------------------------------
+    def build_round(self, round_targets: Sequence[np.ndarray]) -> Dict:
+        """One padded serve round from per-device OWNED target lists (each
+        <= cfg.batch_size): deterministic node-wise sampling keyed by a
+        monotone round counter, then the engine's extract stage (static
+        caps, cache short-circuit, exchange plan, CommStats bytes)."""
+        eng, c = self.engine, self.engine.cfg
+        qi = self._qctr
+        self._qctr += 1
+        mbs = []
+        for d, tg in enumerate(round_targets):
+            tg = np.asarray(tg, np.int64)
+            if len(tg) > c.batch_size:
+                raise ValueError(f"device {d} round has {len(tg)} targets > "
+                                 f"batch_size {c.batch_size}")
+            if len(tg) and np.any(eng.part.assignment[tg] != d):
+                raise ValueError(f"device {d} given targets it does not own")
+            rng = np.random.default_rng([c.seed, 70657, qi, d])
+            mbs.append(node_wise_sample(eng.g, tg, c.fanouts, rng))
+        return eng._make_batch(mbs)
+
+    def serve_round(self, batch: Dict):
+        """Run one pre-built round through the jitted serve step."""
+        out = self.make_serve_step()(self.params, batch)
+        self.stats.rounds += 1
+        return out
+
+    def reference_round(self, batch: Dict):
+        """Single-device oracle for the SAME padded round: features gathered
+        straight from the global table (pad frontier id Vp -> zero row),
+        forward vmapped over the k device blocks — the serving analog of
+        `make_reference_minibatch_step`."""
+        eng, c = self.engine, self.engine.cfg
+        if self._ref_round is None:
+            table0 = jnp.concatenate(
+                [eng.X, jnp.zeros((1, eng.X.shape[1]), eng.X.dtype)], 0)
+
+            @jax.jit
+            def ref(params, frontier, adj, self_idx):
+                F = jnp.take(table0, frontier, axis=0)  # [k, cap0, D]
+
+                def one(f, a, si):
+                    return padded_minibatch_forward(
+                        params, list(a), f, model=c.model, self_idx=list(si))
+
+                return jax.vmap(one)(F, adj, self_idx)
+
+            self._ref_round = ref
+        return self._ref_round(self.params, batch["frontier"],
+                               batch["adj"], batch["self_idx"])
+
+    # -- request coalescing ----------------------------------------------
+    def submit(self, targets) -> int:
+        """Queue one "embed these targets" request; answered at `flush`."""
+        targets = np.asarray(targets, np.int64).ravel()
+        if targets.size == 0:
+            raise ValueError("empty query")
+        V = self.engine.g.num_vertices
+        if targets.min() < 0 or targets.max() >= V:
+            raise ValueError("target ids out of range")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append((rid, targets))
+        return rid
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Answer every pending request in one coalesced pass: dedupe the
+        union of pending targets, split by owner, pack into ceil(max owned
+        share / batch_size) padded rounds, serve, scatter rows back per
+        request (shared targets are embedded once)."""
+        if not self._pending:
+            return {}
+        t0 = time.perf_counter()
+        eng = self.engine
+        cap = eng.cfg.batch_size
+        seen = {}
+        per_dev: List[List[int]] = [[] for _ in range(eng.k)]
+        for _, tg in self._pending:
+            for v in tg.tolist():
+                if v not in seen:
+                    seen[v] = True
+                    per_dev[int(eng.part.assignment[v])].append(v)
+        num_rounds = max(1, max(-(-len(x) // cap) for x in per_dev))
+        emb: Dict[int, np.ndarray] = {}
+        for r in range(num_rounds):
+            round_tgts = [np.asarray(x[r * cap:(r + 1) * cap], np.int64)
+                          for x in per_dev]
+            H = np.asarray(self.serve_round(self.build_round(round_tgts)))
+            for d, tg in enumerate(round_tgts):
+                for j, v in enumerate(tg.tolist()):
+                    emb[v] = H[d, j]
+        out = {rid: np.stack([emb[int(v)] for v in tg])
+               for rid, tg in self._pending}
+        self.stats.queries += len(self._pending)
+        self.stats.targets += len(emb)
+        self.stats.latencies_s.append(time.perf_counter() - t0)
+        self._pending = []
+        return out
+
+    def query(self, targets) -> np.ndarray:
+        """Embed these targets now (one-request submit + flush)."""
+        rid = self.submit(targets)
+        return self.flush()[rid]

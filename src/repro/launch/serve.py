@@ -85,7 +85,11 @@ def greedy_decode(cfg, params, prompt_tokens: jnp.ndarray, max_new: int,
         else:
             if temperature > 0 and key is not None:
                 key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, logits / temperature)[:, None]
+                # keep serve_step's int32 token contract: categorical returns
+                # the default int dtype (int64 under x64), and feeding that
+                # back would retrigger compilation of the jitted step
+                tok = (jax.random.categorical(sub, logits / temperature)
+                       [:, None].astype(jnp.int32))
             else:
                 tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             out.append(tok)

@@ -45,3 +45,61 @@ def test_decode_matches_forward(arch):
     np.testing.assert_allclose(np.asarray(logits, np.float32),
                                np.asarray(logits_full, np.float32),
                                atol=0.12, rtol=0.12)  # bf16 accumulation paths differ
+
+
+def test_sampled_decode_keeps_int32_token_contract():
+    """ISSUE 7 bugfix: greedy_decode's SAMPLED branch must cast the
+    categorical draw to int32 like the greedy branch does.  Under x64 (where
+    jax.random.categorical returns int64 by default) the pre-fix code fed
+    int64 tokens back into the jitted step — a silent dtype change that
+    retriggers compilation every decode step.  Runs in a subprocess so
+    JAX_ENABLE_X64 can't leak into other tests."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    from conftest import SRC
+
+    code = """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import greedy_decode
+    from repro.models import transformer as T
+
+    assert jax.config.read("jax_enable_x64"), "x64 mode not active"
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.ones((2, 4), jnp.int32)
+
+    # the sampled branch draws through jax.random.categorical — int64 here
+    # without the explicit cast
+    sampled = jax.random.categorical(jax.random.PRNGKey(1),
+                                     jnp.zeros((2, 8)))
+    assert sampled.dtype == jnp.int64, sampled.dtype  # x64 default
+
+    compiles = []
+    step = jax.jit(lambda p, c, t, i: T.serve_step(cfg, p, c, t, i))
+    toks = greedy_decode(cfg, params, prompt, max_new=3, temperature=0.7,
+                         key=jax.random.PRNGKey(2))
+    assert toks.dtype == jnp.int32, f"sampled decode emitted {toks.dtype}"
+
+    # feeding the decode's own output tokens back into a fresh jitted step
+    # must not retrace: one compile for the whole token stream
+    from repro.models.kvcache import init_cache
+    cache = init_cache(cfg, 2, 16)
+    logits, cache = step(params, cache, toks[:, :1], jnp.int32(0))
+    for i in range(1, toks.shape[1]):
+        logits, cache = step(params, cache, toks[:, i:i+1], jnp.int32(i))
+    assert step._cache_size() == 1, step._cache_size()
+    print("SAMPLED_DECODE_OK")
+    """
+    env = dict(os.environ)
+    env["JAX_ENABLE_X64"] = "1"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=420,
+                          env=env)
+    assert proc.returncode == 0, (proc.stdout, proc.stderr[-4000:])
+    assert "SAMPLED_DECODE_OK" in proc.stdout

@@ -237,3 +237,65 @@ def test_cache_is_store_overlay_consistent(g):
                               new)  # snapshot is stale
     store.refresh_overlay()
     assert np.array_equal(store.overlay_table()[0, : len(overlay[0])], new)
+
+
+# -- ISSUE 7 bugfix regressions: analysis propagation + proximity restarts --
+
+def test_analysis_propagation_mass_conserved(g):
+    """SALIENT++ propagation is a probability flow: each hop ships at most
+    the previous hop's mass (scale <= 1, the per-neighbor split sums to one).
+    The pre-fix update cancelled the /len(nb) split, handing EVERY neighbor
+    the full p[v]*scale[v] — hop mass then multiplied by the degree and this
+    assertion fails on any graph with a vertex of degree > 1."""
+    from repro.core.sampling.cache import analysis_propagation
+
+    total, per_hop = analysis_propagation(g, fanouts=(5, 5))
+    prev = 1.0  # p_0 is uniform over the train set: mass exactly 1
+    for h, p in enumerate(per_hop):
+        assert p.sum() <= prev + 1e-9, (h, p.sum(), prev)
+        prev = p.sum()
+    assert np.all(total >= 0)
+
+
+def test_analysis_cache_parallel_edges_hub_outranks_leaf():
+    """Parallel edges (duplicate neighbor entries) must ACCUMULATE: a hub a
+    trainer reaches over two parallel edges collects twice the leaf's mass.
+    The pre-fix fancy-index `+=` silently dropped the duplicate write, tying
+    hub and leaf — np.add.at keeps the strict inequality."""
+    from repro.core.graph import Graph
+    from repro.core.sampling.cache import analysis_propagation
+
+    # trainer 0 -> in-neighbors [hub, hub, leaf, filler]; sinks have no edges
+    indptr = np.asarray([0, 4, 4, 4, 4], np.int64)
+    indices = np.asarray([1, 1, 2, 3], np.int32)
+    g = Graph(indptr=indptr, indices=indices, num_vertices=4,
+              features=np.zeros((4, 2), np.float32),
+              labels=np.zeros(4, np.int32),
+              train_mask=np.asarray([True, False, False, False]))
+    total, _ = analysis_propagation(g, fanouts=(5,))
+    hub, leaf = total[1], total[2]
+    assert hub > leaf, (hub, leaf)
+    assert np.isclose(hub, 2 * leaf), (hub, leaf)
+
+
+def test_proximity_ordering_many_components_linear_time():
+    """A graph of thousands of isolated train vertices is all restarts: every
+    train vertex must be emitted exactly once, in linear-ish time.  The
+    pre-fix restart rebuilt `set(order)` per component — quadratic, blowing
+    this budget by an order of magnitude."""
+    import time
+
+    from repro.core.graph import Graph
+
+    V = 6000
+    g = Graph(indptr=np.zeros(V + 1, np.int64),
+              indices=np.zeros(0, np.int32), num_vertices=V,
+              features=np.zeros((V, 2), np.float32),
+              labels=np.zeros(V, np.int32),
+              train_mask=np.ones(V, bool))
+    train = np.arange(V)
+    t0 = time.perf_counter()
+    order = proximity_ordering(g, train, seed=0)
+    wall = time.perf_counter() - t0
+    assert sorted(order.tolist()) == list(range(V))
+    assert wall < 3.0, f"restart path took {wall:.2f}s for {V} components"

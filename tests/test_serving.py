@@ -1,0 +1,333 @@
+"""Serving tier (ISSUE 7): layer-wise full-graph inference + the query engine.
+
+Locks the two serving tiers to their oracles:
+
+* ``DistGNNEngine.infer_full_graph`` — the O(L) layer-wise sweep — matches
+  the single-device reference <= 1e-4 for BOTH partition families x all
+  three execution models x all four GNN models, on 4 AND 8 forced-host
+  devices; bitwise-deterministic across calls; CommStats.inference_bytes
+  equals the STANDALONE ``cost_models.inference_bytes_per_sweep`` exactly;
+  the sweep compiles once.
+* ``GNNQueryEngine`` — the K-target padded-query path — matches the
+  single-device reference on the SAME padded round, answers fully
+  cache-resident queries with ZERO new wire bytes, coalesces overlapping
+  requests (shared targets embedded once), reproduces bitwise across a
+  fresh rebuild, and compiles its serve step exactly once.
+* serving edge cases: degree-0 (isolated) vertices through the sweep under
+  both families and through the sampled query path; live FeatureStore
+  updates flowing into the next sweep without a retrace; the
+  ``publish_embeddings`` trainable->frozen serving handoff.
+"""
+from conftest import run_with_devices
+
+# ---------------------------------------------------------------------------
+# throughput tier: the layer-wise sweep matrix
+# ---------------------------------------------------------------------------
+
+_INFER_MATRIX_CODE = """
+import itertools
+import numpy as np
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+from repro.core.partition.cost_models import inference_bytes_per_sweep
+g = sbm_graph(96, num_blocks=4, p_in=0.1, p_out=0.01, seed=0)
+fails = []
+for family, execution, model in itertools.product(
+        ("edge_cut", "vertex_cut"), ("broadcast", "ring", "p2p"),
+        ("gcn", "sage", "gat", "gin")):
+    cfg = EngineConfig(execution=execution, model=model,
+                       partition_family=family, hidden=8, lr=0.3)
+    eng = DistGNNEngine(g, cfg=cfg)
+    params = eng.init_state()["params"]
+    H1 = np.asarray(eng.infer_full_graph(params=params))
+    H2 = np.asarray(eng.infer_full_graph(params=params))
+    ref = np.asarray(eng.infer_full_graph(params=params, reference=True))
+    emb = eng.global_embeddings(H1)
+    emb_ref = eng.global_embeddings(ref)
+    err = float(np.max(np.abs(emb - emb_ref)))
+    kw = (dict(k=eng.k, nv=eng.nv, rep_counts=eng.layout.rep_count)
+          if family == "vertex_cut"
+          else dict(k=eng.k, nb=eng.nb, g=g, part=eng.part))
+    expect = 2 * inference_bytes_per_sweep(execution, eng.dims, model=model,
+                                           family=family, **kw)
+    ok = (err <= 1e-4 and np.array_equal(H1, H2)
+          and eng.comm_stats.inference_bytes == expect
+          and eng._jit_infer._cache_size() == 1)
+    print(family, execution, model, "err", err,
+          "bytes", eng.comm_stats.inference_bytes, "expect", expect,
+          "compiles", eng._jit_infer._cache_size(), "OK" if ok else "FAIL")
+    if not ok:
+        fails.append((family, execution, model, err))
+assert not fails, fails
+print("INFER_MATRIX_OK")
+"""
+
+
+def test_infer_full_graph_matrix_4dev():
+    out = run_with_devices(_INFER_MATRIX_CODE, n_devices=4, timeout=900)
+    assert "INFER_MATRIX_OK" in out
+
+
+def test_infer_full_graph_matrix_8dev():
+    out = run_with_devices(_INFER_MATRIX_CODE, n_devices=8, timeout=900)
+    assert "INFER_MATRIX_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# edge case: degree-0 (isolated) vertices through the sweep — both families
+# ---------------------------------------------------------------------------
+
+def _isolated_graph_code():
+    return """
+import numpy as np
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import Graph
+rng = np.random.default_rng(0)
+V, RINGV, C = 48, 40, 4
+indptr = [0]
+indices = []
+for v in range(V):
+    if v < RINGV:  # directed ring: two in-neighbors each
+        indices += [(v - 1) % RINGV, (v + 1) % RINGV]
+    # v >= RINGV: isolated — no in-neighbors, never referenced
+    indptr.append(len(indices))
+g = Graph(indptr=np.asarray(indptr, np.int64),
+          indices=np.asarray(indices, np.int32), num_vertices=V,
+          features=rng.standard_normal((V, 6)).astype(np.float32),
+          labels=rng.integers(0, C, V).astype(np.int32),
+          train_mask=rng.random(V) < 0.5)
+g.test_mask = ~g.train_mask
+"""
+
+
+def test_infer_degree0_vertices_both_families():
+    """Isolated vertices get their self-fallback embedding, identical to the
+    reference, under both partition families (gat included: its masked
+    segment-softmax must not NaN on an empty neighborhood)."""
+    code = _isolated_graph_code() + """
+for family in ("edge_cut", "vertex_cut"):
+    for model in ("gcn", "gat"):
+        eng = DistGNNEngine(g, cfg=EngineConfig(
+            execution="p2p", model=model, partition_family=family,
+            hidden=8, lr=0.3))
+        params = eng.init_state()["params"]
+        emb = eng.global_embeddings(eng.infer_full_graph(params=params))
+        ref = eng.global_embeddings(
+            eng.infer_full_graph(params=params, reference=True))
+        assert np.isfinite(emb).all(), (family, model, "non-finite rows")
+        err = float(np.max(np.abs(emb - ref)))
+        assert err <= 1e-4, (family, model, err)
+        print(family, model, "deg0 err", err)
+print("DEG0_OK")
+"""
+    out = run_with_devices(code, n_devices=4, timeout=600)
+    assert "DEG0_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# latency tier: the query engine
+# ---------------------------------------------------------------------------
+
+_QUERY_SETUP = """
+import numpy as np
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+from repro.core.serving import GNNQueryEngine
+g = sbm_graph(192, num_blocks=4, p_in=0.08, p_out=0.01, seed=0)
+def build(cache_capacity=16, cache_policy="static_degree"):
+    eng = DistGNNEngine(g, cfg=EngineConfig(
+        execution="p2p", batching="node_wise", batch_size=8, fanouts=(3, 3),
+        hidden=8, lr=0.3, cache_policy=cache_policy,
+        cache_capacity=cache_capacity))
+    state, _, _ = eng.run_epoch_minibatch(3)
+    return eng, state["params"]
+"""
+
+
+def test_query_engine_matches_reference_and_compiles_once():
+    """serve_round == reference_round on the SAME padded batch (target
+    slots), and repeated queries reuse ONE compile."""
+    code = _QUERY_SETUP + """
+eng, params = build()
+qe = GNNQueryEngine(eng, params)
+rng = np.random.default_rng(1)
+for trial in range(3):
+    targets = rng.choice(g.num_vertices, 12, replace=False)
+    per_dev = [[] for _ in range(eng.k)]
+    for v in targets:
+        per_dev[int(eng.part.assignment[v])].append(int(v))
+    round_tgts = [np.asarray(x[:8], np.int64) for x in per_dev]
+    batch = qe.build_round(round_tgts)
+    H = np.asarray(qe.serve_round(batch))
+    R = np.asarray(qe.reference_round(batch))
+    for d, tg in enumerate(round_tgts):
+        if len(tg):
+            err = float(np.max(np.abs(H[d, :len(tg)] - R[d, :len(tg)])))
+            assert err <= 1e-4, (trial, d, err)
+assert qe.num_compiles() == 1, qe.num_compiles()
+# the coalescing front door returns a row per requested target
+emb = qe.query([int(targets[0])])
+assert emb.shape == (1, H.shape[-1])
+assert qe.num_compiles() == 1
+print("QUERY_REF_OK")
+"""
+    out = run_with_devices(code, n_devices=4, timeout=600)
+    assert "QUERY_REF_OK" in out
+
+
+def test_query_fully_cache_resident_zero_exchange_bytes():
+    """With every vertex's features resident (capacity >= V), a query's
+    remote frontier rows are all cache hits: zero NEW pull bytes cross the
+    wire, and the answers still match the reference."""
+    code = _QUERY_SETUP + """
+eng, params = build(cache_capacity=g.num_vertices)
+qe = GNNQueryEngine(eng, params)
+before = eng.comm_stats.pull_bytes
+hits_before = eng.comm_stats.cache_hit_bytes
+rng = np.random.default_rng(2)
+targets = rng.choice(g.num_vertices, 10, replace=False)
+per_dev = [[] for _ in range(eng.k)]
+for v in targets:
+    per_dev[int(eng.part.assignment[v])].append(int(v))
+round_tgts = [np.asarray(x[:8], np.int64) for x in per_dev]
+batch = qe.build_round(round_tgts)
+H = np.asarray(qe.serve_round(batch))
+R = np.asarray(qe.reference_round(batch))
+for d, tg in enumerate(round_tgts):
+    if len(tg):
+        assert np.max(np.abs(H[d, :len(tg)] - R[d, :len(tg)])) <= 1e-4
+assert eng.comm_stats.pull_bytes == before, (
+    "cache-resident query pulled bytes", eng.comm_stats.pull_bytes - before)
+assert eng.comm_stats.cache_hit_bytes > hits_before, "no hits recorded"
+print("CACHE_RESIDENT_OK")
+"""
+    out = run_with_devices(code, n_devices=4, timeout=600)
+    assert "CACHE_RESIDENT_OK" in out
+
+
+def test_query_coalescing_and_determinism():
+    """Overlapping submits coalesce: the union is embedded once, every
+    request gets its rows back in its own order, round packing respects the
+    per-device cap, and a FRESH rebuild reproduces the stream bitwise."""
+    code = _QUERY_SETUP + """
+def stream(qe):
+    r1 = qe.submit([5, 9, 17, 9])       # duplicate inside a request
+    r2 = qe.submit([17, 30, 41])        # overlap across requests
+    r3 = qe.submit(np.arange(40))       # forces multiple rounds per device
+    out = qe.flush()
+    return r1, r2, r3, out
+
+eng, params = build()
+qe = GNNQueryEngine(eng, params)
+r1, r2, r3, out = stream(qe)
+assert out[r1].shape[0] == 4 and out[r2].shape[0] == 3
+assert np.array_equal(out[r1][1], out[r1][3]), "duplicate target differs"
+assert np.array_equal(out[r1][2], out[r2][0]), "shared target re-embedded"
+assert qe.stats.queries == 3 and qe.stats.targets == len(set(
+    [5, 9, 17, 30, 41] + list(range(40))))
+# packing: ceil(max per-device owned share / batch_size) rounds
+per_dev = np.bincount(eng.part.assignment[
+    np.asarray(sorted(set([5, 9, 17, 30, 41] + list(range(40)))))],
+    minlength=eng.k)
+assert qe.stats.rounds == int(np.ceil(per_dev.max() / 8)), (
+    qe.stats.rounds, per_dev)
+assert qe.num_compiles() == 1
+
+eng2, params2 = build()
+qe2 = GNNQueryEngine(eng2, params2)
+_, _, _, out2 = stream(qe2)
+for rid in out:
+    assert np.array_equal(out[rid], out2[rid]), "rebuild not deterministic"
+print("COALESCE_OK")
+"""
+    out = run_with_devices(code, n_devices=4, timeout=600)
+    assert "COALESCE_OK" in out
+
+
+def test_query_engine_rejects_wrong_configs():
+    """Constructor contract: node-wise batching only, frozen features only."""
+    code = """
+import numpy as np
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+from repro.core.serving import GNNQueryEngine
+g = sbm_graph(96, num_blocks=4, p_in=0.1, p_out=0.01, seed=0)
+eng = DistGNNEngine(g, cfg=EngineConfig(execution="p2p", hidden=8))
+try:
+    GNNQueryEngine(eng, eng.init_state()["params"])
+    raise SystemExit("full_graph engine accepted")
+except ValueError as e:
+    assert "node_wise" in str(e)
+eng = DistGNNEngine(g, cfg=EngineConfig(
+    execution="p2p", batching="node_wise", batch_size=8, fanouts=(3, 3),
+    hidden=8, trainable_features=True))
+try:
+    GNNQueryEngine(eng, eng.init_minibatch_state()["params"])
+    raise SystemExit("trainable engine accepted")
+except ValueError as e:
+    assert "publish_embeddings" in str(e)
+print("REJECT_OK")
+"""
+    out = run_with_devices(code, n_devices=4, timeout=600)
+    assert "REJECT_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# store liveness + the trainable -> frozen serving handoff
+# ---------------------------------------------------------------------------
+
+def test_infer_reads_live_store_without_retrace():
+    """`store.update_rows` flows into the NEXT sweep (layer-0 is read through
+    the FeatureStore, not baked into the compiled step) and changing the rows
+    does not retrace."""
+    code = """
+import numpy as np
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+g = sbm_graph(96, num_blocks=4, p_in=0.1, p_out=0.01, seed=0)
+eng = DistGNNEngine(g, cfg=EngineConfig(execution="broadcast", hidden=8,
+                                        lr=0.3))
+params = eng.init_state()["params"]
+H0 = np.asarray(eng.infer_full_graph(params=params))
+rows = np.arange(10)
+eng.store.update_rows(rows, np.asarray(eng.store.flat()[rows]) + 1.0)
+H1 = np.asarray(eng.infer_full_graph(params=params))
+ref1 = np.asarray(eng.infer_full_graph(params=params, reference=True))
+assert not np.array_equal(H0, H1), "sweep ignored the store update"
+assert float(np.max(np.abs(H1 - ref1))) <= 1e-4
+assert eng._jit_infer._cache_size() == 1, "store update retraced the sweep"
+print("LIVE_STORE_OK")
+"""
+    out = run_with_devices(code, n_devices=4, timeout=600)
+    assert "LIVE_STORE_OK" in out
+
+
+def test_publish_embeddings_handoff():
+    """Trainable engine -> publish_embeddings -> a frozen clone on the same
+    partition serves the TRAINED table: its sweep equals the trainable
+    engine's own (state-fed) sweep."""
+    code = """
+import numpy as np
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+g = sbm_graph(96, num_blocks=4, p_in=0.1, p_out=0.01, seed=0)
+eng = DistGNNEngine(g, cfg=EngineConfig(execution="p2p", hidden=8, lr=0.3,
+                                        trainable_features=True))
+step = eng.make_step()
+state = eng.init_state()
+for _ in range(2):
+    state, _, _ = step(state)
+eng.publish_embeddings(state)
+assert np.allclose(np.asarray(eng.store.flat()),
+                   np.asarray(state["embed"]), atol=0), "store != embed"
+H_train = np.asarray(eng.infer_full_graph(state))
+clone = DistGNNEngine(g, cfg=EngineConfig(execution="p2p", hidden=8, lr=0.3),
+                      partition=eng.part)
+clone.store.update_rows(np.arange(clone.store.num_rows),
+                        np.asarray(eng.store.flat()))
+H_serve = np.asarray(clone.infer_full_graph(params=state["params"]))
+assert float(np.max(np.abs(H_train - H_serve))) <= 1e-5, "handoff diverged"
+print("PUBLISH_OK")
+"""
+    out = run_with_devices(code, n_devices=4, timeout=600)
+    assert "PUBLISH_OK" in out
