@@ -199,6 +199,44 @@ print(f"smoke OK serving: sweep oracle err {err:.2e}, "
       f"{eng.comm_stats.inference_bytes} inference bytes == cost model, "
       f"{qe.stats.rounds} query rounds, 1 serve compile")
 EOF
+    # 4-device TELEMETRY smoke (ISSUE 8): traced train + serve — the Chrome
+    # trace file parses, spans cover every configured step, and the per-step
+    # CommStats fields equal the mirrored MetricRegistry counter totals
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
+import dataclasses, json, os, tempfile
+import jax
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import sbm_graph
+from repro.core.serving import GNNQueryEngine
+
+g = sbm_graph(96, num_blocks=4, p_in=0.08, p_out=0.01, seed=0)
+eng = DistGNNEngine(g, cfg=EngineConfig(
+    execution="p2p", batching="node_wise", batch_size=8, fanouts=(3, 3),
+    hidden=16, lr=0.3, cache_policy="static_degree", cache_capacity=12))
+tel = eng.enable_telemetry()
+NB = 4
+state, _, _ = eng.run_epoch_minibatch(NB, schedule="pipelined")
+qe = GNNQueryEngine(eng, state["params"])
+qe.query([1, 2, 3])
+path = os.path.join(tempfile.mkdtemp(), "trace.json")
+tel.write_chrome_trace(path)
+with open(path) as f:
+    trace = json.load(f)  # the artifact must parse as real JSON
+xev = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+assert xev and all(set(("name", "ph", "ts", "dur", "pid", "tid")) <= set(e)
+                   for e in xev)
+for stage in ("sample", "extract", "train"):
+    steps = {e["args"].get("step") for e in xev if e["name"] == stage}
+    assert set(range(NB)) <= steps, (stage, steps)
+for f in dataclasses.fields(eng.comm_stats):
+    mirrored = tel.metrics.counter_total("comm." + f.name)
+    assert mirrored == getattr(eng.comm_stats, f.name), (f.name, mirrored)
+exch = sum(e["args"]["bytes"] for e in xev if e["name"] == "exchange")
+assert exch == eng.comm_stats.total(), (exch, eng.comm_stats.total())
+print(f"smoke OK telemetry: {len(xev)} trace events, all {NB} steps "
+      f"spanned, comm counters == CommStats, exchange bytes {exch} == "
+      f"total()")
+EOF
 else
     python -m pytest -x -q
 fi

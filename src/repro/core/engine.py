@@ -95,6 +95,7 @@ enforced by tests/test_engine_minibatch.py.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
@@ -149,6 +150,7 @@ from repro.core.sampling.samplers import (
     pad_minibatch,
     subgraph_sample,
 )
+from repro.core.telemetry import Telemetry
 from repro.kernels.ell_spmm import ell_attend, ell_spmm
 from repro.optim.sparse_optim import row_adamw_update, sparse_adamw_ids
 from repro.kernels.ref import sddmm_ref
@@ -316,6 +318,8 @@ class DistGNNEngine:
         self._infer_step = None
         self._ref_infer = None
         self.comm_stats = CommStats()
+        # off by default: no-op spans/metrics until enable_telemetry()
+        self.telemetry = Telemetry(enabled=False)
         if cfg.batching != "full_graph":
             self._build_minibatch_plan()
 
@@ -1244,8 +1248,11 @@ class DistGNNEngine:
 
                 self._ref_infer = ref_infer
             return self._ref_infer(params, X)
-        out = self.make_infer_step()(params, X)
-        self.comm_stats.inference_bytes += self.inference_bytes_per_sweep()
+        with self.telemetry.span("infer_sweep"):
+            out = self.make_infer_step()(params, X)
+            with self._account_exchange("inference", None, None):
+                self.comm_stats.inference_bytes += \
+                    self.inference_bytes_per_sweep()
         return out
 
     def inference_bytes_per_sweep(self) -> int:
@@ -1358,32 +1365,108 @@ class DistGNNEngine:
             # at most one per frontier slot across all k devices
             self.tcap = min(self.nb, k * self.caps[0])
 
+    # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+
+    def enable_telemetry(self, telemetry: Optional[Telemetry] = None
+                         ) -> Telemetry:
+        """Attach an ENABLED `core.telemetry.Telemetry` (or the one passed
+        in) and return it.  Spans wrap the host-side stage boundaries only —
+        nothing inside the jitted step changes — and every CommStats
+        mutation from here on is mirrored into labeled ``comm.*`` counters
+        plus instant ``exchange`` spans carrying the wire-byte delta (their
+        sum equals ``CommStats.total()`` exactly for a fresh run).  Also
+        seeds the imbalance report with the static per-device layout gauges
+        (owned edges/vertices, replica rows) and threads the instance into
+        the FeatureStore's overlay counters."""
+        tel = telemetry if telemetry is not None else Telemetry()
+        self.telemetry = tel
+        self.store.telemetry = tel
+        if not tel.enabled:
+            return tel
+        k = self.k
+        if self.cfg.partition_family == "vertex_cut":
+            lay = self.layout
+            V = self.g.num_vertices
+            owned_edges = np.asarray(lay.mask_owned).reshape(k, -1).sum(1)
+            replica_rows = (np.asarray(lay.vert_ids) < V).sum(1)
+            masters = np.asarray(lay.master_mask).reshape(k, -1).sum(1)
+            for d in range(k):
+                tel.gauge("layout.owned_edges", device=d).set(
+                    float(owned_edges[d]))
+                tel.gauge("layout.replica_rows", device=d).set(
+                    int(replica_rows[d]))
+                tel.gauge("layout.master_rows", device=d).set(
+                    float(masters[d]))
+        else:
+            owned_v = np.bincount(self.part.assignment, minlength=k)
+            owned_edges = np.asarray(self.mask).reshape(
+                k, self.nb, -1).sum((1, 2))
+            for d in range(k):
+                tel.gauge("layout.owned_vertices", device=d).set(
+                    int(owned_v[d]))
+                tel.gauge("layout.owned_edges", device=d).set(
+                    float(owned_edges[d]))
+        return tel
+
+    @contextlib.contextmanager
+    def _account_exchange(self, stage: str, step, device):
+        """Mirror the CommStats deltas accrued inside this block into
+        labeled ``comm.<field>`` counters and one instant ``exchange`` span
+        whose ``bytes`` label is the WIRE delta (cache hits excluded) — the
+        invariant the trace contract asserts: summed exchange-span bytes ==
+        ``CommStats.total()``."""
+        tel = self.telemetry
+        if not tel.enabled:
+            yield
+            return
+        s = self.comm_stats
+        before = {f.name: getattr(s, f.name)
+                  for f in dataclasses.fields(CommStats)}
+        wire0 = s.total()
+        yield
+        labels = {} if device is None else {"device": device}
+        for name, v0 in before.items():
+            dv = getattr(s, name) - v0
+            if dv:
+                tel.counter("comm." + name, **labels).add(dv)
+        mark = dict(stage=stage, bytes=s.total() - wire0, **labels)
+        if step is not None:
+            mark["step"] = step
+        tel.instant("exchange", **mark)
+
     def _sample_host(self, step_idx: int):
         """Host sampling stage: per device, draw targets from its OWNED
         partition block and expand them with the configured §5 sampler.
         Deterministic in (seed, step, device) so the oracle — and any rerun —
         regenerates bitwise-identical batches."""
         c = self.cfg
+        tel = self.telemetry
         mbs = []
         for d in range(self.k):
-            rng = np.random.default_rng([c.seed, 7919, step_idx, d])
-            targets = partition_targets(self.g, self.part, d, c.batch_size, rng)
-            if c.batching == "node_wise":
-                mb = node_wise_sample(self.g, targets, c.fanouts, rng)
-            elif c.batching == "layer_wise":
-                mb = layer_wise_sample(self.g, targets, c.layer_sizes, rng)
-            else:  # subgraph
-                mb = subgraph_sample(self.g, targets, c.walk_length, rng,
-                                     num_layers=c.num_layers)
-            mbs.append(mb)
+            with tel.span("sample_device", step=step_idx, device=d):
+                rng = np.random.default_rng([c.seed, 7919, step_idx, d])
+                targets = partition_targets(self.g, self.part, d,
+                                            c.batch_size, rng)
+                if c.batching == "node_wise":
+                    mb = node_wise_sample(self.g, targets, c.fanouts, rng)
+                elif c.batching == "layer_wise":
+                    mb = layer_wise_sample(self.g, targets, c.layer_sizes, rng)
+                else:  # subgraph
+                    mb = subgraph_sample(self.g, targets, c.walk_length, rng,
+                                         num_layers=c.num_layers)
+                mbs.append(mb)
         return mbs
 
-    def _make_batch(self, mbs) -> Dict:
+    def _make_batch(self, mbs, step=None) -> Dict:
         """Extract stage: pad each device's MiniBatch to the static caps,
         relabel frontiers into the engine's new-id space, build the
         execution-model fetch plan (cache hits short-circuit the exchange),
-        and account feature bytes against self.comm_stats."""
+        and account feature bytes against self.comm_stats (mirrored into
+        telemetry exchange spans/counters when tracing is enabled)."""
         c, k, nb, Vp = self.cfg, self.k, self.nb, self.Vp
+        tel = self.telemetry
         caps, fcap, Ccap = self.caps, self.fcap, self.Ccap
         L = c.num_layers
         D = self.g.features.shape[1]
@@ -1424,17 +1507,21 @@ class DistGNNEngine:
             w[d] = tw
             old = padded["frontier"]
             slot = self._cache_slot[d]
+            occ = remote = cache_hits = 0
             # p2p: halo slot of each needed local src row, per source device
             need = [dict() for _ in range(k)]
             for j in range(caps[0]):
                 o = int(old[j])
                 if o < 0:
                     continue
+                occ += 1
                 fn = int(self.new_of_old[o])
                 frontier[d, j] = fn
                 s = fn // nb
+                remote += s != d
                 cslot = slot.get(o, -1)
                 if s != d and cslot >= 0:
+                    cache_hits += 1
                     cache_ids[d, j] = cslot
                     continue  # served by the resident cache
                 if c.execution == "broadcast":
@@ -1457,15 +1544,20 @@ class DistGNNEngine:
                         # dict preserves insertion order == pos order
                         need_lists[s][d] = np.fromiter(
                             need[s], np.int64, len(need[s]))
-            feature_fetch_bytes(self.part, d, mb.layer_vertices[0], D,
-                                cached_ids=self._cache_set[d],
-                                stats=self.comm_stats)
-            if c.trainable_features:
-                embedding_update_bytes(
-                    self.part, d, mb.layer_vertices[0], D,
-                    cached_ids=self._cache_set[d],
-                    overlay_rows=len(self.cache_old_ids[d]),
-                    stats=self.comm_stats)
+            with self._account_exchange("extract", step, d):
+                feature_fetch_bytes(self.part, d, mb.layer_vertices[0], D,
+                                    cached_ids=self._cache_set[d],
+                                    stats=self.comm_stats)
+                if c.trainable_features:
+                    embedding_update_bytes(
+                        self.part, d, mb.layer_vertices[0], D,
+                        cached_ids=self._cache_set[d],
+                        overlay_rows=len(self.cache_old_ids[d]),
+                        stats=self.comm_stats)
+            if tel.enabled:
+                tel.gauge("frontier_occupancy", device=d).set(occ)
+                self.store.count_overlay(d, hits=cache_hits,
+                                         misses=remote - cache_hits)
         batch = dict(
             frontier=jnp.asarray(frontier.astype(np.int32)),
             y=jnp.asarray(y), w=jnp.asarray(w),
@@ -1493,7 +1585,11 @@ class DistGNNEngine:
 
     def sample_minibatch(self, step_idx: int) -> Dict:
         """sample + extract: one static-shape device batch for `step_idx`."""
-        return self._make_batch(self._sample_host(step_idx))
+        tel = self.telemetry
+        with tel.span("sample", step=step_idx):
+            mbs = self._sample_host(step_idx)
+        with tel.span("extract", step=step_idx):
+            return self._make_batch(mbs, step=step_idx)
 
     def _check_minibatch_runnable(self):
         """Validate the config ONCE at epoch entry: the constructor already
@@ -1834,10 +1930,11 @@ class DistGNNEngine:
         step = (self.make_reference_minibatch_step() if reference
                 else self.make_minibatch_step())
         if state is None:
-            self.comm_stats = CommStats()
+            self.comm_stats.reset()
         holder = dict(state=state if state is not None
                       else self.init_minibatch_state())
         pipelined = schedule == "pipelined"
+        tel = self.telemetry
         losses: List = []
 
         def train_fn(mbs, batch):
@@ -1846,20 +1943,26 @@ class DistGNNEngine:
             # block the trainer on the device step and kill the overlap
             losses.append(metrics["loss"] if pipelined
                           else float(metrics["loss"]))
+            tel.log_step(step=len(losses) - 1, schedule=schedule,
+                         comm_total_bytes=self.comm_stats.total())
 
         batch_ids = list(range(num_batches))
-        sample_fn = lambda i: self._sample_host(int(i))  # noqa: E731
+        # items carry their step index so the extract stage can label its
+        # exchange spans (train_fn never looks inside mbs)
+        sample_fn = lambda i: (int(i), self._sample_host(int(i)))  # noqa: E731
+        extract_fn = lambda si: self._make_batch(si[1], step=si[0])  # noqa: E731
         if pipelined:
             depth = (self.cfg.prefetch_depth if prefetch_depth is None
                      else prefetch_depth)
             times = run_pipelined(
-                batch_ids, sample_fn, self._make_batch, train_fn,
+                batch_ids, sample_fn, extract_fn, train_fn,
                 prefetch_depth=depth,
-                finalize_fn=lambda: jax.block_until_ready(holder["state"]))
+                finalize_fn=lambda: jax.block_until_ready(holder["state"]),
+                telemetry=tel)
             losses = [float(l) for l in losses]
         else:
             times = SCHEDULES[schedule](
-                batch_ids, sample_fn, self._make_batch, train_fn)
+                batch_ids, sample_fn, extract_fn, train_fn, telemetry=tel)
         return holder["state"], losses, times
 
     def minibatch_accuracy(self, logits, batch) -> float:
@@ -1878,36 +1981,44 @@ class DistGNNEngine:
         [Vp, C] for full-graph batching, [k, cap_L, C] target logits for the
         mini-batch modes.  Mini-batch runs reset and accumulate
         self.comm_stats (feature fetch bytes, cache hits)."""
+        tel = self.telemetry
         if self.cfg.batching != "full_graph":
             self._check_minibatch_runnable()
             step = (self.make_reference_minibatch_step() if reference
                     else self.make_minibatch_step())
             state = self.init_minibatch_state()
-            self.comm_stats = CommStats()
+            self.comm_stats.reset()
             losses: List[float] = []
             logits = None
             for i in range(epochs):
                 batch = self.sample_minibatch(i)
-                state, metrics, logits = step(state, batch)
-                losses.append(float(metrics["loss"]))
+                with tel.span("train", step=i):
+                    state, metrics, logits = step(state, batch)
+                    losses.append(float(metrics["loss"]))
+                tel.log_step(step=i, loss=losses[-1],
+                             comm_total_bytes=self.comm_stats.total())
             return losses, logits
         step = self.make_reference_step() if reference else self.make_step()
         state = self.init_state()
         if not reference and (self.cfg.partition_family == "vertex_cut"
                               or self.cfg.trainable_features):
-            self.comm_stats = CommStats()
+            self.comm_stats.reset()
         losses = []
         logits = None
-        for _ in range(epochs):
-            state, metrics, logits = step(state)
-            losses.append(float(metrics["loss"]))
+        for i in range(epochs):
+            with tel.span("train", step=i):
+                state, metrics, logits = step(state)
+                losses.append(float(metrics["loss"]))
             if not reference:
-                if self.cfg.partition_family == "vertex_cut":
-                    self.comm_stats.replica_sync_bytes += \
-                        self._vc_bytes_per_step
-                if self.cfg.trainable_features:
-                    self.comm_stats.embed_grad_bytes += \
-                        self._emb_bytes_per_step
+                with self._account_exchange("full_graph", i, None):
+                    if self.cfg.partition_family == "vertex_cut":
+                        self.comm_stats.replica_sync_bytes += \
+                            self._vc_bytes_per_step
+                    if self.cfg.trainable_features:
+                        self.comm_stats.embed_grad_bytes += \
+                            self._emb_bytes_per_step
+                tel.log_step(step=i, loss=losses[-1],
+                             comm_total_bytes=self.comm_stats.total())
         return losses, logits
 
     def accuracy(self, logits, split: str = "test") -> float:

@@ -20,6 +20,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.telemetry import NULL_TELEMETRY
+
 
 @dataclasses.dataclass
 class StageTimes:
@@ -32,56 +34,66 @@ class StageTimes:
         return self.sample + self.extract + self.train
 
 
-def run_conventional(batch_ids: List[np.ndarray], sample_fn, extract_fn, train_fn
-                     ) -> StageTimes:
+def run_conventional(batch_ids: List[np.ndarray], sample_fn, extract_fn,
+                     train_fn, *, telemetry=None) -> StageTimes:
     """Sequential sample -> extract -> train per batch (DistDGL default)."""
+    tel = telemetry if telemetry is not None else NULL_TELEMETRY
     t = StageTimes()
     t0 = time.perf_counter()
-    for ids in batch_ids:
-        s0 = time.perf_counter()
-        mb = sample_fn(ids)
-        t.sample += time.perf_counter() - s0
-        s0 = time.perf_counter()
-        feats = extract_fn(mb)
-        t.extract += time.perf_counter() - s0
-        s0 = time.perf_counter()
-        train_fn(mb, feats)
-        t.train += time.perf_counter() - s0
+    for i, ids in enumerate(batch_ids):
+        with tel.span("sample", step=i):
+            s0 = time.perf_counter()
+            mb = sample_fn(ids)
+            t.sample += time.perf_counter() - s0
+        with tel.span("extract", step=i):
+            s0 = time.perf_counter()
+            feats = extract_fn(mb)
+            t.extract += time.perf_counter() - s0
+        with tel.span("train", step=i):
+            s0 = time.perf_counter()
+            train_fn(mb, feats)
+            t.train += time.perf_counter() - s0
     t.wall = time.perf_counter() - t0
     return t
 
 
-def run_factored(batch_ids: List[np.ndarray], sample_fn, extract_fn, train_fn
-                 ) -> StageTimes:
+def run_factored(batch_ids: List[np.ndarray], sample_fn, extract_fn, train_fn,
+                 *, telemetry=None) -> StageTimes:
     """GNNLab factored model: dedicated sampler lane + trainer lane; the
     sampler works one batch ahead (double buffering). Wall-clock =
     max(sampler lane, trainer lane) + pipeline fill."""
+    tel = telemetry if telemetry is not None else NULL_TELEMETRY
     t = StageTimes()
     t0 = time.perf_counter()
     prepared = []
-    for ids in batch_ids:  # sampler lane
-        s0 = time.perf_counter()
-        mb = sample_fn(ids)
-        t.sample += time.perf_counter() - s0
+    for i, ids in enumerate(batch_ids):  # sampler lane
+        with tel.span("sample", step=i):
+            s0 = time.perf_counter()
+            mb = sample_fn(ids)
+            t.sample += time.perf_counter() - s0
         prepared.append(mb)
-    for mb in prepared:  # trainer lane (extract+train with cache)
-        s0 = time.perf_counter()
-        feats = extract_fn(mb)
-        t.extract += time.perf_counter() - s0
-        s0 = time.perf_counter()
-        train_fn(mb, feats)
-        t.train += time.perf_counter() - s0
+    for i, mb in enumerate(prepared):  # trainer lane (extract+train w/ cache)
+        with tel.span("extract", step=i):
+            s0 = time.perf_counter()
+            feats = extract_fn(mb)
+            t.extract += time.perf_counter() - s0
+        with tel.span("train", step=i):
+            s0 = time.perf_counter()
+            train_fn(mb, feats)
+            t.train += time.perf_counter() - s0
     # modeled overlap: the two lanes run concurrently on separate resources
     t.wall = max(t.sample, t.extract + t.train) + min(t.sample, t.extract + t.train) / max(len(batch_ids), 1)
     return t
 
 
 def run_operator_parallel(batch_ids: List[np.ndarray], sample_fn, extract_fn,
-                          train_fn, lanes: int = 2) -> StageTimes:
+                          train_fn, lanes: int = 2, *, telemetry=None
+                          ) -> StageTimes:
     """ByteGNN/DSP operator-parallel: stages of different batches overlap as a
     DAG; with L lanes the wall-clock approaches busy/L bounded by the longest
     stage chain."""
-    t = run_conventional(batch_ids, sample_fn, extract_fn, train_fn)
+    t = run_conventional(batch_ids, sample_fn, extract_fn, train_fn,
+                         telemetry=telemetry)
     per_stage = [t.sample, t.extract, t.train]
     t.wall = max(max(per_stage), t.busy() / lanes)
     return t
@@ -89,7 +101,8 @@ def run_operator_parallel(batch_ids: List[np.ndarray], sample_fn, extract_fn,
 
 def run_pipelined(batch_ids: List[np.ndarray], sample_fn, extract_fn, train_fn,
                   *, prefetch_depth: int = 2,
-                  finalize_fn: Optional[Callable] = None) -> StageTimes:
+                  finalize_fn: Optional[Callable] = None,
+                  telemetry=None) -> StageTimes:
     """Measured-lanes pipelined executor: the factored model made REAL.
 
     A `PrefetchWorker` thread runs sample_fn + extract_fn for batch i+1
@@ -103,31 +116,49 @@ def run_pipelined(batch_ids: List[np.ndarray], sample_fn, extract_fn, train_fn,
     Stage seconds are accumulated per lane (sample/extract on the worker
     thread, train on the trainer thread — disjoint writers, read after
     join), so ``busy() > wall`` is the direct measurement of overlap.
+
+    With `telemetry` enabled the same lanes are recorded as spans — worker
+    and trainer threads get distinct trace rows (thread-id tagging), so the
+    overlap shows up as genuinely overlapping intervals; the worker's queue
+    depth/stalls ride `PrefetchWorker`'s own gauges.
     """
     from repro.core.sampling.prefetch import PrefetchWorker
 
+    tel = telemetry if telemetry is not None else NULL_TELEMETRY
     t = StageTimes()
+    prod_i = [0]  # producer-thread step counter (worker runs items in order)
 
     def produce(ids):
-        s0 = time.perf_counter()
-        mb = sample_fn(ids)
-        t.sample += time.perf_counter() - s0
-        s0 = time.perf_counter()
-        feats = extract_fn(mb)
-        t.extract += time.perf_counter() - s0
+        i = prod_i[0]
+        prod_i[0] += 1
+        with tel.span("sample", step=i):
+            s0 = time.perf_counter()
+            mb = sample_fn(ids)
+            t.sample += time.perf_counter() - s0
+        with tel.span("extract", step=i):
+            s0 = time.perf_counter()
+            feats = extract_fn(mb)
+            t.extract += time.perf_counter() - s0
         return mb, feats
 
     t0 = time.perf_counter()
-    worker = PrefetchWorker(batch_ids, produce, depth=prefetch_depth)
+    worker = PrefetchWorker(batch_ids, produce, depth=prefetch_depth,
+                            telemetry=tel)
     try:
+        train_i = 0
         for mb, feats in worker:
-            s0 = time.perf_counter()
-            train_fn(mb, feats)
-            t.train += time.perf_counter() - s0
+            with tel.span("train", step=train_i):
+                s0 = time.perf_counter()
+                train_fn(mb, feats)
+                t.train += time.perf_counter() - s0
+            train_i += 1
         if finalize_fn is not None:
-            s0 = time.perf_counter()
-            finalize_fn()
-            t.train += time.perf_counter() - s0
+            # the end-of-epoch device sync: the one place the trace opts
+            # into a fence (finalize_fn IS the block_until_ready)
+            with tel.span("finalize"):
+                s0 = time.perf_counter()
+                finalize_fn()
+                t.train += time.perf_counter() - s0
     finally:
         worker.close()
     t.wall = time.perf_counter() - t0
@@ -149,8 +180,10 @@ def pipelined_wall_model(t: StageTimes, num_batches: int) -> float:
 
 # Schedule registry so drivers (e.g. DistGNNEngine.run_epoch_minibatch) can
 # select a §6.1 execution model by name; every entry shares the
-# (batch_ids, sample_fn, extract_fn, train_fn) -> StageTimes signature
-# (``pipelined`` adds keyword-only prefetch_depth / finalize_fn knobs).
+# (batch_ids, sample_fn, extract_fn, train_fn) -> StageTimes signature plus
+# a keyword-only ``telemetry`` (``pipelined`` adds prefetch_depth /
+# finalize_fn knobs).  StageTimes totals double as per-step spans when a
+# Telemetry instance is passed.
 SCHEDULES: Dict[str, Callable] = {
     "conventional": run_conventional,
     "factored": run_factored,

@@ -32,6 +32,15 @@ class CommStats:
     inference_bytes: int = 0  # layer-wise full-graph inference sweeps: one
     #   forward-only exchange per layer (cost_models.inference_bytes_per_sweep)
 
+    def reset(self) -> "CommStats":
+        """Zero every field IN PLACE.  Engines reset rather than re-assign a
+        fresh instance, so a reference a caller holds (a bench accumulating
+        per-epoch deltas, a telemetry mirror) keeps observing traffic instead
+        of silently detaching."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+        return self
+
     def total(self) -> int:
         """Bytes that actually cross the wire (cache hits excluded)."""
         return (self.pull_bytes + self.push_bytes + self.replica_sync_bytes

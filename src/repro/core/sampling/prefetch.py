@@ -37,9 +37,14 @@ class PrefetchWorker:
     The producer thread starts immediately and works ahead of the consumer,
     bounded by ``depth`` buffered results."""
 
-    def __init__(self, items: Sequence, produce: Callable, depth: int = 2):
+    def __init__(self, items: Sequence, produce: Callable, depth: int = 2,
+                 telemetry=None):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        # telemetry (core.telemetry.Telemetry, optional): queue-depth gauge
+        # + stall counters, recorded from both lanes (thread-safe registry)
+        self._tel = (telemetry if telemetry is not None
+                     and getattr(telemetry, "enabled", False) else None)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._items = list(items)
@@ -66,8 +71,15 @@ class PrefetchWorker:
         while not self._stop.is_set():
             try:
                 self._q.put(out, timeout=0.05)
+                if self._tel is not None:
+                    self._tel.gauge("prefetch.queue_depth").set(
+                        self._q.qsize())
                 return True
             except queue.Full:
+                # producer ahead of the trainer by the full depth: the
+                # backpressure stall the imbalance report wants to see
+                if self._tel is not None:
+                    self._tel.counter("prefetch.producer_stall").add(1)
                 continue
         return False
 
@@ -82,8 +94,14 @@ class PrefetchWorker:
         while True:
             try:
                 out = self._q.get(timeout=0.1)
+                if self._tel is not None:
+                    self._tel.gauge("prefetch.queue_depth").set(
+                        self._q.qsize())
                 break
             except queue.Empty:
+                # trainer starved: the producer lane is the bottleneck
+                if self._tel is not None:
+                    self._tel.counter("prefetch.consumer_stall").add(1)
                 if not self._thread.is_alive():
                     # the thread may have enqueued its final item/sentinel
                     # between our timeout and the liveness check — drain

@@ -84,6 +84,9 @@ class GNNQueryEngine:
         self.engine = engine
         self.params = params
         self.stats = ServingStats()
+        # ride the engine's telemetry: serve spans land in the same trace
+        # as training, on their own lane when called from another thread
+        self.telemetry = engine.telemetry
         self._pending: List[tuple] = []  # (rid, target ids)
         self._next_rid = 0
         self._qctr = 0  # monotone round counter keying the sampling streams
@@ -164,12 +167,15 @@ class GNNQueryEngine:
                 raise ValueError(f"device {d} given targets it does not own")
             rng = np.random.default_rng([c.seed, 70657, qi, d])
             mbs.append(node_wise_sample(eng.g, tg, c.fanouts, rng))
-        return eng._make_batch(mbs)
+        with self.telemetry.span("serve_build", round=qi):
+            return eng._make_batch(mbs, step=qi)
 
     def serve_round(self, batch: Dict):
         """Run one pre-built round through the jitted serve step."""
-        out = self.make_serve_step()(self.params, batch)
+        with self.telemetry.span("serve_compute"):
+            out = self.make_serve_step()(self.params, batch)
         self.stats.rounds += 1
+        self.telemetry.counter("serve.rounds").add(1)
         return out
 
     def reference_round(self, batch: Dict):
@@ -217,30 +223,41 @@ class GNNQueryEngine:
         request (shared targets are embedded once)."""
         if not self._pending:
             return {}
+        tel = self.telemetry
         t0 = time.perf_counter()
         eng = self.engine
         cap = eng.cfg.batch_size
-        seen = {}
-        per_dev: List[List[int]] = [[] for _ in range(eng.k)]
-        for _, tg in self._pending:
-            for v in tg.tolist():
-                if v not in seen:
-                    seen[v] = True
-                    per_dev[int(eng.part.assignment[v])].append(v)
-        num_rounds = max(1, max(-(-len(x) // cap) for x in per_dev))
-        emb: Dict[int, np.ndarray] = {}
-        for r in range(num_rounds):
-            round_tgts = [np.asarray(x[r * cap:(r + 1) * cap], np.int64)
-                          for x in per_dev]
-            H = np.asarray(self.serve_round(self.build_round(round_tgts)))
-            for d, tg in enumerate(round_tgts):
-                for j, v in enumerate(tg.tolist()):
-                    emb[v] = H[d, j]
-        out = {rid: np.stack([emb[int(v)] for v in tg])
-               for rid, tg in self._pending}
+        requested = sum(len(tg) for _, tg in self._pending)
+        with tel.span("serve_flush", requests=len(self._pending)) as flush_sp:
+            seen = {}
+            per_dev: List[List[int]] = [[] for _ in range(eng.k)]
+            for _, tg in self._pending:
+                for v in tg.tolist():
+                    if v not in seen:
+                        seen[v] = True
+                        per_dev[int(eng.part.assignment[v])].append(v)
+            num_rounds = max(1, max(-(-len(x) // cap) for x in per_dev))
+            # per-flush coalescing facts, on the span AND as counters
+            flush_sp.set(targets_requested=requested,
+                         targets_unique=len(seen), rounds=num_rounds)
+            emb: Dict[int, np.ndarray] = {}
+            for r in range(num_rounds):
+                round_tgts = [np.asarray(x[r * cap:(r + 1) * cap], np.int64)
+                              for x in per_dev]
+                H = np.asarray(self.serve_round(self.build_round(round_tgts)))
+                for d, tg in enumerate(round_tgts):
+                    for j, v in enumerate(tg.tolist()):
+                        emb[v] = H[d, j]
+            out = {rid: np.stack([emb[int(v)] for v in tg])
+                   for rid, tg in self._pending}
         self.stats.queries += len(self._pending)
         self.stats.targets += len(emb)
-        self.stats.latencies_s.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.stats.latencies_s.append(dt)
+        tel.counter("serve.queries").add(len(self._pending))
+        tel.counter("serve.targets_requested").add(requested)
+        tel.counter("serve.targets_unique").add(len(emb))
+        tel.histogram("serve.flush_latency_s").record(dt)
         self._pending = []
         return out
 

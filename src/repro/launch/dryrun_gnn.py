@@ -312,6 +312,11 @@ def main():
             p2p_buckets=args.engine_p2p_buckets,
             trainable_features=args.engine_trainable_features)
         eng = DistGNNEngine(g, mesh=mesh1d, cfg=ecfg)
+        # run-summary exporter (ISSUE 8): the ad-hoc byte logs below stay for
+        # humans; the artifact carries the structured telemetry summary —
+        # static per-device layout gauges + the imbalance report + the
+        # compiled executable's collective/peak-memory facts
+        tel = eng.enable_telemetry()
         if minibatch and args.engine_exec == "p2p":
             # tightened halo cap (PR 2 follow-up): the all_to_all buffer is
             # sized by the MEASURED edge-cut halo, not the worst case caps[0]
@@ -384,7 +389,15 @@ def main():
         from repro.core.execution.pipeline_exchange import (
             gathered_table_peak_bytes,
         )
-        from repro.launch.hlo_analysis import max_collective_buffer_bytes
+        from repro.launch.hlo_analysis import (
+            executable_summary,
+            max_collective_buffer_bytes,
+        )
+
+        tel.attach_executable(
+            "minibatch_train_step" if minibatch else "train_step",
+            executable_summary(compiled))
+        engine_extra["telemetry"] = tel.run_summary()
 
         C = args.engine_exchange_chunks
         Dmax = (g.features.shape[1] if minibatch

@@ -169,6 +169,32 @@ def max_collective_buffer_bytes(hlo_text: str, kind: str) -> int:
                 if r.kind == kind), default=0)
 
 
+def executable_summary(compiled) -> Dict[str, object]:
+    """Static telemetry facts for ONE compiled executable: collective wire
+    bytes (total + by kind) parsed from the optimized HLO, the largest
+    single collective buffer, and XLA's per-device peak memory.  Feed the
+    result to ``Telemetry.attach_executable(name, ...)`` so a run summary
+    is self-describing: measured spans/counters next to the compiler-static
+    numbers they should explain."""
+    text = compiled.as_text()
+    total, by_kind = collective_bytes(text)
+    out: Dict[str, object] = {
+        "collective_bytes_per_device": int(total),
+        "collective_bytes_by_kind": {k: int(v) for k, v in by_kind.items()},
+        "max_collective_buffer_bytes": max(
+            (int(r.bytes_per_exec) for r in parse_collectives(text)),
+            default=0),
+    }
+    try:
+        from repro.compat import peak_memory_in_bytes
+
+        out["peak_memory_bytes"] = peak_memory_in_bytes(
+            compiled.memory_analysis())
+    except Exception:  # pragma: no cover — backend without memory stats
+        pass
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Roofline
 # ---------------------------------------------------------------------------
