@@ -12,6 +12,13 @@ Two modes:
   owned partition block, statically padded sampled blocks, a device-resident
   feature cache (``--cache`` / ``--cache-capacity``), and the §6.1 stage
   schedules (``--schedule``); reports feature-fetch bytes + cache hits.
+  With ``--schedule pipelined``, ``--prefetch-mode process`` moves the
+  sampler into a GIL-free pool of ``--num-sample-workers`` worker processes
+  over a shared-memory batch ring (bitwise-identical epochs, survey §6.1):
+  process mode pays a one-time pool start-up, then wins whenever the
+  thread sampler would fight XLA's dispatch for the GIL (no spare core) or
+  epochs repeat — deterministic batches are served from the pool's LRU
+  without resampling.  Thread mode remains the zero-setup default.
   ``--partition-family vertex_cut --vertex-cut random|cartesian2d|libra``
   switches the §4 partition family: edges are partitioned, vertices
   replicate, and the exchange becomes the replica-sync combine (partial
@@ -87,6 +94,8 @@ def run_engine(args, g):
                        exchange_chunks=args.exchange_chunks,
                        p2p_buckets=args.p2p_buckets,
                        prefetch_depth=args.prefetch_depth,
+                       prefetch_mode=args.prefetch_mode,
+                       num_sample_workers=args.num_sample_workers,
                        trainable_features=args.trainable_features,
                        embed_lr=args.embed_lr)
     n_dev = len(jax.devices())
@@ -114,6 +123,7 @@ def run_engine(args, g):
     if minibatch:
         state, losses, times = eng.run_epoch_minibatch(
             args.epochs, schedule=args.schedule)
+        eng.close_prefetch_pool()  # no-op unless --prefetch-mode process ran
         s = eng.comm_stats
         print(f"schedule={args.schedule}: wall={times.wall:.3f}s "
               f"(sample={times.sample:.3f} extract={times.extract:.3f} "
@@ -277,6 +287,17 @@ def main():
                     "updated by row-sparse AdamW (requires protocol=sync)")
     ap.add_argument("--embed-lr", type=float, default=0.1,
                     help="sparse-AdamW learning rate for the embedding rows")
+    ap.add_argument("--prefetch-mode", default="thread",
+                    choices=["thread", "process"],
+                    help="pipelined schedule's producer: 'thread' shares "
+                    "the trainer's GIL (wins only with a spare core); "
+                    "'process' runs sampling in a GIL-free worker-process "
+                    "pool over a shared-memory batch ring — pays a "
+                    "process-start + pickle cost up front, wins whenever "
+                    "host sampling competes with XLA for the GIL or "
+                    "epochs repeat (deterministic batches are LRU-cached)")
+    ap.add_argument("--num-sample-workers", type=int, default=2,
+                    help="worker processes for --prefetch-mode process")
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="pipelined schedule: batches sampled ahead of the "
                     "device step (bounded queue depth)")

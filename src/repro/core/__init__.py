@@ -1,12 +1,51 @@
 """The survey's taxonomy as a working distributed-GNN engine (DESIGN.md §1):
 data partition, batch generation, execution models, communication protocols,
 GNN models, and end-to-end training loops.
+
+Exports resolve LAZILY (PEP 562): `repro.core.training` pulls in jax, but the
+process-pool sampling workers (`sampling/proc_prefetch.py`) import numpy-only
+submodules of this package and must not pay — or under `fork`, risk — the jax
+import just for touching ``repro.core``.
 """
-from repro.core.graph import Graph, er_graph, from_edges, powerlaw_graph, sbm_graph
-from repro.core.training import (
-    FullGraphResult,
-    MiniBatchResult,
-    full_graph_train,
-    llcg_train,
-    minibatch_train,
-)
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "Graph": "repro.core.graph",
+    "er_graph": "repro.core.graph",
+    "from_edges": "repro.core.graph",
+    "powerlaw_graph": "repro.core.graph",
+    "sbm_graph": "repro.core.graph",
+    "FullGraphResult": "repro.core.training",
+    "MiniBatchResult": "repro.core.training",
+    "full_graph_train": "repro.core.training",
+    "llcg_train": "repro.core.training",
+    "minibatch_train": "repro.core.training",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)
+
+
+if TYPE_CHECKING:  # static analyzers see the eager imports
+    from repro.core.graph import (  # noqa: F401
+        Graph,
+        er_graph,
+        from_edges,
+        powerlaw_graph,
+        sbm_graph,
+    )
+    from repro.core.training import (  # noqa: F401
+        FullGraphResult,
+        MiniBatchResult,
+        full_graph_train,
+        llcg_train,
+        minibatch_train,
+    )

@@ -123,7 +123,6 @@ from repro.core.execution.replica_sync import (
 from repro.core.feature_store import (
     FeatureStore,
     overlay_refresh_plan,
-    touched_rows_from_frontier,
 )
 from repro.core.graph import Graph
 from repro.core.models.gnn import init_gnn_params, padded_minibatch_forward
@@ -133,23 +132,10 @@ from repro.core.partition.vertex_cut import VERTEX_CUTS
 from repro.core.partition.vertex_layout import build_vertex_layout
 from repro.core.protocols.async_hist import block_refresh
 from repro.core.sampling.cache import CACHE_POLICIES, device_cache_ids
-from repro.core.sampling.distributed import (
-    CommStats,
-    embedding_update_bytes,
-    feature_fetch_bytes,
-)
-from repro.core.sampling.partition_batch import (
-    p2p_frontier_halo_cap,
-    partition_targets,
-)
-from repro.core.sampling.samplers import (
-    MiniBatch,
-    frontier_caps,
-    layer_wise_sample,
-    node_wise_sample,
-    pad_minibatch,
-    subgraph_sample,
-)
+from repro.core.sampling.distributed import CommStats
+from repro.core.sampling.host_batch import HostBatchBuilder
+from repro.core.sampling.partition_batch import p2p_frontier_halo_cap
+from repro.core.sampling.samplers import frontier_caps
 from repro.core.telemetry import Telemetry
 from repro.kernels.ell_spmm import ell_attend, ell_spmm
 from repro.optim.sparse_optim import row_adamw_update, sparse_adamw_ids
@@ -193,6 +179,13 @@ class EngineConfig:
     #   bucket layout: row t of a pair's need list always lands in
     #   installment t // w, so shapes never change across batches)
     prefetch_depth: int = 2  # batches the pipelined epoch samples ahead
+    prefetch_mode: str = "thread"  # thread | process — who runs the
+    #   pipelined producer.  "thread": the in-process `PrefetchWorker`
+    #   (overlap capacity-limited by the GIL).  "process": a
+    #   `ProcPrefetchPool` of sampling processes feeding a shared-memory
+    #   batch ring (sampling/proc_prefetch.py) — GIL-free, scales across
+    #   cores, still bitwise-identical to the blocking schedules
+    num_sample_workers: int = 2  # process-pool size for prefetch_mode=process
     trainable_features: bool = False  # layer-0 rows are LEARNABLE embeddings:
     #   the owner-sharded feature shard moves from the step's constants into
     #   its state and a row-sparse AdamW (optim/sparse_optim.py) updates ONLY
@@ -253,6 +246,10 @@ class DistGNNEngine:
             raise ValueError("p2p_buckets must be >= 1")
         if cfg.prefetch_depth < 1:
             raise ValueError("prefetch_depth must be >= 1")
+        if cfg.prefetch_mode not in ("thread", "process"):
+            raise ValueError("prefetch_mode must be 'thread' or 'process'")
+        if cfg.num_sample_workers < 1:
+            raise ValueError("num_sample_workers must be >= 1")
         if cfg.partition_family not in PARTITION_FAMILIES:
             raise ValueError(
                 f"partition_family must be one of {PARTITION_FAMILIES}")
@@ -1364,6 +1361,28 @@ class DistGNNEngine:
             # touched-row cap: per owner, at most every one of its rows, and
             # at most one per frontier slot across all k devices
             self.tcap = min(self.nb, k * self.caps[0])
+        # The host-side sample+extract stages live in a PICKLABLE numpy-only
+        # builder: the engine delegates to it in-process, and the process
+        # prefetcher (prefetch_mode="process") ships a copy (graph swapped
+        # for a shared-memory handle) to each sampling worker — one code
+        # path, so pooled epochs are bitwise-identical by construction.
+        self.host_builder = HostBatchBuilder(
+            batching=c.batching, execution=c.execution, seed=c.seed,
+            batch_size=c.batch_size, fanouts=tuple(c.fanouts),
+            layer_sizes=tuple(c.layer_sizes), walk_length=c.walk_length,
+            num_layers=L, trainable_features=c.trainable_features,
+            k=k, nb=self.nb, caps=tuple(int(x) for x in self.caps),
+            fcap=int(self.fcap),
+            fcap_widths=(tuple(int(x) for x in self.fcap_widths)
+                         if c.execution == "p2p" else None),
+            Ccap=Ccap, tcap=int(getattr(self, "tcap", 0)), feature_dim=D,
+            assignment=self.part.assignment, new_of_old=self.new_of_old,
+            labels=np.asarray(g.labels),
+            train_mask=(None if g.train_mask is None
+                        else np.asarray(g.train_mask)),
+            cache_slots=self._cache_slot, cache_sets=self._cache_set,
+            overlay_rows=tuple(len(a) for a in self.cache_old_ids),
+            graph=g)
 
     # ------------------------------------------------------------------
     # telemetry
@@ -1437,150 +1456,51 @@ class DistGNNEngine:
         tel.instant("exchange", **mark)
 
     def _sample_host(self, step_idx: int):
-        """Host sampling stage: per device, draw targets from its OWNED
-        partition block and expand them with the configured §5 sampler.
-        Deterministic in (seed, step, device) so the oracle — and any rerun —
+        """Host sampling stage, delegated to the picklable
+        `sampling.host_batch.HostBatchBuilder` (the same object the
+        process-pool prefetcher ships to its workers, so in-process and
+        pooled epochs run literally the same code).  Deterministic in
+        (seed, step, device) so the oracle — and any rerun, in any process —
         regenerates bitwise-identical batches."""
-        c = self.cfg
-        tel = self.telemetry
-        mbs = []
-        for d in range(self.k):
-            with tel.span("sample_device", step=step_idx, device=d):
-                rng = np.random.default_rng([c.seed, 7919, step_idx, d])
-                targets = partition_targets(self.g, self.part, d,
-                                            c.batch_size, rng)
-                if c.batching == "node_wise":
-                    mb = node_wise_sample(self.g, targets, c.fanouts, rng)
-                elif c.batching == "layer_wise":
-                    mb = layer_wise_sample(self.g, targets, c.layer_sizes, rng)
-                else:  # subgraph
-                    mb = subgraph_sample(self.g, targets, c.walk_length, rng,
-                                         num_layers=c.num_layers)
-                mbs.append(mb)
-        return mbs
+        return self.host_builder.sample(
+            step_idx, span_factory=self.telemetry.span)
 
     def _make_batch(self, mbs, step=None) -> Dict:
-        """Extract stage: pad each device's MiniBatch to the static caps,
-        relabel frontiers into the engine's new-id space, build the
-        execution-model fetch plan (cache hits short-circuit the exchange),
-        and account feature bytes against self.comm_stats (mirrored into
-        telemetry exchange spans/counters when tracing is enabled)."""
-        c, k, nb, Vp = self.cfg, self.k, self.nb, self.Vp
+        """Extract stage: the builder pads/relabels/builds the fetch plan in
+        numpy; `_finish_batch` ingests the result (CommStats + telemetry
+        accounting, jnp conversion) — the same ingest the process-pooled
+        epoch runs on arrays arriving from shared memory."""
+        arrays, meta = self.host_builder.extract(mbs, step=step)
+        return self._finish_batch(arrays, meta, step=step)
+
+    def _finish_batch(self, arrays, meta, step=None) -> Dict:
+        """Ingest one extracted batch: apply the per-device CommStats byte
+        deltas inside `_account_exchange` (identical counters/spans whether
+        the batch was built inline or by a worker process), mirror frontier
+        occupancy + overlay hit/miss telemetry, and convert the flat numpy
+        arrays to the jnp batch the jitted step consumes."""
+        c, L = self.cfg, self.cfg.num_layers
         tel = self.telemetry
-        caps, fcap, Ccap = self.caps, self.fcap, self.Ccap
-        L = c.num_layers
-        D = self.g.features.shape[1]
-        frontier = np.full((k, caps[0]), Vp, np.int64)
-        y = np.zeros((k, caps[-1]), np.int32)
-        w = np.zeros((k, caps[-1]), np.float32)
-        adj = [np.zeros((k, caps[l + 1], caps[l]), np.float32)
-               for l in range(L)]
-        self_idx = [np.zeros((k, caps[l + 1]), np.int32) for l in range(L)]
-        cache_ids = np.full((k, caps[0]), Ccap, np.int32)
-        if c.execution == "broadcast":
-            bc_ids = np.full((k, caps[0]), Vp, np.int64)
-        elif c.execution == "ring":
-            ring_ids = np.full((k, k, caps[0]), nb, np.int32)
-        else:
-            widths = self.fcap_widths
-            B, wdt = len(widths), widths[0]
-            need_lists = [[np.zeros(0, np.int64) for _ in range(k)]
-                          for _ in range(k)]
-            tab_ids = np.full((k, caps[0]), nb + B * k * wdt, np.int32)
-        for d, mb in enumerate(mbs):
-            padded = pad_minibatch(mb, caps)
-            for l in range(L):
-                adj[l][d] = padded["adj"][l]
-                self_idx[l][d] = padded["self_idx"][l]
-            tgt, tmask = padded["tgt"], padded["tmask"]
-            safe_tgt = np.clip(tgt, 0, None)
-            y[d] = np.where(tgt >= 0, self.g.labels[safe_tgt], 0)
-            # loss only on OWNED train targets: node/layer-wise targets are
-            # owned draws already, but subgraph walks visit remote vertices —
-            # without this mask a boundary vertex reached by two devices'
-            # walks would be double-counted in the psum'd loss/grad
-            tw = tmask * np.where(
-                tgt >= 0, self.part.assignment[safe_tgt] == d, False)
-            if self.g.train_mask is not None:
-                tw = tw * np.where(
-                    tgt >= 0, self.g.train_mask[safe_tgt], False)
-            w[d] = tw
-            old = padded["frontier"]
-            slot = self._cache_slot[d]
-            occ = remote = cache_hits = 0
-            # p2p: halo slot of each needed local src row, per source device
-            need = [dict() for _ in range(k)]
-            for j in range(caps[0]):
-                o = int(old[j])
-                if o < 0:
-                    continue
-                occ += 1
-                fn = int(self.new_of_old[o])
-                frontier[d, j] = fn
-                s = fn // nb
-                remote += s != d
-                cslot = slot.get(o, -1)
-                if s != d and cslot >= 0:
-                    cache_hits += 1
-                    cache_ids[d, j] = cslot
-                    continue  # served by the resident cache
-                if c.execution == "broadcast":
-                    bc_ids[d, j] = fn
-                elif c.execution == "ring":
-                    ring_ids[d, s, j] = fn % nb
-                else:  # p2p
-                    if s == d:
-                        tab_ids[d, j] = fn % nb
-                    else:
-                        li = fn % nb
-                        pos = need[s].setdefault(li, len(need[s]))
-                        tab_ids[d, j] = int(halo_slot(pos, s, wdt, k, nb))
-            if c.execution == "p2p":
-                for s in range(k):
-                    if s != d and need[s]:
-                        assert len(need[s]) <= fcap, (
-                            f"p2p halo cap overflow: device {d} needs "
-                            f"{len(need[s])} rows from {s}, fcap={fcap}")
-                        # dict preserves insertion order == pos order
-                        need_lists[s][d] = np.fromiter(
-                            need[s], np.int64, len(need[s]))
+        for d, dd in enumerate(meta["per_device"]):
             with self._account_exchange("extract", step, d):
-                feature_fetch_bytes(self.part, d, mb.layer_vertices[0], D,
-                                    cached_ids=self._cache_set[d],
-                                    stats=self.comm_stats)
-                if c.trainable_features:
-                    embedding_update_bytes(
-                        self.part, d, mb.layer_vertices[0], D,
-                        cached_ids=self._cache_set[d],
-                        overlay_rows=len(self.cache_old_ids[d]),
-                        stats=self.comm_stats)
+                for name, dv in dd["stats"].items():
+                    setattr(self.comm_stats, name,
+                            getattr(self.comm_stats, name) + dv)
             if tel.enabled:
-                tel.gauge("frontier_occupancy", device=d).set(occ)
-                self.store.count_overlay(d, hits=cache_hits,
-                                         misses=remote - cache_hits)
+                tel.gauge("frontier_occupancy", device=d).set(dd["occupancy"])
+                self.store.count_overlay(
+                    d, hits=dd["cache_hits"],
+                    misses=dd["remote"] - dd["cache_hits"])
         batch = dict(
-            frontier=jnp.asarray(frontier.astype(np.int32)),
-            y=jnp.asarray(y), w=jnp.asarray(w),
-            adj=tuple(jnp.asarray(a) for a in adj),
-            self_idx=tuple(jnp.asarray(a) for a in self_idx),
-            cache_ids=jnp.asarray(cache_ids))
-        if c.execution == "broadcast":
-            batch["bc_ids"] = jnp.asarray(bc_ids.astype(np.int32))
-        elif c.execution == "ring":
-            batch["ring_ids"] = jnp.asarray(ring_ids)
-        else:
-            # the one write side matching halo_slot's read side — shared
-            # with the full-graph and replica-sync plans
-            batch["send_rows"] = jnp.asarray(
-                bucketed_send_table(need_lists, k, widths))
-            batch["tab_ids"] = jnp.asarray(tab_ids)
-        if c.trainable_features:
-            # per-OWNER touched local rows (sorted, deterministic): the
-            # sparse-AdamW id set — every row any device's frontier reads,
-            # hit or miss (hits read the refreshed overlay whose gradient
-            # still lands on the owner's shard)
-            batch["emb_ids"] = jnp.asarray(touched_rows_from_frontier(
-                frontier, k, nb, self.tcap))
+            frontier=jnp.asarray(arrays["frontier"]),
+            y=jnp.asarray(arrays["y"]), w=jnp.asarray(arrays["w"]),
+            adj=tuple(jnp.asarray(arrays[f"adj{l}"]) for l in range(L)),
+            self_idx=tuple(jnp.asarray(arrays[f"self_idx{l}"])
+                           for l in range(L)),
+            cache_ids=jnp.asarray(arrays["cache_ids"]))
+        for key in ("bc_ids", "ring_ids", "send_rows", "tab_ids", "emb_ids"):
+            if key in arrays:
+                batch[key] = jnp.asarray(arrays[key])
         return batch
 
     def sample_minibatch(self, step_idx: int) -> Dict:
@@ -1902,9 +1822,43 @@ class DistGNNEngine:
         self._mb_ref_step = ref_step
         return ref_step
 
+    def _ensure_proc_pool(self, depth: int):
+        """The engine's persistent sampling-process pool (prefetch_mode=
+        'process'), built lazily and reused across epochs: graph CSR arrays
+        go to shared memory once, workers run a pickled-then-forked copy of
+        `self.host_builder` whose ``graph`` is the shm handle (attached
+        read-only at worker init), finished batches come back through the
+        shared-memory ring.  Rebuilt if depth/num_workers change."""
+        from repro.core.sampling.proc_prefetch import (
+            ProcPrefetchPool,
+            share_graph,
+        )
+        key = (int(depth), int(self.cfg.num_sample_workers))
+        pool = getattr(self, "_proc_pool", None)
+        if pool is not None and pool.alive and self._proc_pool_key == key:
+            return pool
+        self.close_prefetch_pool()
+        shared, arena = share_graph(self.host_builder._g())
+        builder = dataclasses.replace(self.host_builder, graph=shared)
+        self._proc_pool = ProcPrefetchPool(
+            builder.produce, self.host_builder.array_layout(),
+            depth=key[0], num_workers=key[1], telemetry=self.telemetry,
+            shared_inputs=(arena,))
+        self._proc_pool_key = key
+        return self._proc_pool
+
+    def close_prefetch_pool(self) -> None:
+        """Stop the sampling processes and unlink their shared memory.
+        Idempotent; safe to call with no pool built."""
+        pool = getattr(self, "_proc_pool", None)
+        if pool is not None:
+            pool.close()
+            self._proc_pool = None
+
     def run_epoch_minibatch(self, num_batches: int, schedule: str = "conventional",
                             state=None, reference: bool = False,
-                            prefetch_depth: Optional[int] = None):
+                            prefetch_depth: Optional[int] = None,
+                            prefetch_mode: Optional[str] = None):
         """Drive the §6.1 mini-batch execution schedules (conventional /
         factored / operator_parallel / pipelined) with the engine's REAL
         stages: host sampling, padded-batch extraction (+fetch-plan build),
@@ -1920,11 +1874,20 @@ class DistGNNEngine:
         bitwise-identical to the blocking schedules (state, losses, and
         CommStats), just faster on the wall.
 
+        ``prefetch_mode`` (default cfg.prefetch_mode) picks the pipelined
+        producer: "thread" shares this process's GIL; "process" runs
+        sample+extract in a persistent `ProcPrefetchPool` of
+        ``cfg.num_sample_workers`` worker processes over a shared-memory
+        batch ring (sampling/proc_prefetch.py) — the GIL-free data plane,
+        same bitwise guarantee.  The pool is reused across epochs; call
+        `close_prefetch_pool()` when done (GC also reclaims it).
+
         A fresh run (state=None) resets self.comm_stats like train();
         passing a state in continues accumulating."""
         from repro.core.execution.minibatch_pipeline import (
             SCHEDULES,
             run_pipelined,
+            run_pipelined_process,
         )
         self._check_minibatch_runnable()
         step = (self.make_reference_minibatch_step() if reference
@@ -1954,11 +1917,31 @@ class DistGNNEngine:
         if pipelined:
             depth = (self.cfg.prefetch_depth if prefetch_depth is None
                      else prefetch_depth)
-            times = run_pipelined(
-                batch_ids, sample_fn, extract_fn, train_fn,
-                prefetch_depth=depth,
-                finalize_fn=lambda: jax.block_until_ready(holder["state"]),
-                telemetry=tel)
+            mode = (self.cfg.prefetch_mode if prefetch_mode is None
+                    else prefetch_mode)
+            if mode not in ("thread", "process"):
+                raise ValueError(
+                    "prefetch_mode must be 'thread' or 'process'")
+            if mode == "process":
+                # GIL-free lane: workers already ran sample+extract; here we
+                # fold their byte deltas into comm_stats, assemble the jnp
+                # batch, and dispatch — still async, synced at epoch end
+                def train_fn_proc(item, arrays, meta):
+                    batch = self._finish_batch(arrays, meta, step=item)
+                    train_fn(None, batch)
+
+                times = run_pipelined_process(
+                    batch_ids, self._ensure_proc_pool(depth), train_fn_proc,
+                    finalize_fn=lambda: jax.block_until_ready(
+                        holder["state"]),
+                    telemetry=tel)
+            else:
+                times = run_pipelined(
+                    batch_ids, sample_fn, extract_fn, train_fn,
+                    prefetch_depth=depth,
+                    finalize_fn=lambda: jax.block_until_ready(
+                        holder["state"]),
+                    telemetry=tel)
             losses = [float(l) for l in losses]
         else:
             times = SCHEDULES[schedule](

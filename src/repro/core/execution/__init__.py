@@ -1,39 +1,99 @@
-from repro.core.execution.chunk import (
-    one_shot_aggregate,
-    parallel_chunk_aggregate,
-    sequential_chunk_aggregate,
-)
-from repro.core.execution.replica_sync import (
-    REPLICA_EXECUTIONS,
-    build_replica_sync_plan,
-    reference_combine,
-    replica_combine,
-)
-from repro.core.execution.minibatch_pipeline import (
-    SCHEDULES,
-    PullPushPlan,
-    StageTimes,
-    p3_plan,
-    pipelined_wall_model,
-    run_conventional,
-    run_factored,
-    run_operator_parallel,
-    run_pipelined,
-)
-from repro.core.execution.pipeline_exchange import (
-    bucketed_all_to_all,
-    bucketed_cap_widths,
-    chunked_overlap,
-    feature_chunks,
-    gathered_table_peak_bytes,
-)
-from repro.core.execution.spmm_models import (
-    SPMM_MODELS,
-    p2p_plan,
-    spmm_15d,
-    spmm_1d_broadcast,
-    spmm_1d_p2p,
-    spmm_1d_ring,
-    spmm_2d_summa,
-    spmm_replicated,
-)
+"""Execution models (survey §6): chunked aggregation, replica sync, SpMM
+strategies, the bucketed/chunked pipelined exchange, and the mini-batch stage
+schedules.
+
+Exports resolve LAZILY (PEP 562): most submodules here import jax, but the
+process-pool sampling workers import the numpy-only `bucketing` submodule of
+this package and must not pay — or under `fork`, risk — the jax import just
+for touching ``repro.core.execution``.
+"""
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "one_shot_aggregate": "repro.core.execution.chunk",
+    "parallel_chunk_aggregate": "repro.core.execution.chunk",
+    "sequential_chunk_aggregate": "repro.core.execution.chunk",
+    "REPLICA_EXECUTIONS": "repro.core.execution.replica_sync",
+    "build_replica_sync_plan": "repro.core.execution.replica_sync",
+    "reference_combine": "repro.core.execution.replica_sync",
+    "replica_combine": "repro.core.execution.replica_sync",
+    "SCHEDULES": "repro.core.execution.minibatch_pipeline",
+    "PullPushPlan": "repro.core.execution.minibatch_pipeline",
+    "StageTimes": "repro.core.execution.minibatch_pipeline",
+    "p3_plan": "repro.core.execution.minibatch_pipeline",
+    "pipelined_wall_model": "repro.core.execution.minibatch_pipeline",
+    "run_conventional": "repro.core.execution.minibatch_pipeline",
+    "run_factored": "repro.core.execution.minibatch_pipeline",
+    "run_operator_parallel": "repro.core.execution.minibatch_pipeline",
+    "run_pipelined": "repro.core.execution.minibatch_pipeline",
+    "run_pipelined_process": "repro.core.execution.minibatch_pipeline",
+    "bucketed_all_to_all": "repro.core.execution.pipeline_exchange",
+    "bucketed_cap_widths": "repro.core.execution.bucketing",
+    "bucketed_send_table": "repro.core.execution.bucketing",
+    "halo_slot": "repro.core.execution.bucketing",
+    "chunked_overlap": "repro.core.execution.pipeline_exchange",
+    "feature_chunks": "repro.core.execution.pipeline_exchange",
+    "gathered_table_peak_bytes": "repro.core.execution.pipeline_exchange",
+    "SPMM_MODELS": "repro.core.execution.spmm_models",
+    "p2p_plan": "repro.core.execution.spmm_models",
+    "spmm_15d": "repro.core.execution.spmm_models",
+    "spmm_1d_broadcast": "repro.core.execution.spmm_models",
+    "spmm_1d_p2p": "repro.core.execution.spmm_models",
+    "spmm_1d_ring": "repro.core.execution.spmm_models",
+    "spmm_2d_summa": "repro.core.execution.spmm_models",
+    "spmm_replicated": "repro.core.execution.spmm_models",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)
+
+
+if TYPE_CHECKING:  # static analyzers see the eager imports
+    from repro.core.execution.chunk import (  # noqa: F401
+        one_shot_aggregate,
+        parallel_chunk_aggregate,
+        sequential_chunk_aggregate,
+    )
+    from repro.core.execution.minibatch_pipeline import (  # noqa: F401
+        SCHEDULES,
+        PullPushPlan,
+        StageTimes,
+        p3_plan,
+        pipelined_wall_model,
+        run_conventional,
+        run_factored,
+        run_operator_parallel,
+        run_pipelined,
+        run_pipelined_process,
+    )
+    from repro.core.execution.pipeline_exchange import (  # noqa: F401
+        bucketed_all_to_all,
+        bucketed_cap_widths,
+        chunked_overlap,
+        feature_chunks,
+        gathered_table_peak_bytes,
+    )
+    from repro.core.execution.replica_sync import (  # noqa: F401
+        REPLICA_EXECUTIONS,
+        build_replica_sync_plan,
+        reference_combine,
+        replica_combine,
+    )
+    from repro.core.execution.spmm_models import (  # noqa: F401
+        SPMM_MODELS,
+        p2p_plan,
+        spmm_15d,
+        spmm_1d_broadcast,
+        spmm_1d_p2p,
+        spmm_1d_ring,
+        spmm_2d_summa,
+        spmm_replicated,
+    )

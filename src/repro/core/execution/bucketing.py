@@ -1,0 +1,64 @@
+"""Power-of-two bucketed p2p installment layout — the pure-numpy half of
+`pipeline_exchange`.
+
+These three helpers define the STATIC slot layout of the bucketed p2p halo
+exchange (installment widths, the gather-table slot of a halo row, and the
+matching [k, B, k, w] send table).  They are numpy-only on purpose: the
+process-pool sampling workers (`sampling/proc_prefetch.py`) build p2p fetch
+plans host-side and must never import jax — a forked worker may not touch the
+parent's XLA runtime, and a spawned one should not pay the import.  The jax
+consumer (`bucketed_all_to_all`) stays in `pipeline_exchange`, which
+re-exports these names so existing imports keep working.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def bucketed_cap_widths(cap: int, buckets: int) -> List[int]:
+    """Split a max-pairwise p2p cap into equal power-of-two installment
+    widths whose sum covers ``cap``.
+
+    ``buckets`` bounds the number of installments (collective rounds); the
+    width is the smallest power of two with ``width * buckets >= cap``, so
+    the lowered per-round all_to_all operand shrinks ~``buckets``x while at
+    most ``buckets`` rounds ship the same rows.  With ``buckets <= 1`` (or a
+    cap too small to split) the plan is unchanged: ``[cap]``.
+    """
+    cap, buckets = int(cap), int(buckets)
+    if buckets <= 1 or cap <= 1:
+        return [max(cap, 1)]
+    w = 1
+    while w * buckets < cap:
+        w *= 2
+    n = -(-cap // w)
+    if n <= 1:
+        return [cap]
+    return [w] * n
+
+
+def halo_slot(t, s, width: int, k: int, base: int):
+    """Gather-table slot of halo row ``t`` (position in a pair's need list)
+    from source ``s`` under the bucketed installment layout: the receive
+    table is ``concat(recv_round_0 [k*w], recv_round_1 [k*w], ...)`` appended
+    after ``base`` local rows.  Vectorizes over numpy arrays ``t``/``s``;
+    with a single installment (w == cap) this is the classic
+    ``base + s*cap + t`` layout."""
+    b = t // width
+    return base + b * (k * width) + s * width + (t % width)
+
+
+def bucketed_send_table(need: Sequence[Sequence[np.ndarray]], k: int,
+                        widths: List[int]) -> np.ndarray:
+    """[k, B, k, w] send table from per-(src, dst) need lists under the
+    power-of-two installment layout: pair (s, d)'s rows t land in installment
+    t // w at offset t % w — the write side matching `halo_slot`'s read side.
+    ``need[s][d]`` lists the local row ids source s ships to destination d."""
+    B, w = len(widths), widths[0]
+    send = np.zeros((k, k, B * w), np.int32)
+    for s in range(k):
+        for d in range(k):
+            send[s, d, : len(need[s][d])] = need[s][d]
+    return send.reshape(k, k, B, w).transpose(0, 2, 1, 3).copy()

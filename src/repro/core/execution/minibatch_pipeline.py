@@ -165,6 +165,48 @@ def run_pipelined(batch_ids: List[np.ndarray], sample_fn, extract_fn, train_fn,
     return t
 
 
+def run_pipelined_process(batch_ids: List, pool, train_fn, *,
+                          finalize_fn: Optional[Callable] = None,
+                          telemetry=None) -> StageTimes:
+    """GIL-free pipelined executor: sample+extract run in the WORKER
+    PROCESSES of a `ProcPrefetchPool` (`sampling/proc_prefetch.py`), batches
+    arrive through shared memory, and only train_fn runs here.
+
+    Same lane accounting as `run_pipelined`, except the producer lane is
+    measured remotely: each delivered ``meta`` carries ``sample_seconds`` /
+    ``extract_seconds`` (and the already-timed spans, which the pool replays
+    onto per-worker trace lanes).  Because the producers hold their own GILs,
+    the overlap does not depend on the trainer releasing this process's —
+    the capacity-limited caveat of the thread pipeline disappears.
+
+    ``train_fn(item, arrays, meta)`` should dispatch without blocking;
+    ``finalize_fn`` is the end-of-epoch sync, as in `run_pipelined`.  The
+    pool outlives the call (workers and shm are reused across epochs) —
+    closing it is the owner's job.
+    """
+    tel = telemetry if telemetry is not None else NULL_TELEMETRY
+    t = StageTimes()
+    t0 = time.perf_counter()
+    it = pool.run(batch_ids)
+    try:
+        for train_i, (item, arrays, meta) in enumerate(it):
+            t.sample += meta.get("sample_seconds", 0.0)
+            t.extract += meta.get("extract_seconds", 0.0)
+            with tel.span("train", step=train_i):
+                s0 = time.perf_counter()
+                train_fn(item, arrays, meta)
+                t.train += time.perf_counter() - s0
+        if finalize_fn is not None:
+            with tel.span("finalize"):
+                s0 = time.perf_counter()
+                finalize_fn()
+                t.train += time.perf_counter() - s0
+    finally:
+        it.close()
+    t.wall = time.perf_counter() - t0
+    return t
+
+
 def pipelined_wall_model(t: StageTimes, num_batches: int) -> float:
     """Overlap-aware wall-clock model for the two-lane pipeline, cross-checked
     against the MEASURED lanes of `run_pipelined` (tests/bench): the lanes run

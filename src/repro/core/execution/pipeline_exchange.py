@@ -23,12 +23,16 @@ power-of-two installments keeps each all_to_all operand at k*w rows
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.execution.bucketing import (  # noqa: F401 — re-exported API
+    bucketed_cap_widths,
+    bucketed_send_table,
+    halo_slot,
+)
 from repro.core.partition.cost_models import FEAT_BYTES
 
 
@@ -104,53 +108,10 @@ def gathered_table_peak_bytes(rows: int, D: int, num_chunks: int,
 # ---------------------------------------------------------------------------
 # Power-of-two bucketed p2p installments
 # ---------------------------------------------------------------------------
-
-
-def bucketed_cap_widths(cap: int, buckets: int) -> List[int]:
-    """Split a max-pairwise p2p cap into equal power-of-two installment
-    widths whose sum covers ``cap``.
-
-    ``buckets`` bounds the number of installments (collective rounds); the
-    width is the smallest power of two with ``width * buckets >= cap``, so
-    the lowered per-round all_to_all operand shrinks ~``buckets``x while at
-    most ``buckets`` rounds ship the same rows.  With ``buckets <= 1`` (or a
-    cap too small to split) the plan is unchanged: ``[cap]``.
-    """
-    cap, buckets = int(cap), int(buckets)
-    if buckets <= 1 or cap <= 1:
-        return [max(cap, 1)]
-    w = 1
-    while w * buckets < cap:
-        w *= 2
-    n = -(-cap // w)
-    if n <= 1:
-        return [cap]
-    return [w] * n
-
-
-def halo_slot(t, s, width: int, k: int, base: int):
-    """Gather-table slot of halo row ``t`` (position in a pair's need list)
-    from source ``s`` under the bucketed installment layout: the receive
-    table is ``concat(recv_round_0 [k*w], recv_round_1 [k*w], ...)`` appended
-    after ``base`` local rows.  Vectorizes over numpy arrays ``t``/``s``;
-    with a single installment (w == cap) this is the classic
-    ``base + s*cap + t`` layout."""
-    b = t // width
-    return base + b * (k * width) + s * width + (t % width)
-
-
-def bucketed_send_table(need: Sequence[Sequence[np.ndarray]], k: int,
-                        widths: List[int]) -> np.ndarray:
-    """[k, B, k, w] send table from per-(src, dst) need lists under the
-    power-of-two installment layout: pair (s, d)'s rows t land in installment
-    t // w at offset t % w — the write side matching `halo_slot`'s read side.
-    ``need[s][d]`` lists the local row ids source s ships to destination d."""
-    B, w = len(widths), widths[0]
-    send = np.zeros((k, k, B * w), np.int32)
-    for s in range(k):
-        for d in range(k):
-            send[s, d, : len(need[s][d])] = need[s][d]
-    return send.reshape(k, k, B, w).transpose(0, 2, 1, 3).copy()
+# The static slot layout (bucketed_cap_widths / halo_slot /
+# bucketed_send_table) lives in `bucketing.py` — numpy-only so the
+# process-pool sampling workers can build fetch plans without importing jax —
+# and is re-exported above.  Only the jax collective lives here.
 
 
 def bucketed_all_to_all(h: jnp.ndarray, send_rows: jnp.ndarray, axis: str,

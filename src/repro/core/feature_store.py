@@ -28,7 +28,9 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.execution.pipeline_exchange import (
+# numpy-only import on purpose: the process-pool sampling workers read
+# `touched_rows_from_frontier` and must not pull jax into their import chain
+from repro.core.execution.bucketing import (
     bucketed_cap_widths,
     bucketed_send_table,
     halo_slot,

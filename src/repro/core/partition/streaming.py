@@ -1,0 +1,199 @@
+"""Streaming partition ingest (survey §4.2 at data-loading scale): build the
+engine's per-device layout from a CHUNKED edge stream instead of a resident
+CSR graph.
+
+The in-memory path (`DistGNNEngine._build_layout`) walks a fully
+materialized `Graph` — fine for benchmark graphs, a non-starter when |E|
+dwarfs host RAM.  Real systems (DGL's ``data_shuffle``) ingest the edge list
+in chunks, shuffle each chunk to the partition that OWNS its destination,
+and grow per-device structures incrementally; peak host memory is
+O(E/chunks + per-device layout), never O(E).
+
+`build_streaming_layout` reproduces that shape in two passes over a
+re-iterable chunk stream:
+
+  pass 1  per-destination degree histogram -> the global ELL width K
+          (plus per-part sizes -> nb, Vp, and the contiguous relabeling,
+          exactly as the in-memory builder derives them);
+  pass 2  owner shuffle: each chunk's edges are stably grouped by the
+          owner of their destination and scattered into that device's ELL
+          block at per-vertex slot cursors.  A STABLE grouping preserves
+          within-destination edge order, so a stream in edge-list order
+          yields bit-identical rows to `from_edges` + `_build_layout`
+          (whose CSR is a stable sort by destination of the same list).
+
+The result is asserted identical — array for array — to the in-memory
+build by tests/test_streaming_partition.py, and `peak_transient_bytes`
+makes the memory claim checkable: the builder self-reports the largest
+per-chunk transient footprint, which depends on ``chunk_edges`` only.
+
+Vertex-plane inputs (features/labels/masks) are O(V) and land inside the
+per-device layout anyway; they arrive as arrays, not through the stream —
+the stream carries what actually scales, the edges.
+
+numpy-only on purpose: ingest runs host-side (loader processes), never on
+device, mirroring `sampling/host_batch.py`'s jax-free discipline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+class GraphEdgeChunks:
+    """Re-iterable chunked edge stream over a CSR `Graph` (the test/demo
+    source): yields (src, dst) int64 pairs in CSR order — which for a
+    `from_edges` graph is a stable-by-destination ordering of the original
+    edge list, the order the equality contract wants.  Each chunk holds at
+    most ``chunk_edges`` edges; nothing references the full edge list."""
+
+    def __init__(self, g: Graph, chunk_edges: int):
+        if chunk_edges < 1:
+            raise ValueError(f"chunk_edges must be >= 1, got {chunk_edges}")
+        self._g = g
+        self.chunk_edges = int(chunk_edges)
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        g, step = self._g, self.chunk_edges
+        indptr = np.asarray(g.indptr)
+        E = int(indptr[-1])
+        for lo in range(0, E, step):
+            hi = min(lo + step, E)
+            src = np.asarray(g.indices[lo:hi], np.int64)
+            # destinations of CSR positions [lo, hi): dst v covers
+            # [indptr[v], indptr[v+1]) — recovered per chunk via searchsorted
+            # on the O(V) indptr, no O(E) expansion
+            dst = np.searchsorted(indptr, np.arange(lo, hi), side="right") - 1
+            yield src, dst.astype(np.int64)
+
+
+@dataclasses.dataclass
+class StreamingLayout:
+    """The edge-cut device layout, as numpy (the jnp lift is the engine's
+    business), plus the ingest's self-reported memory accounting."""
+
+    k: int
+    nb: int          # padded per-device block size
+    Vp: int          # k * nb
+    K: int           # global ELL width (max in-degree)
+    new_of_old: np.ndarray   # [V] int64 relabeling, owner*nb + slot
+    ids: np.ndarray          # [Vp, K] int64 in-neighbor ids, pad = Vp
+    mask: np.ndarray         # [Vp, K] float32 slot validity
+    deg: np.ndarray          # [Vp, 1] float32 max(valid slots, 1)
+    X: np.ndarray            # [k, nb, D] float32 owner-sharded features
+    y: np.ndarray            # [Vp] int32
+    train_w: np.ndarray      # [Vp] float32
+    test_w: np.ndarray       # [Vp] float32
+    emb_touched: np.ndarray  # [Vp] float32: 1 on real (non-pad) rows
+    bmask: np.ndarray        # [Vp] bool: rows read by >= 1 remote partition
+    peak_transient_bytes: int  # largest per-chunk transient footprint
+    layout_bytes: int          # persistent output footprint (the arrays above)
+
+
+def _chunk_transient_bytes(*arrays: np.ndarray) -> int:
+    return int(sum(a.nbytes for a in arrays))
+
+
+def build_streaming_layout(stream: Iterable[Tuple[np.ndarray, np.ndarray]],
+                           assignment: np.ndarray, k: int, num_vertices: int,
+                           *, features: np.ndarray, labels: np.ndarray,
+                           train_mask: Optional[np.ndarray] = None,
+                           test_mask: Optional[np.ndarray] = None
+                           ) -> StreamingLayout:
+    """Two-pass chunked ingest -> owner shuffle -> incremental ELL layout.
+
+    ``stream`` must be RE-ITERABLE (two passes) and yield (src, dst) edge
+    chunks meaning "src is an in-neighbor of dst", in a fixed order; within
+    each destination that order becomes the ELL slot order, so a stream in
+    edge-list order reproduces the in-memory `from_edges` build exactly.
+    """
+    V = int(num_vertices)
+    assignment = np.asarray(assignment, np.int32)
+    if assignment.shape != (V,):
+        raise ValueError(f"assignment must be [V]={V}, got {assignment.shape}")
+    peak = 0
+
+    # ---- pass 1: degree histogram (O(V) state, one chunk resident) -------
+    deg_v = np.zeros(V, np.int64)
+    for src, dst in stream:
+        np.add.at(deg_v, dst, 1)
+        peak = max(peak, _chunk_transient_bytes(src, dst))
+    K = max(int(deg_v.max(initial=0)), 1)
+
+    # ---- relabeling, exactly as the in-memory builder ---------------------
+    sizes = np.bincount(assignment, minlength=k)
+    nb = max(int(sizes.max(initial=0)), 1)
+    Vp = k * nb
+    new_of_old = np.full(V, -1, np.int64)
+    for p in range(k):
+        olds = np.where(assignment == p)[0]
+        new_of_old[olds] = p * nb + np.arange(len(olds))
+
+    # ---- vertex plane: O(V) scatter into the owner-sharded blocks ---------
+    features = np.asarray(features, np.float32)
+    D = features.shape[1]
+    X = np.zeros((Vp, D), np.float32)
+    y = np.zeros((Vp,), np.int32)
+    train_w = np.zeros((Vp,), np.float32)
+    test_w = np.zeros((Vp,), np.float32)
+    olds = np.arange(V)
+    X[new_of_old[olds]] = features[olds]
+    y[new_of_old[olds]] = np.asarray(labels)[olds]
+    if train_mask is not None:
+        train_w[new_of_old[olds]] = np.asarray(train_mask)[olds].astype(
+            np.float32)
+    if test_mask is not None:
+        test_w[new_of_old[olds]] = np.asarray(test_mask)[olds].astype(
+            np.float32)
+    emb_touched = np.zeros((Vp,), np.float32)
+    emb_touched[new_of_old[olds]] = 1.0
+
+    # ---- pass 2: owner shuffle + incremental ELL scatter ------------------
+    ids = np.full((Vp, K), Vp, np.int64)
+    mask = np.zeros((Vp, K), np.float32)
+    bmask = np.zeros((Vp,), bool)
+    cursor = np.zeros(Vp, np.int64)  # next free ELL slot per new dst id
+    for src, dst in stream:
+        new_src = new_of_old[src]
+        new_dst = new_of_old[dst]
+        owner = assignment[dst]
+        # owner shuffle: stable grouping by owning device — the chunk's
+        # edges routed to each device's builder, within-dst order intact
+        route = np.argsort(owner, kind="stable")
+        s_r, d_r, o_r = new_src[route], new_dst[route], owner[route]
+        # slot index per routed edge: cursor[dst] + rank of the edge among
+        # its dst's edges within this routed chunk (cumcount via sorted dst)
+        order = np.argsort(d_r, kind="stable")
+        d_sorted = d_r[order]
+        run_start = np.r_[0, np.flatnonzero(np.diff(d_sorted)) + 1]
+        within = np.arange(len(d_sorted)) - np.repeat(
+            run_start, np.diff(np.r_[run_start, len(d_sorted)]))
+        slot = np.empty(len(d_r), np.int64)
+        slot[order] = cursor[d_sorted] + within
+        ids[d_r, slot] = s_r
+        mask[d_r, slot] = 1.0
+        np.add.at(cursor, d_r, 1)
+        # boundary marking rides the same shuffle: an edge whose source
+        # lives on a different device than its destination's owner makes
+        # the source a halo row
+        remote = (s_r // nb) != o_r
+        bmask[s_r[remote]] = True
+        peak = max(peak, _chunk_transient_bytes(
+            src, dst, new_src, new_dst, owner, route, s_r, d_r, o_r, order,
+            d_sorted, within, slot, np.empty(0)) + remote.nbytes)
+    deg = np.maximum(mask.sum(1, keepdims=True), 1.0).astype(np.float32)
+
+    layout = StreamingLayout(
+        k=k, nb=nb, Vp=Vp, K=K, new_of_old=new_of_old, ids=ids, mask=mask,
+        deg=deg, X=X.reshape(k, nb, D), y=y, train_w=train_w, test_w=test_w,
+        emb_touched=emb_touched, bmask=bmask, peak_transient_bytes=peak,
+        layout_bytes=0)
+    layout.layout_bytes = int(sum(
+        getattr(layout, f.name).nbytes
+        for f in dataclasses.fields(layout)
+        if isinstance(getattr(layout, f.name), np.ndarray)))
+    return layout

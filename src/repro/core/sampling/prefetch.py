@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Iterable, Sequence
 
 _DONE = object()
@@ -68,17 +69,27 @@ class PrefetchWorker:
     def _offer(self, out) -> bool:
         """Bounded put that stays responsive to close(): never blocks forever
         on a consumer that stopped consuming."""
+        stalled_at = None
         while not self._stop.is_set():
             try:
                 self._q.put(out, timeout=0.05)
                 if self._tel is not None:
                     self._tel.gauge("prefetch.queue_depth").set(
                         self._q.qsize())
+                    if stalled_at is not None:
+                        self._tel.counter(
+                            "prefetch.producer_stall_seconds").add(
+                                time.perf_counter() - stalled_at)
                 return True
             except queue.Full:
                 # producer ahead of the trainer by the full depth: the
-                # backpressure stall the imbalance report wants to see
-                if self._tel is not None:
+                # backpressure stall the imbalance report wants to see.
+                # ONE event per contiguous stall (not per 0.05s poll — a
+                # count proportional to polling cadence measures the poll
+                # loop, not the pipeline); duration rides the companion
+                # *_seconds counter
+                if self._tel is not None and stalled_at is None:
+                    stalled_at = time.perf_counter()
                     self._tel.counter("prefetch.producer_stall").add(1)
                 continue
         return False
@@ -91,16 +102,24 @@ class PrefetchWorker:
     def __next__(self):
         if self._done:
             raise StopIteration
+        stalled_at = None
         while True:
             try:
                 out = self._q.get(timeout=0.1)
                 if self._tel is not None:
                     self._tel.gauge("prefetch.queue_depth").set(
                         self._q.qsize())
+                    if stalled_at is not None:
+                        self._tel.counter(
+                            "prefetch.consumer_stall_seconds").add(
+                                time.perf_counter() - stalled_at)
                 break
             except queue.Empty:
-                # trainer starved: the producer lane is the bottleneck
-                if self._tel is not None:
+                # trainer starved: the producer lane is the bottleneck.
+                # ONE event per contiguous stall, duration on *_seconds
+                # (see _offer for the rationale)
+                if self._tel is not None and stalled_at is None:
+                    stalled_at = time.perf_counter()
                     self._tel.counter("prefetch.consumer_stall").add(1)
                 if not self._thread.is_alive():
                     # the thread may have enqueued its final item/sentinel

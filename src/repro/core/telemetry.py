@@ -164,6 +164,26 @@ class Tracer:
             sp.seq = len(self._spans)
             self._spans.append(sp)
 
+    def record_span(self, name: str, t0: float, dur: float,
+                    tid=None, **labels) -> None:
+        """Record an ALREADY-MEASURED interval — the replay path for spans
+        timed in another process (the process-pool sampling workers ship
+        (name, t0, dur, labels) tuples back with each batch).  ``t0`` must be
+        on this tracer's clock; the default `time.perf_counter` is
+        CLOCK_MONOTONIC on Linux, shared across processes on one host, so
+        worker intervals land on the same timeline as local spans.  ``tid``
+        is the trace lane key — any hashable; worker processes pass e.g.
+        ``("proc", rank)`` so each gets its own Chrome-trace row."""
+        if not self.enabled:
+            return
+        sp = Span(self, name, None, dict(labels))
+        sp.tid = threading.get_ident() if tid is None else tid
+        sp.t0 = float(t0)
+        sp.dur = float(dur)
+        with self._lock:
+            sp.seq = len(self._spans)
+            self._spans.append(sp)
+
     def spans(self) -> List[Span]:
         """All finished spans, ordered by start time (stable on record seq)."""
         with self._lock:
@@ -410,6 +430,10 @@ class Telemetry:
 
     def instant(self, name: str, **labels) -> None:
         self.trace.instant(name, **labels)
+
+    def record_span(self, name: str, t0: float, dur: float,
+                    tid=None, **labels) -> None:
+        self.trace.record_span(name, t0, dur, tid=tid, **labels)
 
     def counter(self, name: str, **labels):
         return self.metrics.counter(name, **labels)

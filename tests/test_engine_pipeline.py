@@ -60,6 +60,56 @@ def test_pipelined_equals_blocking_4dev():
     assert "PIPE_EQ_OK" in out
 
 
+def test_process_pipelined_equals_blocking_4dev():
+    """The GIL-free data plane may not change ANY math: a process-pool
+    pipelined epoch (shared-memory graph + batch ring, forkserver workers)
+    is bitwise-identical to the blocking epoch — losses, params, CommStats —
+    across samplers and execution models, the pool is REUSED across epochs,
+    and close_prefetch_pool() leaves /dev/shm empty."""
+    out = run_with_devices("""
+        import os
+        import jax
+        from repro.core.engine import DistGNNEngine, EngineConfig
+        from repro.core.graph import sbm_graph
+
+        g = sbm_graph(96, num_blocks=8, p_in=0.08, p_out=0.01, seed=0)
+        for batching, exe in (("node_wise", "p2p"), ("layer_wise", "ring"),
+                              ("subgraph", "broadcast")):
+            cfg = EngineConfig(
+                execution=exe, batching=batching, batch_size=8,
+                fanouts=(3, 3), layer_sizes=(16, 16), walk_length=3,
+                hidden=16, lr=0.3, cache_policy="static_degree",
+                cache_capacity=12, exchange_chunks=2, p2p_buckets=2,
+                prefetch_depth=2, prefetch_mode="process",
+                num_sample_workers=2)
+            eng = DistGNNEngine(g, cfg=cfg)
+            s1, l1, t1 = eng.run_epoch_minibatch(4, schedule="conventional")
+            stats1 = eng.comm_stats
+            s2, l2, t2 = eng.run_epoch_minibatch(4, schedule="pipelined")
+            tag = f"{batching}/{exe}"
+            assert l1 == l2, (tag, l1, l2)
+            eq = jax.tree_util.tree_map(lambda a, b: bool((a == b).all()),
+                                        s1["params"], s2["params"])
+            assert all(jax.tree_util.tree_leaves(eq)), (tag, eq)
+            assert eng.comm_stats == stats1, (tag, eng.comm_stats, stats1)
+            assert eng._jit_mb_step._cache_size() == 1, (
+                tag, eng._jit_mb_step._cache_size())
+            # epoch 2 on the SAME pool: workers + shm ring reused
+            pool = eng._proc_pool
+            s3, l3, t3 = eng.run_epoch_minibatch(4, schedule="pipelined")
+            assert l3 == l2, (tag, l3, l2)
+            assert eng._proc_pool is pool and pool.alive
+            eng.close_prefetch_pool()
+            litter = [f for f in os.listdir('/dev/shm')
+                      if f.startswith('repro-')]
+            assert not litter, (tag, litter)
+            print(f"{tag}: process-pipelined == blocking bitwise, "
+                  "pool reused, shm clean")
+        print("PROC_PIPE_EQ_OK")
+    """, n_devices=4, timeout=600)
+    assert "PROC_PIPE_EQ_OK" in out
+
+
 def test_chunked_bucketed_matches_oracle_4dev():
     """Feature-chunked exchange + bucketed p2p installments across BOTH
     partition families and all execution models: the full-graph step must

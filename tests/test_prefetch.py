@@ -103,6 +103,45 @@ def test_depth1_no_deadlock_slow_consumer_and_producer():
     assert not w.alive
 
 
+def test_stall_counters_one_event_per_contiguous_stall():
+    """Stall counters measure the PIPELINE, not the poll loop: one event per
+    contiguous stall (a poll-proportional count would scale with the 0.05s/
+    0.1s timeouts), with the duration on the *_seconds companion."""
+    from repro.core.telemetry import Telemetry
+
+    # producer side: instant producer vs a consumer that holds the depth-1
+    # queue full across two long pauses -> exactly 2 contiguous stalls
+    tel = Telemetry(enabled=True)
+    w = PrefetchWorker(range(2), lambda i: i, depth=1, telemetry=tel)
+    it = iter(w)
+    time.sleep(0.35)  # item0 queued instantly; producer stalls on item1
+    assert next(it) == 0
+    time.sleep(0.35)  # producer stalls again on the _DONE sentinel
+    assert next(it) == 1
+    with pytest.raises(StopIteration):
+        next(it)
+    w.close()
+    events = tel.metrics.counter("prefetch.producer_stall").value
+    secs = tel.metrics.counter("prefetch.producer_stall_seconds").value
+    assert events == 2, events  # ~14 under per-poll counting
+    assert 0.5 <= secs < 5.0, secs
+
+    # consumer side: slow producer starves the trainer once per batch ->
+    # exactly 2 contiguous stalls (the _DONE sentinel follows the last item
+    # immediately, so it adds none)
+    tel2 = Telemetry(enabled=True)
+    w2 = PrefetchWorker(range(2), lambda i: time.sleep(0.3) or i, depth=2,
+                        telemetry=tel2)
+    assert list(w2) == [0, 1]
+    w2.close()
+    events = tel2.metrics.counter("prefetch.consumer_stall").value
+    secs = tel2.metrics.counter("prefetch.consumer_stall_seconds").value
+    assert events == 2, events  # ~6 under per-poll counting
+    # each contiguous stall is timed from its FIRST empty poll (one 0.1s
+    # timeout late), so two 0.3s waits record >= ~0.4s
+    assert 0.3 <= secs < 5.0, secs
+
+
 def test_run_pipelined_depth1_failure_joins_worker():
     """The engine's pipelined epoch driver at depth=1: a device-lane death
     mid-epoch propagates and leaves no live sampler thread behind."""
