@@ -553,11 +553,32 @@ def main() -> None:
     ap.add_argument("--telemetry", action="store_true",
                     help="run the telemetry bench and write "
                     "BENCH_telemetry.json")
+    ap.add_argument("--bench-partition-families", action="store_true",
+                    help="run the partition-families cost bench (edge-cut "
+                    "halo vs vertex-cut replica-sync vs hybrid degree-"
+                    "threshold sweep across graphs x chips) and write "
+                    "BENCH_partition_families.json — asserts vertex-cut "
+                    "beats edge-cut critical path on the base power-law "
+                    "256-chip point and the best hybrid threshold beats "
+                    "BOTH pure families on the double-size one")
+    ap.add_argument("--vertices", type=int, default=2048,
+                    help="partition-families bench: base synthetic graph "
+                    "size (the hybrid regime point doubles it)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
-    if not (args.json or args.telemetry):
-        ap.error("pass --json and/or --telemetry (the CSV benches run via "
-                 "benchmarks/run.py)")
+    if not (args.json or args.telemetry or args.bench_partition_families):
+        ap.error("pass --json, --telemetry and/or --bench-partition-families "
+                 "(the CSV benches run via benchmarks/run.py)")
+    if args.bench_partition_families:
+        from repro.configs.gcn_paper import CONFIG as GNN_CFG
+        from repro.launch.dryrun_gnn import bench_partition_families
+
+        dims = ([GNN_CFG.feature_dim]
+                + [GNN_CFG.hidden_dim] * (GNN_CFG.num_layers - 1)
+                + [GNN_CFG.num_classes])
+        path = bench_partition_families(args.out, dims,
+                                        vertices=args.vertices)
+        print(f"partition-families bench -> {path}")
     if args.json:
         rows, derived = bench_step_pipeline(args.out)
         for r in rows:

@@ -24,6 +24,11 @@ Two modes:
   replicate, and the exchange becomes the replica-sync combine (partial
   aggregations over owned edges, master-masked loss); reports the
   replication factor and replica-sync bytes.
+  ``--partition-family hybrid`` is the PowerLyra-style degree-threshold
+  cut: low-degree vertices stay edge-cut-local behind the halo exchange
+  while hubs (in-degree >= ``--hub-threshold``, default auto p95)
+  replicate through the replica-sync combine; reports the threshold, hub
+  count, and both wire legs.
 * ``--no-engine``: the legacy dense-block SpMM execution models (survey
   Table 2) over a device mesh, kept as the survey-taxonomy reference.
 
@@ -85,7 +90,8 @@ def run_engine(args, g):
                        model=args.model,
                        partition_family=args.partition_family,
                        partitioner=args.partition,
-                       vertex_cut=args.vertex_cut, lr=args.lr,
+                       vertex_cut=args.vertex_cut,
+                       hub_threshold=args.hub_threshold, lr=args.lr,
                        batching=args.batching, batch_size=args.batch_size,
                        fanouts=fanouts, layer_sizes=layer_sizes,
                        walk_length=args.walk_length,
@@ -110,10 +116,17 @@ def run_engine(args, g):
     coll, kinds = collective_bytes(compiled.as_text())
     tel.attach_executable("minibatch_train_step" if minibatch else
                           "train_step", executable_summary(compiled))
-    cut = (f"vertex_cut={args.vertex_cut} "
-           f"(replication={eng.layout.replication_factor():.2f}, nv={eng.nv})"
-           if args.partition_family == "vertex_cut"
-           else f"partition={args.partition}")
+    if args.partition_family == "vertex_cut":
+        cut = (f"vertex_cut={args.vertex_cut} "
+               f"(replication={eng.layout.replication_factor():.2f}, "
+               f"nv={eng.nv})")
+    elif args.partition_family == "hybrid":
+        lay = eng.playout
+        cut = (f"hybrid thr={lay.cut.threshold:g} "
+               f"({int(lay.cut.hub.sum())} hubs, "
+               f"replication={lay.layout.replication_factor():.2f})")
+    else:
+        cut = f"partition={args.partition}"
     print(f"engine: model={args.model} exec={args.exec} "
           f"protocol={args.protocol} "
           f"batching={args.batching} {cut} k={k} "
@@ -150,6 +163,11 @@ def run_engine(args, g):
             s = eng.comm_stats
             print(f"replica sync: {s.replica_sync_bytes / 1e6:.3f} MB over "
                   f"{args.epochs} steps ({args.exec} combine)")
+        elif args.partition_family == "hybrid":
+            s = eng.comm_stats
+            print(f"hybrid wire: {s.halo_bytes / 1e6:.3f} MB halo (low-degree"
+                  f" srcs) + {s.replica_sync_bytes / 1e6:.3f} MB replica sync"
+                  f" (hubs) over {args.epochs} steps ({args.exec})")
         if args.trainable_features:
             print(f"trainable embeddings: "
                   f"{eng.comm_stats.embed_grad_bytes / 1e6:.3f} MB gradient "
@@ -310,14 +328,20 @@ def main():
     ap.add_argument("--parts", type=int, default=0, help="0 = all devices")
     ap.add_argument("--partition", default="metis_like")
     ap.add_argument("--partition-family", default="edge_cut",
-                    choices=["edge_cut", "vertex_cut"],
-                    help="engine §4 partition family: edge-cut halo exchange "
-                    "or vertex-cut replica sync (replicated vertices, "
-                    "master-masked loss)")
+                    choices=["edge_cut", "vertex_cut", "hybrid"],
+                    help="engine §4 partition family: edge-cut halo exchange, "
+                    "vertex-cut replica sync (replicated vertices, "
+                    "master-masked loss), or the PowerLyra-style hybrid "
+                    "degree-threshold cut (hubs replicate, the rest stay "
+                    "edge-cut-local)")
     ap.add_argument("--vertex-cut", default="cartesian2d",
                     choices=["random", "cartesian2d", "libra"],
                     help="vertex-cut partitioner (with "
                     "--partition-family vertex_cut)")
+    ap.add_argument("--hub-threshold", type=float, default=None,
+                    help="hybrid: in-degree at/above which a vertex is a "
+                    "replicated hub (default: auto 95th percentile; inf -> "
+                    "pure edge-cut dataflow, 0 -> pure vertex-cut)")
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--vertices", type=int, default=512)
     ap.add_argument("--lr", type=float, default=0.5)
@@ -352,12 +376,14 @@ def main():
         ap.error("mini-batch --batching modes run on the engine path only")
     if args.trace_out and not args.engine:
         ap.error("--trace-out instruments the engine path only")
-    if args.partition_family == "vertex_cut":
+    if args.partition_family != "edge_cut":
         if not args.engine:
-            ap.error("--partition-family vertex_cut runs on the engine path only")
+            ap.error(f"--partition-family {args.partition_family} runs on "
+                     "the engine path only")
         if args.batching != "full_graph":
-            ap.error("vertex_cut supports --batching full_graph only "
-                     "(vertex-cut mini-batch sampling is a ROADMAP follow-up)")
+            ap.error(f"{args.partition_family} supports --batching "
+                     "full_graph only (replica-family mini-batch sampling "
+                     "is a ROADMAP follow-up)")
     g = sbm_graph(args.vertices, num_blocks=8, p_in=0.05, p_out=0.003, seed=0)
     if args.engine:
         run_engine(args, g)

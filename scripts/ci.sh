@@ -294,6 +294,49 @@ print(f"smoke OK telemetry: {len(xev)} trace events, all {NB} steps "
       f"spanned, comm counters == CommStats, exchange bytes {exch} == "
       f"total()")
 EOF
+    # 4-device HYBRID-CUT engine smoke (ISSUE 10): PowerLyra-style degree-
+    # threshold family — low-degree halo exchange + hub replica-sync GAS —
+    # vs the oracle, with the wire bytes cross-checked against the
+    # standalone hybrid cost model
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
+import jax
+from repro.core.engine import DistGNNEngine, EngineConfig
+from repro.core.graph import powerlaw_graph
+from repro.core.partition.cost_models import hybrid_bytes_per_step
+
+g = powerlaw_graph(96, avg_degree=8, seed=0)
+eng = DistGNNEngine(g, cfg=EngineConfig(
+    partition_family="hybrid", execution="p2p", hidden=16, lr=0.3))
+ld, _ = eng.train(3)
+lr_, _ = eng.train(3, reference=True)
+err = max(abs(a - b) for a, b in zip(ld, lr_))
+assert err < 1e-4, err
+assert eng._jit_step._cache_size() == 1, eng._jit_step._cache_size()
+lay = eng.playout
+wire = eng.comm_stats.halo_bytes + eng.comm_stats.replica_sync_bytes
+assert wire == 3 * hybrid_bytes_per_step(
+    lay.halo_rows_exec if lay.halo_active else 0,
+    lay._vc_rows_per_layer if lay.sync_active else 0, eng.dims)
+print(f"smoke OK hybrid p2p thr={lay.cut.threshold:.1f}: oracle err "
+      f"{err:.2e}, 1 compile, {int(lay.cut.hub.sum())} hubs, "
+      f"{wire} wire bytes == cost model")
+EOF
+    # 4-device AUTOTUNER smoke (ISSUE 10): enumerate -> choose -> validate;
+    # the chosen plan's predicted step bytes must reproduce EXACTLY in the
+    # traced dryrun (ratio 1.0) or the planner raises PlanRejected
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
+from repro.core.graph import powerlaw_graph
+from repro.core.partition.autotune import autotune
+
+g = powerlaw_graph(96, avg_degree=8, seed=0)
+dims = [g.features.shape[1], 16, int(g.labels.max()) + 1]
+plan, report = autotune(g, 4, dims, "gcn")
+assert report["validation"]["ratio"] == 1.0, report["validation"]
+assert len(report["candidates"]) >= 12
+print(f"smoke OK autotune: chose {plan.label()} of "
+      f"{len(report['candidates'])} candidates, "
+      f"{plan.predicted_step_bytes} B/step validated at ratio 1.0")
+EOF
 else
     python -m pytest -x -q
 fi

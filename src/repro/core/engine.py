@@ -36,6 +36,22 @@ jitted shard_map training step.
                                   replica so nothing double-counts.  The
                                   wire volume is bounded by the replication
                                   factor, the §4.2 lever for skewed graphs.
+                     hybrid     — the PowerLyra-style degree-threshold cut
+                                  (partition/hybrid_cut.py): low-degree
+                                  vertices stay edge-cut-local behind a
+                                  halo exchange while hubs (degree >=
+                                  `hub_threshold`, default auto p95)
+                                  replicate with the replica-sync GAS —
+                                  only the heavy tail pays the replication
+                                  tax.  threshold=inf/0 degenerate to the
+                                  pure families exactly.
+                   The families live behind partition/layout_api.py
+                   (`PartitionLayout` owns slot tables, exchange constants,
+                   master masking, reference wiring, byte accounting) and
+                   execution/exchange_api.py (`ExchangeBackend` owns the
+                   per-layer aggregate/attention/combine dataflow); the
+                   engine itself is family-free dispatch, and a new family
+                   is one layout class + one backend + a registry entry.
   batch (§5)       a selectable `batching` axis:
                      full_graph — each device's partition block is its batch
                                   (PSGD-style ownership, loss masked to owned
@@ -105,20 +121,16 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import interpret_default, shard_map
+from repro.core.execution.exchange_api import make_backend
 from repro.core.execution.pipeline_exchange import (
     bucketed_all_to_all,
     bucketed_cap_widths,
-    bucketed_send_table,
     chunked_overlap,
-    halo_slot,
     zero_pad_row,
 )
 from repro.core.execution.replica_sync import (
-    build_replica_sync_plan,
     reference_combine,
     reference_combine_max,
-    replica_combine,
-    replica_combine_max,
 )
 from repro.core.feature_store import (
     FeatureStore,
@@ -126,10 +138,11 @@ from repro.core.feature_store import (
 )
 from repro.core.graph import Graph
 from repro.core.models.gnn import init_gnn_params, padded_minibatch_forward
-from repro.core.partition.cost_models import FEAT_BYTES, model_exchange_widths
-from repro.core.partition.edge_cut import PARTITIONERS, Partition
-from repro.core.partition.vertex_cut import VERTEX_CUTS
-from repro.core.partition.vertex_layout import build_vertex_layout
+from repro.core.partition.edge_cut import Partition
+from repro.core.partition.layout_api import (
+    ENGINE_MIRROR_ATTRS,
+    get_layout_builder,
+)
 from repro.core.protocols.async_hist import block_refresh
 from repro.core.sampling.cache import CACHE_POLICIES, device_cache_ids
 from repro.core.sampling.distributed import CommStats
@@ -146,7 +159,7 @@ EXECUTION_MODELS = ("broadcast", "ring", "p2p")
 GNN_MODELS = ("gcn", "sage", "gat", "gin")
 PROTOCOLS = ("sync", "epoch_fixed", "epoch_adaptive", "variation")
 BATCHING_MODES = ("full_graph", "node_wise", "layer_wise", "subgraph")
-PARTITION_FAMILIES = ("edge_cut", "vertex_cut")
+PARTITION_FAMILIES = ("edge_cut", "vertex_cut", "hybrid")
 ENGINE_CACHE_POLICIES = ("none",) + tuple(CACHE_POLICIES)
 
 
@@ -160,9 +173,21 @@ class EngineConfig:
     #   coefficient (a_src . Hw) through the exchange and runs a masked
     #   segment-softmax over the ELL slots (for vertex_cut: a two-pass
     #   max-then-sum replica sync so the normalizer is exact across replicas)
-    partition_family: str = "edge_cut"  # edge_cut | vertex_cut
-    partitioner: str = "metis_like"  # edge_cut: any key of PARTITIONERS
+    partition_family: str = "edge_cut"  # edge_cut | vertex_cut | hybrid —
+    #   each family is a partition/layout_api.py PartitionLayout paired with
+    #   an execution/exchange_api.py backend (hybrid: PowerLyra-style
+    #   degree-threshold cut, partition/hybrid_cut.py)
+    partitioner: str = "metis_like"  # edge_cut/hybrid: any key of PARTITIONERS
     vertex_cut: str = "cartesian2d"  # vertex_cut: any key of VERTEX_CUTS
+    hub_threshold: Optional[float] = None  # hybrid: vertices with in-degree
+    #   >= threshold replicate (vertex-cut class); below it they stay
+    #   edge-cut-local behind the halo.  None -> the 95th-percentile
+    #   in-degree (partition/hybrid_cut.auto_hub_threshold); np.inf -> pure
+    #   edge-cut dataflow, 0 -> pure (src-replicating) vertex-cut
+    sorted_masters: bool = False  # vertex_cut: order each device's replica
+    #   slots master-first (contiguous prefix), so master-masked host reads
+    #   slice instead of scanning a boolean mask — a layout option the
+    #   autotuner weighs; bitwise-equivalent training math
     batching: str = "full_graph"  # full_graph | node_wise | layer_wise | subgraph
     batch_size: int = 16  # per-device targets (node/layer-wise) or walk roots
     fanouts: Tuple[int, ...] = (4, 4)  # node_wise; len == num_layers
@@ -253,18 +278,8 @@ class DistGNNEngine:
         if cfg.partition_family not in PARTITION_FAMILIES:
             raise ValueError(
                 f"partition_family must be one of {PARTITION_FAMILIES}")
-        if cfg.partition_family == "vertex_cut":
-            if cfg.vertex_cut not in VERTEX_CUTS:
-                raise ValueError(
-                    f"vertex_cut must be one of {tuple(VERTEX_CUTS)}")
-            if cfg.batching != "full_graph":
-                raise ValueError(
-                    "vertex_cut supports batching='full_graph' only "
-                    "(vertex-cut mini-batch sampling is a ROADMAP follow-up)")
-            if partition is not None:
-                raise ValueError(
-                    "partition= is an edge-cut Partition; vertex_cut builds "
-                    "its own cut from cfg.vertex_cut")
+        builder = get_layout_builder(cfg.partition_family)
+        builder.validate(cfg, partition=partition)
         if mesh is None:
             mesh = jax.make_mesh((len(jax.devices()),), ("w",))
         if len(mesh.axis_names) != 1:
@@ -276,38 +291,28 @@ class DistGNNEngine:
         self.g = g
         self.interpret = (interpret_default() if cfg.interpret is None
                           else cfg.interpret)
-        if cfg.partition_family == "vertex_cut":
-            self._build_vertex_cut_layout()
-        else:
-            self.part = partition or PARTITIONERS[cfg.partitioner](g, self.k)
-            self._build_layout()
-            self._build_exchange_plan()
+        # the partition family builds its layout (slot tables, exchange-plan
+        # constants, masking, accounting) behind the PartitionLayout
+        # interface; the engine mirrors the engine-facing attributes so
+        # downstream code (mini-batch planner, drivers, tests) keeps reading
+        # eng.<attr>, and dispatches the traced exchange to the family's
+        # ExchangeBackend
+        lay = self.playout = builder(g, self.k, cfg, partition=partition)
+        for name in ENGINE_MIRROR_ATTRS:
+            if hasattr(lay, name):
+                setattr(self, name, getattr(lay, name))
+        self.backend = make_backend(self)
         num_classes = int(g.labels.max()) + 1
         self.dims = ([g.features.shape[1]]
                      + [cfg.hidden] * (cfg.num_layers - 1) + [num_classes])
-        if cfg.partition_family == "vertex_cut":
-            # wire bytes of one distributed step: every layer's replica sync
-            # ships `rows_per_layer` rows at that layer's model-dependent
-            # exchange width (input width for gcn/sage/gin; transformed width
-            # + attention coefficient + the max pass for gat) — the same
-            # accounting as cost_models.replica_sync_bytes_per_step
-            self._vc_bytes_per_step = (
-                self._vc_rows_per_layer
-                * int(sum(model_exchange_widths(cfg.model, self.dims,
-                                                "vertex_cut")))
-                * FEAT_BYTES)
+        # CommStats field -> wire bytes ONE full-graph step accrues (each
+        # entry mirrors the family's standalone cost model exactly)
+        self._wire_fields = lay.wire_fields_per_step(cfg.model, self.dims)
         if cfg.trainable_features and cfg.batching == "full_graph":
             # layer-0 gradient routing per step (the transpose of one
             # exchange pass at width dims[0]); mirrors the standalone
             # cost_models.embedding_grad_bytes_per_step exactly
-            D0 = self.dims[0]
-            if cfg.partition_family == "vertex_cut":
-                rows = 2 * self._vc_rows_per_layer  # grad combine + delta
-            elif cfg.execution in ("broadcast", "ring"):
-                rows = self.k * (self.k - 1) * self.nb
-            else:  # p2p: each halo row's cotangent returns to its owner once
-                rows = self._halo_rows
-            self._emb_bytes_per_step = rows * D0 * FEAT_BYTES
+            self._emb_bytes_per_step = lay.embed_grad_bytes(self.dims)
         self._step = None
         self._ref_step = None
         self._mb_step = None
@@ -319,205 +324,6 @@ class DistGNNEngine:
         self.telemetry = Telemetry(enabled=False)
         if cfg.batching != "full_graph":
             self._build_minibatch_plan()
-
-    # ------------------------------------------------------------------
-    # host-side plan building
-    # ------------------------------------------------------------------
-
-    def _build_layout(self):
-        """Relabel vertices so partition p owns global rows [p*nb, (p+1)*nb).
-        Pad slots are dead: no edges, zero features/weights."""
-        g, k = self.g, self.k
-        assign = self.part.assignment
-        sizes = np.bincount(assign, minlength=k)
-        self.nb = nb = max(int(sizes.max()), 1)
-        self.Vp = Vp = k * nb
-        old_by_part = [np.where(assign == p)[0] for p in range(k)]
-        new_of_old = np.full(g.num_vertices, -1, np.int64)
-        for p, olds in enumerate(old_by_part):
-            new_of_old[olds] = p * nb + np.arange(len(olds))
-        self.new_of_old = new_of_old
-        D = g.features.shape[1]
-        X = np.zeros((Vp, D), np.float32)
-        y = np.zeros((Vp,), np.int32)
-        train_w = np.zeros((Vp,), np.float32)
-        test_w = np.zeros((Vp,), np.float32)
-        olds = np.arange(g.num_vertices)
-        X[new_of_old[olds]] = g.features[olds]
-        y[new_of_old[olds]] = g.labels[olds]
-        if g.train_mask is not None:
-            train_w[new_of_old[olds]] = g.train_mask[olds].astype(np.float32)
-        if g.test_mask is not None:
-            test_w[new_of_old[olds]] = g.test_mask[olds].astype(np.float32)
-        # ELL adjacency in new ids; pad id = Vp (zero row in gather tables)
-        deg = g.degree()
-        self.K = K = max(int(deg.max()), 1)
-        ids = np.full((Vp, K), Vp, np.int64)
-        mask = np.zeros((Vp, K), np.float32)
-        for old_v in range(g.num_vertices):
-            v = new_of_old[old_v]
-            nbs = new_of_old[g.neighbors(old_v)]
-            ids[v, : len(nbs)] = nbs
-            mask[v, : len(nbs)] = 1.0
-        self.ids_global = ids
-        self.mask = jnp.asarray(mask)
-        degp = np.maximum(mask.sum(1, keepdims=True), 1.0).astype(np.float32)
-        self.deg = jnp.asarray(degp)
-        # the feature plane lives in an owner-partitioned store: flat store
-        # id == the relabeled vertex id (owner * nb + slot), so the exchange
-        # plans move store rows without any translation
-        self.store = FeatureStore(X.reshape(k, nb, D))
-        self.X = self.store.device_table()
-        # full-graph touched set for trainable embeddings: every REAL owned
-        # row is in the batch (pads stay untouched forever)
-        real = np.zeros((Vp,), np.float32)
-        real[new_of_old[olds]] = 1.0
-        self.emb_touched = real
-        self.y = jnp.asarray(y)
-        self.train_w = jnp.asarray(train_w)
-        self.test_w = jnp.asarray(test_w)
-        # boundary: rows read by at least one remote partition
-        owner = ids // nb  # partition of each neighbor (pad -> k)
-        bmask = np.zeros((Vp,), bool)
-        row_part = np.repeat(np.arange(self.k), nb)
-        remote = (mask > 0) & (owner != row_part[:, None])
-        src = ids[remote]
-        bmask[src[src < Vp]] = True
-        self.bmask = jnp.asarray(bmask)
-
-    def _build_exchange_plan(self):
-        """Execution-model-specific static arrays (the §7 protocol plan)."""
-        k, nb, Vp, K = self.k, self.nb, self.Vp, self.K
-        ids = self.ids_global
-        row_part = np.repeat(np.arange(k), nb)
-        if self.cfg.execution == "broadcast":
-            # gather table per device = all_gather(H) [Vp] + zero row at Vp
-            self.ids_exec = jnp.asarray(ids.astype(np.int32))
-            return
-        if self.cfg.execution == "ring":
-            # per (dst row, src block): neighbor ids local to the src block.
-            # Pad slots carry id 0 with mask 0 — the masked ELL reduction
-            # zeroes them, so the scan needs NO per-round zero-row
-            # concatenate onto the rotating block.
-            ids_by_src = np.zeros((Vp, k, K), np.int32)
-            src_part = np.where(ids < Vp, ids // nb, -1)
-            local_id = np.where(ids < Vp, ids % nb, 0)
-            for s in range(k):
-                sel = src_part == s  # [Vp, K]
-                ids_by_src[:, s][sel] = local_id[sel]
-            # reshape to [k(dev), nb, k(src), K] so P(ax) shards devices
-            self.ids_exec = jnp.asarray(
-                ids_by_src.reshape(k, nb, k, K).transpose(0, 2, 1, 3))
-            mask_np = np.asarray(self.mask)
-            mask_by_src = np.zeros((Vp, k, K), np.float32)
-            for s in range(k):
-                mask_by_src[:, s] = mask_np * (src_part == s)
-            self.mask_exec = jnp.asarray(
-                mask_by_src.reshape(k, nb, k, K).transpose(0, 2, 1, 3))
-            return
-        # p2p halo exchange plan: need[dst, src] = sorted local indices (within
-        # src block) of src rows that dst's aggregation reads
-        need_sets = [[np.zeros(0, np.int64) for _ in range(k)] for _ in range(k)]
-        src_part = np.where(ids < Vp, ids // nb, -1)
-        local_id = np.where(ids < Vp, ids % nb, 0)
-        for d in range(k):
-            rows = slice(d * nb, (d + 1) * nb)
-            for s in range(k):
-                if s == d:
-                    continue
-                sel = src_part[rows] == s
-                need_sets[d][s] = np.unique(local_id[rows][sel])
-        cap = max(1, max((len(x) for row in need_sets for x in row), default=1))
-        self.cap = cap
-        # true halo rows per layer-0-width pass (== part.communication_volume:
-        # each need set is one partition's remote in-neighbor set) — the
-        # trainable-embedding gradient transpose ships exactly these rows back
-        self._halo_rows = sum(len(x) for row in need_sets for x in row)
-        # power-of-two bucketed installment caps (1 bucket = the classic
-        # max-pairwise-need buffer): each lowered all_to_all operand holds
-        # k*w rows instead of k*cap, shipping the same rows over B rounds
-        widths = bucketed_cap_widths(cap, self.cfg.p2p_buckets)
-        self.p2p_widths = widths
-        B, w = len(widths), widths[0]
-        # send_rows[src, B, dst, w]: what each SOURCE ships per installment
-        # and destination (need_sets is dst-major; the builder wants
-        # src-major need[s][d])
-        self.send_rows = jnp.asarray(bucketed_send_table(
-            [[need_sets[d][s] for d in range(k)] for s in range(k)],
-            k, widths))
-        # remap ids into the local gather table:
-        #   [0, nb)            own block
-        #   [nb, nb + B*k*w)   halo slot (installment-major; see halo_slot)
-        #   nb + B*k*w         zero row (pads + absent)
-        ids_remap = np.full((Vp, K), nb + B * k * w, np.int32)
-        for d in range(k):
-            rows = slice(d * nb, (d + 1) * nb)
-            pos_lut = {}  # (src, local_id) -> halo slot
-            for s in range(k):
-                for t, li in enumerate(need_sets[d][s]):
-                    pos_lut[(s, int(li))] = int(halo_slot(t, s, w, k, nb))
-            id_blk = ids[rows]
-            sp_blk = src_part[rows]
-            li_blk = local_id[rows]
-            out = ids_remap[rows]
-            for r in range(nb):
-                for c in range(K):
-                    if id_blk[r, c] >= Vp:
-                        continue
-                    s = sp_blk[r, c]
-                    out[r, c] = (li_blk[r, c] if s == d
-                                 else pos_lut[(s, int(li_blk[r, c]))])
-            ids_remap[rows] = out
-        self.ids_exec = jnp.asarray(ids_remap)
-
-    def _build_vertex_cut_layout(self):
-        """Vertex-cut family: build the cut, the static replica layout, and
-        the replica-sync exchange plan.  The flattened replica space
-        [Vp = k*nv] plays the role the padded vertex space [k*nb] plays for
-        edge-cut, so state/loss/metrics code is family-agnostic."""
-        c, g, k = self.cfg, self.g, self.k
-        self.vcut = VERTEX_CUTS[c.vertex_cut](g, k, seed=c.seed)
-        lay = self.layout = build_vertex_layout(g, self.vcut, k)
-        self.nb = self.nv = nv = lay.nv  # nb: per-device padded rows (slots)
-        self.Vp = Vp = k * nv
-        self.K = lay.Kc
-        D = g.features.shape[1]
-        # replica-slot store: flat store id == d * nv + slot; replicas of a
-        # vertex are separate store rows kept value-identical by the
-        # master-delta broadcast when trainable
-        self.store = FeatureStore(np.asarray(lay.X, np.float32))
-        self.X = self.store.device_table()
-        # trainable embeddings update at MASTER slots only (replicas receive
-        # the master's delta through the replica sync, so they never drift
-        # and never double-update)
-        self.emb_touched = np.asarray(
-            lay.master_mask.reshape(Vp), np.float32)
-        self.y = jnp.asarray(lay.y.reshape(Vp))
-        self.train_w = jnp.asarray(lay.train_w.reshape(Vp))
-        self.test_w = jnp.asarray(lay.test_w.reshape(Vp))
-        self.deg = jnp.asarray(lay.deg.reshape(Vp, 1))
-        self.bmask = jnp.asarray(lay.bmask.reshape(Vp))
-        self.mask = jnp.asarray(lay.mask_owned.reshape(Vp, lay.Kc))
-        self.ids_exec = jnp.asarray(lay.ids_owned.reshape(Vp, lay.Kc))
-        # reference-step ELL in the flattened replica space: local slot ->
-        # global flat slot d*nv + slot; pads -> Vp (the appended zero row),
-        # the same pad convention as the edge-cut ids_global table
-        flat_off = (np.arange(k) * nv)[:, None, None]
-        self.ids_global = np.where(lay.mask_owned > 0,
-                                   lay.ids_owned + flat_off, Vp
-                                   ).reshape(Vp, lay.Kc).astype(np.int64)
-        plan = build_replica_sync_plan(lay, self.vcut.masters, c.execution,
-                                       buckets=c.p2p_buckets)
-        plan.pop("execution")
-        self._vc_rows_per_layer = plan.pop("rows_per_layer")
-        self._vc_p2p_caps = plan.pop("caps", None)  # p2p: pre-bucketing c1/c2
-        self._vc_plan = {}
-        slot_tables = ("rep_ids", "rep_mask", "gather_ids", "gather_mask",
-                       "scatter_ids")  # [k, nv, ...] -> flatten like X/y/...
-        for key, a in plan.items():
-            if key in slot_tables:
-                a = a.reshape((Vp,) + a.shape[2:])
-            self._vc_plan[key] = jnp.asarray(a)
 
     # ------------------------------------------------------------------
     # shared layer math
@@ -624,185 +430,16 @@ class DistGNNEngine:
     # distributed step
     # ------------------------------------------------------------------
 
-    def _exchange_and_aggregate(self, h_local, consts_local):
-        """One layer's neighbor exchange + local ELL multiply, device-local
-        code under shard_map. h_local [nb, D] -> agg [nb, D].
-
-        With ``exchange_chunks`` > 1 the broadcast/p2p exchanges are
-        feature-chunked (pipeline_exchange.chunked_overlap): the collective
-        for chunk c+1 is issued while the Pallas ELL multiply consumes chunk
-        c, so peak gathered-table bytes drop from O(V*D) to O(V*D/chunks)
-        and XLA's async collectives hide the wire behind the MXU."""
-        ax, k, nb = self.axis, self.k, self.nb
-        C = self.cfg.exchange_chunks
-        ids, mask, deg = (consts_local["ids"], consts_local["mask"],
-                          consts_local["deg"])
-        if self.cfg.partition_family == "vertex_cut":
-            # partial aggregation over OWNED edges (replica-slot space), then
-            # replica-sync combine, then global-degree normalize
-            table = jnp.concatenate([h_local, zero_pad_row(h_local)], 0)
-            partial = self._ell(ids, mask, table)
-            agg = replica_combine(self.cfg.execution, partial, consts_local,
-                                  axis=ax, k=k, ell_fn=self._ell,
-                                  num_chunks=C)
-            return agg / deg
-        if self.cfg.execution == "broadcast":
-            agg = chunked_overlap(h_local, C, self._edge_exchange_fn(consts_local),
-                                  lambda table: self._ell(ids, mask, table))
-            return agg / deg
-        if self.cfg.execution == "ring":
-            me = jax.lax.axis_index(ax)
-
-            def ring_step(carry, r):
-                acc, h_cur = carry
-                owner = (me + r) % k
-                ids_r = jnp.take(ids, owner, axis=0)  # [nb, K]
-                mask_r = jnp.take(mask, owner, axis=0)
-                # pad slots carry id 0 / mask 0: no zero-row concatenate in
-                # the scan, the masked reduction drops them
-                part = self._ell(ids_r, mask_r, h_cur)
-                h_nxt = jax.lax.ppermute(
-                    h_cur, ax, [(i, (i - 1) % k) for i in range(k)])
-                return (acc + part, h_nxt), None
-
-            acc0 = jnp.zeros((nb, h_local.shape[1]), h_local.dtype)
-            (acc, _), _ = jax.lax.scan(ring_step, (acc0, h_local),
-                                       jnp.arange(k))
-            # normalize ONCE after the scan: deg is constant across rounds,
-            # so the old per-round division burned k-1 extra divides/layer
-            return acc / deg
-        # p2p halo exchange (bucketed installment all_to_alls)
-        agg = chunked_overlap(h_local, C, self._edge_exchange_fn(consts_local),
-                              lambda table: self._ell(ids, mask, table))
-        return agg / deg
-
-    def _edge_exchange_fn(self, consts_local):
-        """The edge-cut broadcast/p2p table assembly as a reusable closure:
-        hc [nb, Dc] -> gather table (+ the one zero pad row).  Width-agnostic,
-        so the GAT layer reuses it for both the attention-coefficient column
-        and the chunked Hw exchange."""
-        ax, k = self.axis, self.k
-        if self.cfg.execution == "broadcast":
-            def exchange(hc):
-                h_full = jax.lax.all_gather(hc, ax, axis=0, tiled=True)
-                return jnp.concatenate([h_full, zero_pad_row(hc)], 0)
-        else:
-            send_rows = consts_local["send_rows"]  # [B, k, w]
-
-            def exchange(hc):
-                recv = bucketed_all_to_all(hc, send_rows, ax, k)
-                return jnp.concatenate([hc, recv, zero_pad_row(hc)], 0)
-        return exchange
-
     def _model_layer_local(self, p_l, H, consts_local, last: bool):
         """One model-aware layer of the distributed forward (device-local
-        under shard_map): gat runs its own attention program; everyone else
-        is exchange-aggregate + the shared `_combine`."""
+        under shard_map), dispatched to the partition family's
+        ExchangeBackend (execution/exchange_api.py): gat runs the backend's
+        attention program; everyone else is the backend's
+        exchange-aggregate + the shared `_combine`."""
         if self.cfg.model == "gat":
-            return self._gat_layer_local(p_l, H, consts_local, last)
-        nbr = self._exchange_and_aggregate(H, consts_local)
+            return self.backend.gat_layer(p_l, H, consts_local, last)
+        nbr = self.backend.aggregate(H, consts_local)
         return self._combine(self.cfg.model, p_l, nbr, H, last)
-
-    def _gat_layer_local(self, p_l, H, consts_local, last: bool):
-        """Distributed GAT layer (survey §3's edge-wise model through the §6
-        exchange): per-edge logits over the ELL structure, a masked
-        segment-softmax over the neighbor slots, and an attention-weighted
-        gather-sum — pad slots stay inert (zero weight) and degree-0 rows
-        fall back to their own transformed row, the same contract as the
-        dense `gnn_layer`.
-
-        What crosses the wire per layer (the model-aware cost-model terms):
-          edge_cut   the TRANSFORMED rows Hw (d_out wide) plus ONE
-                     attention-coefficient column a_src . Hw — receivers
-                     combine it with their local a_dst . Hw instead of
-                     re-deriving neighbor dot products;
-          vertex_cut a two-pass replica sync: a width-1 MAX combine of the
-                     per-replica logit maxima (floored at 0 — any upper
-                     bound is a valid softmax shift, and the floor makes
-                     pad-slot zeros harmless identities), then the ordinary
-                     sum combine of [exp-weighted partial rows | partial
-                     normalizer] at width d_out + 1, so every replica ends
-                     with the bitwise-same exact softmax normalizer."""
-        c = self.cfg
-        ax, k = self.axis, self.k
-        ids, mask = consts_local["ids"], consts_local["mask"]
-        Hw = H @ p_l["w"]
-        if c.partition_family == "vertex_cut":
-            table = jnp.concatenate([Hw, zero_pad_row(Hw)], 0)
-            e = self._sddmm(ids, mask, table, p_l["a_src"], p_l["a_dst"])
-            m_loc = jnp.maximum(jnp.max(e, axis=1, keepdims=True), 0.0)
-            M = jax.lax.stop_gradient(replica_combine_max(
-                c.execution, m_loc, consts_local, axis=ax, k=k))
-            pw = jnp.exp(e - M) * (e > -1e29)
-            part = jnp.concatenate(
-                [self._ell_attend(ids, pw, table),
-                 pw.sum(1, keepdims=True)], 1)
-            comb = replica_combine(c.execution, part, consts_local, axis=ax,
-                                   k=k, ell_fn=self._ell,
-                                   num_chunks=c.exchange_chunks)
-            num, den = comb[:, :-1], comb[:, -1:]
-        elif c.execution == "ring":
-            num, den = self._gat_ring(p_l, Hw, ids, mask)
-        else:  # broadcast / p2p: ship [Hw | a_src . Hw] through the halo
-            exchange = self._edge_exchange_fn(consts_local)
-            s_dst = (Hw @ p_l["a_dst"])[:, None]
-            s_tab = exchange((Hw @ p_l["a_src"])[:, None])
-            s_nbr = jnp.take(s_tab, ids, axis=0)[..., 0]
-            e = jnp.where(mask > 0,
-                          jax.nn.leaky_relu(s_dst + s_nbr, 0.2), -1e30)
-            pw, den = self._gat_softmax(e)
-            num = chunked_overlap(Hw, c.exchange_chunks, exchange,
-                                  lambda T: self._ell_attend(ids, pw, T))
-        z = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), Hw)
-        return z if last else jax.nn.relu(z)
-
-    def _gat_ring(self, p_l, Hw, ids_all, mask_all):
-        """Edge-cut ring GAT: one pass of online softmax (flash-attention
-        style running max + rescale) over the k rotating source blocks — the
-        exact masked softmax without a second max round.  The rotating block
-        carries [Hw | a_src . Hw]; rotation r+1 is issued while rotation r
-        feeds the gather (same double-buffering as the replica-sync ring)."""
-        ax, k, nb = self.axis, self.k, self.nb
-        me = jax.lax.axis_index(ax)
-        s_dst = (Hw @ p_l["a_dst"])[:, None]
-        blk0 = jnp.concatenate([Hw, (Hw @ p_l["a_src"])[:, None]], 1)
-        perm = [(i, (i - 1) % k) for i in range(k)]
-
-        def consume(carry, blk, owner):
-            m, num, den = carry
-            ids_r = jnp.take(ids_all, owner, axis=0)
-            mask_r = jnp.take(mask_all, owner, axis=0)
-            s_nbr = jnp.take(blk[:, -1], ids_r, axis=0)
-            e = jnp.where(mask_r > 0,
-                          jax.nn.leaky_relu(s_dst + s_nbr, 0.2), -1e30)
-            m_new = jax.lax.stop_gradient(
-                jnp.maximum(m, jnp.max(e, axis=1, keepdims=True)))
-            sc = jnp.exp(m - m_new)
-            pw = jnp.exp(e - m_new) * (e > -1e29)
-            num = num * sc + self._ell_attend(ids_r, pw, blk[:, :-1])
-            den = den * sc + pw.sum(1, keepdims=True)
-            return m_new, num, den
-
-        carry = (jnp.full((nb, 1), -1e30, Hw.dtype),
-                 jnp.zeros_like(Hw), jnp.zeros((nb, 1), Hw.dtype))
-        carry = consume(carry, blk0, me)  # round 0: own block, no rotation
-        if k == 1:
-            return carry[1], carry[2]
-        # exactly k-1 ppermute rounds, same prologue/scan/epilogue structure
-        # as replica_sync._ring_combine (the scan-every-round form issued a
-        # k-th rotation whose output was never consumed)
-        blk1 = jax.lax.ppermute(blk0, ax, perm)
-
-        def ring_step(carry_blk, r):
-            carry, blk = carry_blk
-            blk_nxt = jax.lax.ppermute(blk, ax, perm)  # rotation r+1 flies
-            carry = consume(carry, blk, (me + r) % k)  # while r is consumed
-            return (carry, blk_nxt), None
-
-        (carry, blk_last), _ = jax.lax.scan(ring_step, (carry, blk1),
-                                            jnp.arange(1, k - 1))
-        _, num, den = consume(carry, blk_last, (me + k - 1) % k)
-        return num, den
 
     def _forward_local(self, params, hist, age, step, consts_local, X=None):
         """Full local forward with protocol mixing; returns (logits_local,
@@ -842,26 +479,22 @@ class DistGNNEngine:
         the mask form costs exactly the touched rows in moment traffic and
         leaves untouched rows (pads / non-masters) bitwise unchanged.
 
-        vertex_cut: g_emb is each replica's PARTIAL gradient; the replica
-        sync combines it to the full vertex gradient, the update applies at
-        MASTER slots only (moments live at masters), and the masters' deltas
-        are re-broadcast through the same sync — a sum with one nonzero
+        Replica families (vertex_cut / hybrid with an active sync): g_emb is
+        each replica's PARTIAL gradient; the backend's combine_rows turns it
+        into the full vertex gradient, the update applies at MASTER slots
+        only (moments live at masters), and the masters' deltas are
+        re-broadcast through the same sync — a sum with one nonzero
         contribution, so every replica adds the bitwise-same delta and the
-        copies never drift."""
-        c = self.cfg
+        copies never drift.  combine_rows is the identity for single-replica
+        families, so the code is family-agnostic."""
         touched = cl["emb_touched"]
-        if c.partition_family == "vertex_cut":
-            g_emb = replica_combine(c.execution, g_emb, cl, axis=self.axis,
-                                    k=self.k, ell_fn=self._ell,
-                                    num_chunks=c.exchange_chunks)
+        g_emb = self.backend.combine_rows(g_emb, cl)
         emb2, m2, v2, t2 = row_adamw_update(
             emb, g_emb, state["emb_m"], state["emb_v"], state["emb_t"],
             touched, **self._embed_hparams())
-        if c.partition_family == "vertex_cut":
+        if self.backend.has_replicas:
             delta = (emb2 - emb) * touched[:, None]
-            delta_all = replica_combine(
-                c.execution, delta, cl, axis=self.axis, k=self.k,
-                ell_fn=self._ell, num_chunks=c.exchange_chunks)
+            delta_all = self.backend.combine_rows(delta, cl)
             emb2 = emb + delta_all
         return dict(embed=emb2, emb_m=m2, emb_v=v2, emb_t=t2)
 
@@ -874,26 +507,18 @@ class DistGNNEngine:
         L = len(self.dims) - 1
 
         consts = dict(X=self.X, y=self.y, w=self.train_w, bmask=self.bmask,
-                      deg=self.deg, ids=self.ids_exec, mask=self.mask)
-        shard = dict(X=P(ax, None), y=P(ax), w=P(ax), bmask=P(ax),
-                     deg=P(ax, None), ids=P(ax, None), mask=P(ax, None))
+                      deg=self.deg)
+        consts.update(self.playout.exchange_consts())
         if c.trainable_features:
             # layer-0 rows come from state["embed"]; the touched mask is the
             # static full-graph batch (real owned rows / vertex masters)
-            del consts["X"], shard["X"]
+            del consts["X"]
             consts["emb_touched"] = jnp.asarray(self.emb_touched)
-            shard["emb_touched"] = P(ax)
-        if c.partition_family == "vertex_cut":
-            for key, a in self._vc_plan.items():
-                consts[key] = a
-                shard[key] = P(*((ax,) + (None,) * (a.ndim - 1)))
-        elif c.execution == "ring":
-            consts["mask"] = self.mask_exec
-            shard["ids"] = P(ax, None, None, None)
-            shard["mask"] = P(ax, None, None, None)
-        elif c.execution == "p2p":
-            consts["send_rows"] = self.send_rows
-            shard["send_rows"] = P(ax, None, None, None)
+        # every const shards its LEADING axis (device-stacked plan tables or
+        # owner-partitioned rows) and replicates the rest — the layout
+        # contract every family's tables are built to
+        shard = {key: P(*((ax,) + (None,) * (jnp.ndim(a) - 1)))
+                 for key, a in consts.items()}
         state_specs = dict(
             params=P(), step=P(),
             hist=tuple(P(ax, None) for _ in range(L)),
@@ -905,17 +530,10 @@ class DistGNNEngine:
         def local_step(state, consts_local):
             params, step_i = state["params"], state["step"]
             hist, age = state["hist"], state["age"]
-            # squeeze the device axis off ring/p2p plans
+            # squeeze the device axis off per-device-stacked plan tables
             cl = dict(consts_local)
-            if c.partition_family == "vertex_cut":
-                for key in ("send1", "send2", "ring_ids"):
-                    if key in cl:
-                        cl[key] = cl[key][0]
-            elif c.execution == "ring":
-                cl["ids"] = cl["ids"][0]
-                cl["mask"] = cl["mask"][0]
-            elif c.execution == "p2p":
-                cl["send_rows"] = cl["send_rows"][0]
+            for key in self.playout.squeeze_keys:
+                cl[key] = cl[key][0]
             age_l = [age[l] for l in range(L)]
 
             # Differentiate the LOCAL loss numerator only: the psum-normalized
@@ -1000,20 +618,22 @@ class DistGNNEngine:
         k, nb, Vp = self.k, self.nb, self.Vp
         ids_g = jnp.asarray(self.ids_global.astype(np.int32))
         mask, deg = self.mask, self.deg
-        if c.partition_family == "vertex_cut":
-            vert_ids_ref = jnp.asarray(
-                self.layout.vert_ids.astype(np.int32))  # [k, nv], pad = V
+        # replica families expose their [k, n] slot->global-vertex table; a
+        # non-None table switches the combine to the scatter-based reference
+        ref_vids = self.playout.ref_vert_ids
+        if ref_vids is not None:
+            vert_ids_ref = jnp.asarray(ref_vids.astype(np.int32))  # pad = V
             Vg = self.g.num_vertices
 
         def gat_layer_ref(p_l, H, last):
             """The GAT layer on one device: identical formulas to the
             distributed path, with the replica combines replaced by their
-            scatter-based references for vertex_cut."""
+            scatter-based references for replica families."""
             Hw = H @ p_l["w"]
             table = jnp.concatenate([Hw, jnp.zeros((1, Hw.shape[1]),
                                                    Hw.dtype)], 0)
             e = self._sddmm(ids_g, mask, table, p_l["a_src"], p_l["a_dst"])
-            if c.partition_family == "vertex_cut":
+            if ref_vids is not None:
                 m_loc = jnp.maximum(jnp.max(e, axis=1, keepdims=True), 0.0)
                 M = jax.lax.stop_gradient(reference_combine_max(
                     m_loc.reshape(k, nb, 1), vert_ids_ref, Vg
@@ -1038,7 +658,7 @@ class DistGNNEngine:
                 [H, jnp.zeros((1, H.shape[1]), H.dtype)], 0)
             gathered = (mask[..., None]
                         * jnp.take(table, ids_g, axis=0)).sum(1)
-            if c.partition_family == "vertex_cut":
+            if ref_vids is not None:
                 gathered = reference_combine(
                     gathered.reshape(k, nb, -1), vert_ids_ref, Vg
                 ).reshape(Vp, -1)
@@ -1057,9 +677,9 @@ class DistGNNEngine:
         L = len(self.dims) - 1
         layer_ref = self._make_reference_layer()
         X, y, w, bmask = self.X, self.y, self.train_w, self.bmask
-        if c.partition_family == "vertex_cut":
-            vert_ids_ref = jnp.asarray(
-                self.layout.vert_ids.astype(np.int32))  # [k, nv], pad = V
+        ref_vids = self.playout.ref_vert_ids
+        if ref_vids is not None:
+            vert_ids_ref = jnp.asarray(ref_vids.astype(np.int32))  # pad = V
             Vg = self.g.num_vertices
 
         def forward(params, hist, age, step_i, X_in=None):
@@ -1120,12 +740,12 @@ class DistGNNEngine:
                           hist=new_hist, age=new_age)
             if c.trainable_features:
                 emb = state["embed"]
-                if c.partition_family == "vertex_cut":
+                if self.playout.has_replicas:
                     g_X = ref_combine_rows(g_X)
                 emb2, m2, v2, t2 = row_adamw_update(
                     emb, g_X, state["emb_m"], state["emb_v"],
                     state["emb_t"], touched_ref, **self._embed_hparams())
-                if c.partition_family == "vertex_cut":
+                if self.playout.has_replicas:
                     delta = (emb2 - emb) * touched_ref[:, None]
                     emb2 = emb + ref_combine_rows(delta)
                 state2.update(embed=emb2, emb_m=m2, emb_v=v2, emb_t=t2)
@@ -1142,9 +762,9 @@ class DistGNNEngine:
         """The jitted layer-wise full-graph inference sweep: compute layer l
         for ALL vertices before layer l+1 — the production answer to neighbor
         explosion (embeddings for every vertex in O(L) exchange sweeps, no
-        fanout blow-up).  Reuses the training exchange per layer
-        (`_exchange_and_aggregate` under `_model_layer_local`: chunked
-        double-buffered broadcast/p2p, ring scan, vertex-cut replica sync);
+        fanout blow-up).  Reuses the training exchange per layer (the
+        family's ExchangeBackend under `_model_layer_local`: chunked
+        double-buffered broadcast/p2p, ring scan, replica sync);
         layer-0 rows arrive as an ARGUMENT so the sweep reads the live
         FeatureStore (or a trainable state's embed table) without retracing.
 
@@ -1157,32 +777,16 @@ class DistGNNEngine:
         c = self.cfg
         L = len(self.dims) - 1
 
-        consts = dict(deg=self.deg, ids=self.ids_exec, mask=self.mask)
-        shard = dict(deg=P(ax, None), ids=P(ax, None), mask=P(ax, None))
-        if c.partition_family == "vertex_cut":
-            for key, a in self._vc_plan.items():
-                consts[key] = a
-                shard[key] = P(*((ax,) + (None,) * (a.ndim - 1)))
-        elif c.execution == "ring":
-            consts["mask"] = self.mask_exec
-            shard["ids"] = P(ax, None, None, None)
-            shard["mask"] = P(ax, None, None, None)
-        elif c.execution == "p2p":
-            consts["send_rows"] = self.send_rows
-            shard["send_rows"] = P(ax, None, None, None)
+        consts = dict(deg=self.deg)
+        consts.update(self.playout.exchange_consts())
+        shard = {key: P(*((ax,) + (None,) * (jnp.ndim(a) - 1)))
+                 for key, a in consts.items()}
 
         def local_infer(params, X_local, consts_local):
-            # squeeze the device axis off ring/p2p plans (as in local_step)
+            # squeeze the device axis off per-device plans (as in local_step)
             cl = dict(consts_local)
-            if c.partition_family == "vertex_cut":
-                for key in ("send1", "send2", "ring_ids"):
-                    if key in cl:
-                        cl[key] = cl[key][0]
-            elif c.execution == "ring":
-                cl["ids"] = cl["ids"][0]
-                cl["mask"] = cl["mask"][0]
-            elif c.execution == "p2p":
-                cl["send_rows"] = cl["send_rows"][0]
+            for key in self.playout.squeeze_keys:
+                cl[key] = cl[key][0]
             H = X_local
             for l, p_l in enumerate(params["layers"]):
                 H = self._model_layer_local(p_l, H, cl, last=(l == L - 1))
@@ -1255,31 +859,17 @@ class DistGNNEngine:
     def inference_bytes_per_sweep(self) -> int:
         """Wire bytes of one layer-wise sweep — the engine-side mirror of
         `cost_models.inference_bytes_per_sweep` (forward-only: one exchange
-        per layer at that layer's model-dependent width, nothing back)."""
-        c = self.cfg
-        if c.partition_family == "vertex_cut":
-            return self._vc_bytes_per_step
-        if c.execution in ("broadcast", "ring"):
-            rows = self.k * (self.k - 1) * self.nb
-        else:  # p2p: each partition's remote in-neighbor set, once per layer
-            rows = self._halo_rows
-        widths = model_exchange_widths(c.model, self.dims, "edge_cut")
-        return rows * int(sum(widths)) * FEAT_BYTES
+        per layer at that layer's model-dependent width, nothing back).
+        Exactly the layout's per-step wire fields summed: a sweep runs the
+        same L exchange passes a training forward runs."""
+        return int(sum(self._wire_fields.values()))
 
     def global_embeddings(self, H) -> np.ndarray:
         """Map owner-partitioned padded embeddings [Vp, D] back to the
-        ORIGINAL vertex ids, [V, D]: edge_cut inverts the contiguous
-        relabel; vertex_cut reads each vertex's master replica row."""
-        H = np.asarray(H)
-        V = self.g.num_vertices
-        if self.cfg.partition_family == "vertex_cut":
-            lay = self.layout
-            out = np.zeros((V, H.shape[1]), H.dtype)
-            flat_vid = np.asarray(lay.vert_ids).reshape(-1)  # pad slots -> V
-            mm = np.asarray(lay.master_mask).reshape(-1) > 0.5
-            out[flat_vid[mm]] = H[mm]
-            return out
-        return H[self.new_of_old]
+        ORIGINAL vertex ids, [V, D] (layout-specific: edge_cut inverts the
+        contiguous relabel; replica families read each vertex's master
+        replica row)."""
+        return self.playout.global_embeddings(np.asarray(H))
 
     def publish_embeddings(self, state) -> None:
         """Serving handoff for trainable features: write the trained layer-0
@@ -1404,29 +994,7 @@ class DistGNNEngine:
         self.store.telemetry = tel
         if not tel.enabled:
             return tel
-        k = self.k
-        if self.cfg.partition_family == "vertex_cut":
-            lay = self.layout
-            V = self.g.num_vertices
-            owned_edges = np.asarray(lay.mask_owned).reshape(k, -1).sum(1)
-            replica_rows = (np.asarray(lay.vert_ids) < V).sum(1)
-            masters = np.asarray(lay.master_mask).reshape(k, -1).sum(1)
-            for d in range(k):
-                tel.gauge("layout.owned_edges", device=d).set(
-                    float(owned_edges[d]))
-                tel.gauge("layout.replica_rows", device=d).set(
-                    int(replica_rows[d]))
-                tel.gauge("layout.master_rows", device=d).set(
-                    float(masters[d]))
-        else:
-            owned_v = np.bincount(self.part.assignment, minlength=k)
-            owned_edges = np.asarray(self.mask).reshape(
-                k, self.nb, -1).sum((1, 2))
-            for d in range(k):
-                tel.gauge("layout.owned_vertices", device=d).set(
-                    int(owned_v[d]))
-                tel.gauge("layout.owned_edges", device=d).set(
-                    float(owned_edges[d]))
+        self.playout.telemetry_gauges(tel)
         return tel
 
     @contextlib.contextmanager
@@ -1569,8 +1137,8 @@ class DistGNNEngine:
         zero row), so the sum is exact.  ``cache_rows`` is the [Ccap, D]
         overlay table (the static snapshot, or the live-refreshed rows under
         trainable_features), or None when no cache is configured.  The
-        broadcast/p2p exchanges are feature-chunked like
-        `_exchange_and_aggregate` when ``exchange_chunks`` > 1 (the frontier
+        broadcast/p2p exchanges are feature-chunked like the full-graph
+        backend aggregate when ``exchange_chunks`` > 1 (the frontier
         gather consumes chunk c while chunk c+1's collective flies)."""
         ax, k, nb = self.axis, self.k, self.nb
         C = self.cfg.exchange_chunks
@@ -1983,7 +1551,7 @@ class DistGNNEngine:
             return losses, logits
         step = self.make_reference_step() if reference else self.make_step()
         state = self.init_state()
-        if not reference and (self.cfg.partition_family == "vertex_cut"
+        if not reference and (self._wire_fields
                               or self.cfg.trainable_features):
             self.comm_stats.reset()
         losses = []
@@ -1994,9 +1562,9 @@ class DistGNNEngine:
                 losses.append(float(metrics["loss"]))
             if not reference:
                 with self._account_exchange("full_graph", i, None):
-                    if self.cfg.partition_family == "vertex_cut":
-                        self.comm_stats.replica_sync_bytes += \
-                            self._vc_bytes_per_step
+                    for name, b in self._wire_fields.items():
+                        setattr(self.comm_stats, name,
+                                getattr(self.comm_stats, name) + b)
                     if self.cfg.trainable_features:
                         self.comm_stats.embed_grad_bytes += \
                             self._emb_bytes_per_step

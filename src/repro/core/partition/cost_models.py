@@ -246,6 +246,85 @@ def replica_sync_device_bytes(layout, masters: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Hybrid (PowerLyra-style degree-threshold) family (§4.2): low-degree
+# vertices live edge-cut-local behind a halo exchange; hub vertices
+# replicate with the vertex-cut replica-sync GAS combine.  One step pays
+# BOTH wires, each over its own row population.
+# ---------------------------------------------------------------------------
+
+
+def hybrid_exchange_widths(model: str, dims: Sequence[int]) -> tuple:
+    """(halo_widths, sync_widths) — per-layer floats-per-row for the two
+    wire populations of the hybrid family.
+
+    Halo rows ship complete source rows to the consuming owner, which then
+    computes locally: gcn/sage/gin ship the layer INPUT (width dims[l]);
+    gat ships the transformed Hw only (width dims[l+1]) — the SDDMM
+    derives both logit halves locally from the full row, so no α column
+    crosses the halo wire.  Sync rows are vertex-cut GAS partials and pay
+    exactly the vertex_cut widths (gat: +2 for the α and max columns)."""
+    L = len(dims) - 1
+    if model == "gat":
+        return ([int(dims[l + 1]) for l in range(L)],
+                [int(dims[l + 1]) + 2 for l in range(L)])
+    w = [int(d) for d in dims[:-1]]
+    return (list(w), list(w))
+
+
+def hybrid_bytes_per_step(halo_rows: int, sync_rows: int,
+                          dims: Sequence[int], model: str = "gcn",
+                          feat_bytes: int = FEAT_BYTES) -> int:
+    """Wire bytes of one hybrid-family train step: ``halo_rows`` rows cross
+    per halo exchange pass and ``sync_rows`` rows per replica-sync combine
+    (each once per layer, at that wire's model-dependent width).  Either
+    population may be 0 — threshold=inf degenerates to a pure edge-cut
+    (sync_rows=0), threshold=0 to a pure src-replicating vertex-cut
+    (halo_rows=0).  Cross-checked EXACTLY against engine CommStats by the
+    hybrid engine tier."""
+    halo_w, sync_w = hybrid_exchange_widths(model, dims)
+    return (int(halo_rows) * int(sum(halo_w))
+            + int(sync_rows) * int(sum(sync_w))) * feat_bytes
+
+
+def hybrid_device_bytes(layout, masters: np.ndarray, need,
+                        execution: str, dims: Sequence[int], *,
+                        model: str = "gcn",
+                        feat_bytes: int = FEAT_BYTES,
+                        halo_active: bool = True,
+                        sync_active: bool = True) -> np.ndarray:
+    """[k] per-device hybrid bytes per step, both directions (mirrors
+    `edge_cut_halo_device_bytes` + `replica_sync_device_bytes`); the max is
+    the critical-path volume.  ``layout`` is the hybrid family's inner
+    replica layout (a VertexCutLayout over the presence sets), ``need`` the
+    [k][k] halo need lists (need[d][s] = home slots owner d fetches from
+    master s).  Under p2p both terms are population-bounded; broadcast/ring
+    pay the full (k-1)*nv block per active wire."""
+    k, nv = layout.k, layout.nv
+    halo_w, sync_w = hybrid_exchange_widths(model, dims)
+    hw, sw = int(sum(halo_w)), int(sum(sync_w))
+    out = np.zeros(k, np.int64)
+    if halo_active:
+        if execution == "p2p":
+            send = np.zeros(k, np.int64)
+            recv = np.zeros(k, np.int64)
+            for d in range(k):
+                for s in range(k):
+                    n = len(need[d][s])
+                    recv[d] += n
+                    send[s] += n
+            out += (send + recv) * hw * feat_bytes
+        else:
+            out += 2 * (k - 1) * nv * hw * feat_bytes
+    if sync_active:
+        if execution == "p2p":
+            out += replica_sync_device_bytes(layout, masters, dims,
+                                             feat_bytes, model)
+        else:
+            out += 2 * (k - 1) * nv * sw * feat_bytes
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Communication/compute overlap (§6-§7 pipelining)
 # ---------------------------------------------------------------------------
 

@@ -14,8 +14,12 @@ Key invariants (relied on by ``execution/replica_sync.py`` and the engine):
     master owns none of its edges) — so the loss over master slots covers
     every train vertex exactly once, and the p2p scatter phase always has a
     combining site;
-  * slots are sorted by global vertex id per device — layout is a pure
-    function of (graph, cut), so reruns are bitwise deterministic;
+  * slots are sorted by global vertex id per device (with
+    ``sorted_masters=True``, master slots come first as a contiguous prefix,
+    each group still ascending — master-masked ops can then SLICE
+    ``[:master_counts[d]]`` instead of scanning a boolean mask) — layout is
+    a pure function of (graph, cut, sorted_masters), so reruns are bitwise
+    deterministic;
   * pad slots (``vert_ids == V``) have no owned edges, zero features and
     zero weights, and are never referenced by any gather table.
 """
@@ -47,13 +51,16 @@ class VertexCutLayout:
     y: np.ndarray           # [k, nv] int32
     train_w: np.ndarray     # [k, nv] f32 — master & train only
     test_w: np.ndarray      # [k, nv] f32 — master & test only
+    sorted_masters: bool = False  # masters are the per-device slot prefix?
+    master_counts: np.ndarray = None  # [k] masters per device (always set)
 
     def replication_factor(self) -> float:
         appears = self.rep_count
         return float(appears[appears > 0].mean()) if (appears > 0).any() else 0.0
 
 
-def build_vertex_layout(g: Graph, vc: VertexCut, k: int) -> VertexCutLayout:
+def build_vertex_layout(g: Graph, vc: VertexCut, k: int,
+                        sorted_masters: bool = False) -> VertexCutLayout:
     """Turn a VertexCut into the static padded device layout above."""
     V = g.num_vertices
     src, dst = edge_endpoints(g)
@@ -69,8 +76,15 @@ def build_vertex_layout(g: Graph, vc: VertexCut, k: int) -> VertexCutLayout:
     nv = max(int(sizes.max()), 1)
     vert_ids = np.full((k, nv), V, np.int64)
     slot_of = np.full((k, V), -1, np.int64)
+    master_counts = np.zeros(k, np.int64)
     for d in range(k):
         vs = vid[part_of == d]  # sorted ascending (keys are sorted)
+        is_m = masters[vs] == d
+        master_counts[d] = int(is_m.sum())
+        if sorted_masters:
+            # masters first (each group keeps its ascending-vid order) so
+            # master reads are the contiguous prefix [:master_counts[d]]
+            vs = np.concatenate([vs[is_m], vs[~is_m]])
         vert_ids[d, : len(vs)] = vs
         slot_of[d, vs] = np.arange(len(vs))
     # owned-edge ELL: row = dst slot, col = src slot, both on the owner device
@@ -112,4 +126,5 @@ def build_vertex_layout(g: Graph, vc: VertexCut, k: int) -> VertexCutLayout:
         k=k, nv=nv, Kc=Kc, Rm=max(int(rep_count.max()), 1),
         vert_ids=vert_ids, slot_of=slot_of, master_mask=master_mask,
         rep_count=rep_count, ids_owned=ids_owned, mask_owned=mask_owned,
-        deg=deg, bmask=bmask, X=X, y=y, train_w=train_w, test_w=test_w)
+        deg=deg, bmask=bmask, X=X, y=y, train_w=train_w, test_w=test_w,
+        sorted_masters=sorted_masters, master_counts=master_counts)

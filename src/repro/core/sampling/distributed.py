@@ -27,6 +27,9 @@ class CommStats:
     push_bytes: int = 0  # sampling requests + results (CSP)
     cache_hit_bytes: int = 0  # feature bytes served by a local cache instead
     replica_sync_bytes: int = 0  # vertex-cut partial/aggregate rows exchanged
+    halo_bytes: int = 0  # edge-cut/hybrid full-graph halo exchange: neighbor
+    #   rows shipped to remote consumers each layer (the layout's
+    #   wire_fields_per_step accounting)
     embed_grad_bytes: int = 0  # trainable embeddings: layer-0 gradient rows
     #   routed back to their owners (+ the live cache-overlay refresh)
     inference_bytes: int = 0  # layer-wise full-graph inference sweeps: one
@@ -44,7 +47,8 @@ class CommStats:
     def total(self) -> int:
         """Bytes that actually cross the wire (cache hits excluded)."""
         return (self.pull_bytes + self.push_bytes + self.replica_sync_bytes
-                + self.embed_grad_bytes + self.inference_bytes)
+                + self.halo_bytes + self.embed_grad_bytes
+                + self.inference_bytes)
 
     def requested(self) -> int:
         """Bytes the computation asked for, whether cached or fetched."""

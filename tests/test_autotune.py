@@ -1,0 +1,169 @@
+"""Autotuner tier (partition/autotune.py): the planner must score every
+candidate with the SAME exact cost models the engine accounts with, pick the
+argmin (so it can never choose a plan >=1.5x worse in predicted
+critical-path bytes than the best candidate), and hold its choice to account
+against a traced dryrun — measured comm.* counter totals within the drift
+bound of the prediction (exactly 1.0 for an honest plan, because the oracle
+tiers lock the engine accounting to the layouts' cost models), measured
+layout-imbalance gauges matching the balance claim, and `PlanRejected` for
+plans whose claims drift.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+
+def _dims(g, hidden=16):
+    return [g.features.shape[1], hidden, int(g.labels.max()) + 1]
+
+
+def test_enumerate_covers_all_families_and_executions():
+    from repro.core.graph import powerlaw_graph
+    from repro.core.partition.autotune import enumerate_plans
+
+    g = powerlaw_graph(80, avg_degree=6, seed=0)
+    plans = enumerate_plans(g, 4, _dims(g), "gcn")
+    fams = {p.family for p in plans}
+    execs = {p.execution for p in plans}
+    assert fams == {"edge_cut", "vertex_cut", "hybrid"}
+    assert execs == {"broadcast", "ring", "p2p"}
+    # hybrid candidates sweep the degree-percentile thresholds + inf
+    thrs = {p.hub_threshold for p in plans if p.family == "hybrid"}
+    assert float("inf") in thrs and len(thrs) >= 2
+    # vertex-cut candidates opt into the sorted-master layout
+    assert all(p.sorted_masters for p in plans if p.family == "vertex_cut")
+    for p in plans:
+        assert p.predicted_step_bytes > 0
+        assert p.predicted_bottleneck_bytes > 0
+        assert p.balance_claim  # at least one layout gauge claimed
+
+
+def test_choose_plan_is_argmin_never_150pct_worse():
+    """The acceptance contract: the chosen plan's predicted critical-path
+    bytes can never be >= 1.5x the best candidate's — structurally true
+    (argmin), asserted over several graphs and both objectives."""
+    from repro.core.graph import powerlaw_graph, sbm_graph
+    from repro.core.partition.autotune import choose_plan, enumerate_plans
+
+    graphs = [powerlaw_graph(100, avg_degree=8, seed=1),
+              sbm_graph(96, num_blocks=8, p_in=0.08, p_out=0.01, seed=0)]
+    for g in graphs:
+        plans = enumerate_plans(g, 4, _dims(g), "gcn")
+        best = choose_plan(plans, objective="bottleneck")
+        floor = min(p.predicted_bottleneck_bytes for p in plans)
+        assert best.predicted_bottleneck_bytes == floor
+        assert best.predicted_bottleneck_bytes < 1.5 * max(floor, 1)
+        best_t = choose_plan(plans, objective="total")
+        assert best_t.predicted_step_bytes == min(
+            p.predicted_step_bytes for p in plans)
+    with pytest.raises(ValueError):
+        choose_plan(plans, objective="nope")
+    with pytest.raises(ValueError):
+        choose_plan([])
+
+
+def test_choose_plan_deterministic():
+    from repro.core.graph import powerlaw_graph
+    from repro.core.partition.autotune import choose_plan, enumerate_plans
+
+    g = powerlaw_graph(90, avg_degree=7, seed=3)
+    a = choose_plan(enumerate_plans(g, 4, _dims(g), "gat"))
+    b = choose_plan(enumerate_plans(g, 4, _dims(g), "gat"))
+    assert a == b
+
+
+def test_validate_plan_measured_matches_predicted_4dev():
+    """The traced dryrun's comm.* counters must equal steps * prediction
+    EXACTLY (ratio 1.0) for honest plans of every family, and the measured
+    layout gauges must reproduce the balance claim."""
+    out = run_with_devices("""
+        from repro.core.graph import powerlaw_graph
+        from repro.core.partition.autotune import (
+            choose_plan, enumerate_plans, validate_plan)
+
+        g = powerlaw_graph(100, avg_degree=8, seed=1)
+        dims = [g.features.shape[1], 16, int(g.labels.max()) + 1]
+        plans = enumerate_plans(g, 4, dims, "gcn")
+        for fam in ("edge_cut", "vertex_cut", "hybrid"):
+            plan = choose_plan([p for p in plans if p.family == fam])
+            rep = validate_plan(g, plan, steps=2)
+            assert rep["ratio"] == 1.0, (fam, rep)
+            for name, b in rep["balance"].items():
+                assert abs(b["measured"] - b["claimed"]) < 1e-9, (fam, name,
+                                                                  b)
+        print("AT_VALIDATE_OK")
+    """, n_devices=4, timeout=600)
+    assert "AT_VALIDATE_OK" in out
+
+
+def test_validate_plan_rejects_drifting_claims_4dev():
+    out = run_with_devices("""
+        import dataclasses
+        from repro.core.graph import powerlaw_graph
+        from repro.core.partition.autotune import (
+            PlanRejected, choose_plan, enumerate_plans, validate_plan)
+
+        g = powerlaw_graph(100, avg_degree=8, seed=1)
+        dims = [g.features.shape[1], 16, int(g.labels.max()) + 1]
+        best = choose_plan(enumerate_plans(g, 4, dims, "gcn"))
+        bad = dataclasses.replace(
+            best, predicted_step_bytes=best.predicted_step_bytes * 10)
+        try:
+            validate_plan(g, bad, steps=2)
+            raise AssertionError("byte drift not rejected")
+        except PlanRejected:
+            pass
+        bad2 = dataclasses.replace(best, balance_claim={
+            k: v * 10 for k, v in best.balance_claim.items()})
+        try:
+            validate_plan(g, bad2, steps=2)
+            raise AssertionError("balance drift not rejected")
+        except PlanRejected:
+            pass
+        # a plan scored for a different chip count cannot be validated here
+        wrong_k = dataclasses.replace(best, k=64)
+        try:
+            validate_plan(g, wrong_k, steps=2)
+            raise AssertionError("k mismatch not rejected")
+        except PlanRejected:
+            pass
+        print("AT_REJECT_OK")
+    """, n_devices=4, timeout=600)
+    assert "AT_REJECT_OK" in out
+
+
+def test_autotune_end_to_end_4dev():
+    """enumerate -> choose -> validate in one call; the report carries the
+    graph stats and every scored candidate."""
+    out = run_with_devices("""
+        from repro.core.graph import sbm_graph
+        from repro.core.partition.autotune import autotune
+
+        g = sbm_graph(96, num_blocks=8, p_in=0.08, p_out=0.01, seed=0)
+        dims = [g.features.shape[1], 16, int(g.labels.max()) + 1]
+        plan, report = autotune(g, 4, dims, "gcn")
+        assert report["chosen"] == plan.label()
+        assert report["validation"]["ratio"] == 1.0
+        assert len(report["candidates"]) >= 12
+        assert report["graph"]["num_vertices"] == 96
+        eng_cfg = plan.engine_config()
+        assert eng_cfg.partition_family == plan.family
+        print("AT_E2E_OK", plan.label())
+    """, n_devices=4, timeout=600)
+    assert "AT_E2E_OK" in out
+
+
+def test_graph_stats_degree_profile():
+    from repro.core.graph import powerlaw_graph
+    from repro.core.partition.autotune import graph_stats
+
+    g = powerlaw_graph(80, avg_degree=6, seed=0)
+    s = graph_stats(g)
+    deg = g.degree().astype(np.float64)
+    assert s["num_vertices"] == 80
+    assert s["p95"] == float(np.percentile(deg, 95))
+    assert s["max_degree"] == float(deg.max())
+    assert s["p90"] <= s["p95"] <= s["p99"] <= s["max_degree"]

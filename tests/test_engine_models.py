@@ -276,3 +276,39 @@ def test_model_single_device_paths_agree():
         lr_, _ = eng.train(8, reference=True)
         assert max(abs(a - b) for a, b in zip(ld, lr_)) < 1e-4, model
         assert ld[-1] < ld[0], (model, ld)
+
+
+def test_gat_fused_s_column_chunk_invariance_4dev():
+    """The edge-cut GAT attention-coefficient column rides CHUNK 0 of the
+    chunked exchange (fused with the first Hw columns) instead of a separate
+    width-1 pre-pass — so the forward pass must be BITWISE identical for any
+    ``exchange_chunks`` (per-column math never changes with the chunking),
+    and training must stay on the oracle contract."""
+    out = run_with_devices("""
+        import numpy as np
+        from repro.core.engine import DistGNNEngine, EngineConfig
+        from repro.core.graph import sbm_graph
+
+        g = sbm_graph(60, num_blocks=4, p_in=0.1, p_out=0.02, seed=0)
+        for exe in ("broadcast", "p2p"):
+            base_fwd = base_loss1 = None
+            for C in (1, 2, 3):
+                cfg = EngineConfig(model="gat", execution=exe,
+                                   exchange_chunks=C, hidden=12, lr=0.3)
+                eng = DistGNNEngine(g, cfg=cfg)
+                fwd = np.asarray(eng.infer_full_graph(
+                    eng.init_state())).tobytes()
+                losses, _ = eng.train(3)
+                lr_, _ = eng.train(3, reference=True)
+                err = max(abs(a - b) for a, b in zip(losses, lr_))
+                assert err <= 1e-4, (exe, C, err)
+                if base_fwd is None:
+                    base_fwd, base_loss1 = fwd, losses[0]
+                else:
+                    # forward sweep: bitwise equal across chunk counts
+                    assert fwd == base_fwd, (exe, C)
+                    # first loss is forward-only -> bitwise equal too
+                    assert losses[0] == base_loss1, (exe, C)
+        print("GAT_FUSE_OK")
+    """, n_devices=4, timeout=600)
+    assert "GAT_FUSE_OK" in out

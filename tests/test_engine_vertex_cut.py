@@ -194,3 +194,41 @@ def test_vertex_cut_single_device_paths_agree():
     lr_, _ = eng.train(8, reference=True)
     assert max(abs(a - b) for a, b in zip(ld, lr_)) < 1e-4
     assert ld[-1] < ld[0]
+
+
+def test_sorted_masters_layout_equivalent_4dev():
+    """``sorted_masters=True`` reorders each device's replica slots
+    master-first (the contiguous-prefix layout the autotuner weighs) — a
+    pure relabeling: training must still match the oracle, and the
+    de-layouted global embeddings must equal the default layout's (the
+    prefix-slice read path agrees with the boolean-mask read path)."""
+    out = run_with_devices("""
+        import numpy as np
+        from repro.core.engine import DistGNNEngine, EngineConfig
+        from repro.core.graph import powerlaw_graph
+
+        g = powerlaw_graph(100, avg_degree=8, seed=2)
+        embs = {}
+        for sm in (False, True):
+            cfg = EngineConfig(partition_family="vertex_cut",
+                               vertex_cut="libra", execution="p2p",
+                               sorted_masters=sm, hidden=16, lr=0.3)
+            eng = DistGNNEngine(g, cfg=cfg)
+            ld, _ = eng.train(4)
+            lr_, _ = eng.train(4, reference=True)
+            err = max(abs(a - b) for a, b in zip(ld, lr_))
+            assert err <= 1e-4, (sm, err)
+            lay = eng.playout.layout
+            if sm:
+                # masters ARE the per-device slot prefix
+                for d in range(eng.k):
+                    n = int(lay.master_counts[d])
+                    mm = lay.master_mask[d] > 0.5
+                    assert mm[:n].all() and not mm[n:].any(), d
+            state = eng.init_state()
+            embs[sm] = eng.global_embeddings(
+                eng.infer_full_graph(state))
+        np.testing.assert_array_equal(embs[False], embs[True])
+        print("VC_SORTED_OK")
+    """, n_devices=4, timeout=600)
+    assert "VC_SORTED_OK" in out

@@ -1,0 +1,141 @@
+"""Hypothesis property tests on the PowerLyra-style hybrid degree-threshold
+cut (partition/hybrid_cut.py) — the invariants the engine's hybrid layout
+relies on: every vertex in exactly ONE class (hub xor low-degree), the hub
+set exactly == {v : degree(v) >= threshold}, the degenerate thresholds
+(threshold=inf -> pure edge-cut dataflow with no replicas; threshold=0 ->
+pure src-replicating vertex-cut with no halo), layout well-formedness (every
+vertex present on its master, every owned edge resolvable to local slots,
+low-degree vertices never replicated), and bitwise determinism in seed.
+
+Requires the optional ``hypothesis`` dependency (the ``property`` test
+extra); without it the module degrades to a skip instead of a collection
+error — same gating as test_vertex_cut_property.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.graph import er_graph, powerlaw_graph
+from repro.core.partition.hybrid_cut import (
+    HybridLayout,
+    auto_hub_threshold,
+    build_hybrid_cut,
+)
+from repro.core.partition.vertex_cut import edge_endpoints
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _layout(g, k, threshold, seed=0, execution="p2p"):
+    from repro.core.engine import EngineConfig
+    cfg = EngineConfig(partition_family="hybrid", hub_threshold=threshold,
+                       execution=execution, seed=seed)
+    return HybridLayout(g, k, cfg)
+
+
+@given(st.integers(20, 100), st.integers(2, 8), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_vertex_classes_partition_the_graph(n, k, seed):
+    """Hub xor low-degree: the two classes cover every vertex exactly once,
+    and the hub set is EXACTLY the degree-threshold upcrossing."""
+    g = powerlaw_graph(n, avg_degree=6, seed=seed % 17)
+    thr = auto_hub_threshold(g)
+    cut = build_hybrid_cut(g, k, threshold=thr)
+    deg = g.degree().astype(np.float64)
+    assert cut.hub.shape == (g.num_vertices,)
+    np.testing.assert_array_equal(cut.hub, deg >= thr)
+    # one class per vertex is structural for a boolean mask; the owner rule
+    # must route every edge to a real partition
+    assert len(cut.edge_owner) == len(g.indices)
+    assert ((cut.edge_owner >= 0) & (cut.edge_owner < k)).all()
+    src, dst = edge_endpoints(g)
+    want = np.where(cut.hub[dst], cut.masters[src], cut.masters[dst])
+    np.testing.assert_array_equal(cut.edge_owner, want)
+
+
+@given(st.integers(20, 90), st.integers(2, 6), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_threshold_inf_is_pure_edge_cut(n, k, seed):
+    """threshold=inf: no hubs, every edge owned by its DESTINATION's master,
+    no vertex replicated (rep_count == 1 everywhere), and the layout runs
+    halo-only (sync inactive)."""
+    g = er_graph(n, avg_degree=5, seed=seed % 13)
+    cut = build_hybrid_cut(g, k, threshold=np.inf)
+    assert not cut.hub.any()
+    src, dst = edge_endpoints(g)
+    np.testing.assert_array_equal(cut.edge_owner, cut.masters[dst])
+    lay = _layout(g, k, np.inf, seed=seed % 7)
+    assert (lay.layout.rep_count == 1).all()
+    assert not lay.sync_active and not lay.has_replicas
+
+
+@given(st.integers(20, 90), st.integers(2, 6), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_threshold_zero_is_pure_vertex_cut(n, k, seed):
+    """threshold=0: every vertex is a hub, every edge owned by its SOURCE's
+    master (src-replicating vertex cut), and no halo exchange remains."""
+    g = er_graph(n, avg_degree=5, seed=seed % 13)
+    cut = build_hybrid_cut(g, k, threshold=0.0)
+    assert cut.hub.all()
+    src, dst = edge_endpoints(g)
+    np.testing.assert_array_equal(cut.edge_owner, cut.masters[src])
+    lay = _layout(g, k, 0.0, seed=seed % 7)
+    assert not lay.halo_active and lay.halo_rows == 0
+
+
+@given(st.integers(20, 80), st.integers(2, 6), st.integers(0, 10_000),
+       st.sampled_from(["auto", "p90", "zero", "inf"]))
+@settings(**SETTINGS)
+def test_hybrid_layout_well_formed(n, k, seed, which):
+    """Layout invariants for arbitrary thresholds: every vertex present on
+    its master exactly once across its replicas' master flags, every slot's
+    global id valid, every owned edge resolvable (mask rows sum to the
+    owned in-degree), and LOW-DEGREE vertices never replicated."""
+    g = powerlaw_graph(n, avg_degree=5, seed=seed % 11)
+    deg = g.degree().astype(np.float64)
+    thr = {"auto": None, "p90": float(np.percentile(deg, 90)),
+           "zero": 0.0, "inf": np.inf}[which]
+    lay = _layout(g, k, thr, seed=seed % 5)
+    inner, cut = lay.layout, lay.cut
+    V = g.num_vertices
+    # every vertex on its master, and master flagged exactly once
+    master_count = np.zeros(V, np.int64)
+    for d in range(k):
+        vids = inner.vert_ids[d]
+        real = vids < V
+        assert len(np.unique(vids[real])) == real.sum()  # no dup slots
+        flagged = inner.master_mask[d] > 0.5
+        assert (cut.masters[vids[flagged]] == d).all()
+        np.add.at(master_count, vids[flagged], 1)
+    np.testing.assert_array_equal(master_count, np.ones(V, np.int64))
+    # owned-edge mass conservation: each device's ELL mask rows sum to the
+    # number of edges the cut assigned it
+    owned = np.bincount(cut.edge_owner, minlength=k)
+    got = inner.mask_owned.reshape(k, -1).sum(1)
+    np.testing.assert_allclose(got, owned)
+    # low-degree vertices stay single-copy (the PowerLyra contract)
+    low = ~cut.hub
+    assert (inner.rep_count[low] <= 1).all()
+
+
+@given(st.integers(20, 80), st.integers(2, 6), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_hybrid_deterministic_in_seed(n, k, seed):
+    """Same (graph, k, threshold, seed) -> bitwise-identical cut and layout;
+    the engine's determinism contract starts here."""
+    g = powerlaw_graph(n, avg_degree=5, seed=seed % 11)
+    a = build_hybrid_cut(g, k)
+    b = build_hybrid_cut(g, k)
+    assert a.threshold == b.threshold
+    np.testing.assert_array_equal(a.hub, b.hub)
+    np.testing.assert_array_equal(a.masters, b.masters)
+    np.testing.assert_array_equal(a.edge_owner, b.edge_owner)
+    la, lb = _layout(g, k, None, seed=3), _layout(g, k, None, seed=3)
+    np.testing.assert_array_equal(la.layout.vert_ids, lb.layout.vert_ids)
+    np.testing.assert_array_equal(la.layout.ids_owned, lb.layout.ids_owned)
+    np.testing.assert_array_equal(np.asarray(la.ids_global),
+                                  np.asarray(lb.ids_global))
